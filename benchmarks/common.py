@@ -1,0 +1,169 @@
+"""Shared benchmark utilities.
+
+Memory numbers are HLO-derived (``compiled.memory_analysis()``: argument +
+temp bytes), the CPU-container analogue of the paper's nvidia-smi
+profiles: no allocation happens (abstract lowering), so even billion-
+parameter configs can be profiled here.  Accuracy/time numbers come from
+real (small) training runs on the synthetic tasks.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules
+from repro.core.addax import AddaxConfig
+from repro.models.registry import get_bundle
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def hlo_step_memory(arch: str, optimizer: str, batch: int, seq: int,
+                    l_t: int | None = None, k1: int | None = None,
+                    dtype=jnp.bfloat16) -> dict:
+    """Bytes of one train step from abstract lowering (no allocation).
+
+    For Addax, ``batch`` is K0 (ZO stream at ``seq``) and ``k1`` examples
+    feed the FO stream at ``l_t``.
+
+    The model runs with ``remat="none"`` here: the paper profiles memory
+    with gradient checkpointing explicitly OFF (Appendix D.7), and full
+    remat would mask exactly the FO activation growth Figs. 3/4 measure.
+    """
+    import dataclasses
+    from repro.models.registry import Bundle
+    bundle = get_bundle(arch)
+    if hasattr(bundle.mcfg, "remat"):
+        bundle = Bundle(dataclasses.replace(
+            bundle.arch,
+            model=dataclasses.replace(bundle.mcfg, remat="none")))
+    acfg = AddaxConfig(lr=1e-4, alpha=5e-4, eps=1e-3)
+    lr_fn = schedules.constant(1e-4)
+    loss_fn = bundle.loss_fn()
+    params = bundle.abstract_params(dtype)
+    idx = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    if optimizer == "addax":
+        from repro.core.addax import make_addax_step
+        step = make_addax_step(loss_fn, acfg, lr_fn)
+        b0 = bundle._batch_struct(batch, seq, dtype)
+        b1 = bundle._batch_struct(k1 or batch, l_t or seq // 2, dtype)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(
+            params, idx, b0, b1)
+    elif optimizer == "mezo":
+        from repro.core.mezo import make_mezo_step
+        step = make_mezo_step(loss_fn, acfg, lr_fn)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(
+            params, idx, bundle._batch_struct(batch, seq, dtype))
+    elif optimizer == "ipsgd":
+        from repro.core.sgd import make_ipsgd_step
+        step = make_ipsgd_step(loss_fn, acfg, lr_fn)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(
+            params, idx, bundle._batch_struct(batch, seq, dtype))
+    elif optimizer == "sgd":
+        from repro.core.sgd import make_sgd_step
+        step = make_sgd_step(loss_fn, acfg, lr_fn)
+        lowered = jax.jit(step, donate_argnums=(0,)).lower(
+            params, idx, bundle._batch_struct(batch, seq, dtype))
+    elif optimizer == "adam":
+        from repro.core.adam import init_adam_state, make_adam_step
+        step = make_adam_step(loss_fn, acfg, lr_fn)
+        state = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            params, {"m": state, "v": state}, idx,
+            bundle._batch_struct(batch, seq, dtype))
+    else:
+        raise ValueError(optimizer)
+
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    param_bytes = sum(
+        int(jnp.dtype(dtype).itemsize) * int(jnp.prod(jnp.array(s.shape)))
+        for s in jax.tree_util.tree_leaves(params))
+    return {
+        "optimizer": optimizer, "batch": batch, "seq": seq,
+        "param_bytes": param_bytes,
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "total_gb": round((ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes) / 2**30, 3),
+    }
+
+
+def train_run(arch: str, optimizer: str, steps: int, *, task="classify",
+              lr=1e-3, alpha=1e-3, k0=4, k1=4, l_t=None, seed=0,
+              n_examples=96) -> dict:
+    """A real (small) training run; returns loss curve + wall time."""
+    from repro.data.pipeline import AddaxPipeline, PipelineConfig
+    from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    bundle = get_bundle(arch, smoke=True)
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="rte", task=task, vocab=bundle.mcfg.vocab,
+        n_examples=n_examples, min_len=12, max_len=64, seed=seed))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=k0, k1=k1, l_t=l_t,
+                                                seed=seed))
+    acfg = AddaxConfig(lr=lr, alpha=alpha, eps=1e-3, k0=k0, k1=k1)
+    opt = build_optimizer(optimizer, bundle.loss_fn(), acfg,
+                          total_steps=steps)
+    params = bundle.init_params(jax.random.key(seed))
+    opt_state = opt.init_state(params) if opt.has_state else None
+    t0 = time.time()
+    out = run_training(opt, params, pipe,
+                       TrainLoopConfig(total_steps=steps, log_every=1),
+                       opt_state=opt_state)
+    wall = time.time() - t0
+    key = "loss_fo" if any("loss_fo" in h for h in out["history"]) \
+        else "loss_zo"
+    losses = [h[key] for h in out["history"] if key in h]
+    return {"optimizer": optimizer, "losses": losses, "wall_s": wall,
+            "steps": steps, "params": out["params"], "pipe": pipe,
+            "bundle": bundle}
+
+
+def eval_accuracy(bundle, params, pipe, n_batches=8, batch=8) -> float:
+    """Classification accuracy on fresh examples (label = last token)."""
+    from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="rte", task="classify", vocab=bundle.mcfg.vocab,
+        n_examples=n_batches * batch, min_len=12, max_len=64, seed=999))
+    correct = tot = 0
+    for b in pipe.eval_batches(corpus, batch):
+        logits_fn = lambda p, bb: _batch_logits(bundle, p, bb)
+        logits = logits_fn(params, b)
+        mask = b["mask"] > 0
+        import numpy as np
+        pred = np.asarray(jnp.argmax(logits, -1))
+        tgt = np.asarray(b["targets"])
+        m = np.asarray(mask)
+        correct += (pred[m] == tgt[m]).sum()
+        tot += m.sum()
+    return float(correct) / max(float(tot), 1.0)
+
+
+def _batch_logits(bundle, params, batch):
+    from repro.models import transformer
+    from repro.models.common import compute_logits
+    m = bundle.mcfg
+    h = transformer.embed_tokens(params, jnp.asarray(batch["tokens"]), m)
+    h = transformer.run_stack(params, h, m)
+    h = transformer.apply_norm(params["final_norm"], h, m)
+    head, layout = transformer._head(params, m)
+    return compute_logits(h, head, layout, m.final_softcap,
+                          true_vocab=m.vocab)

@@ -1,0 +1,52 @@
+"""Paper Fig. 3 (left) analogue: step memory vs batch size for IP-SGD /
+MeZO / Addax at fixed sequence length.
+
+The paper profiles OPT-13B on an A100 with nvidia-smi; here the measure
+is HLO memory (arguments + temps) of the compiled step for the
+paper-family proxy config — same shape of curve, no GPU required.  The
+claim under test: IP-SGD memory grows steeply with batch; MeZO (and the
+ZO half of Addax) stays near inference.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import hlo_step_memory, save_result
+
+
+def run(arch="tiny-100m", seq=512, batches=(2, 4, 8, 16), quick=False):
+    if quick:
+        batches = (2, 8)
+    rows = []
+    for opt in ("mezo", "ipsgd", "addax"):
+        for b in batches:
+            r = hlo_step_memory(arch, opt, b, seq,
+                                l_t=seq // 2, k1=max(2, b // 2))
+            rows.append(r)
+            print(f"[fig3] {opt:6s} bs={b:3d} seq={seq} "
+                  f"total={r['total_gb']:.3f} GB "
+                  f"(temp {r['temp_bytes'] / 2**30:.3f})", flush=True)
+    # the paper's claim: d(mem)/d(batch) much steeper for ipsgd
+    def slope(opt):
+        sel = [r for r in rows if r["optimizer"] == opt]
+        return ((sel[-1]["temp_bytes"] - sel[0]["temp_bytes"])
+                / (sel[-1]["batch"] - sel[0]["batch"]))
+    summary = {"arch": arch, "seq": seq, "rows": rows,
+               "temp_slope_bytes_per_example": {
+                   o: slope(o) for o in ("mezo", "ipsgd", "addax")}}
+    save_result("fig3_memory_vs_batch", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tiny-100m")
+    p.add_argument("--seq", type=int, default=512)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(a.arch, a.seq, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 4 analogue: step memory vs input sequence length at fixed
+batch size, for SGD / IP-SGD / MeZO (+ Addax).  The paper's observation —
+FO memory grows much faster in sequence length than ZO memory — is the
+entire basis of the L_T data assignment."""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import hlo_step_memory, save_result
+
+
+def run(arch="tiny-100m", batch=8, seqs=(128, 256, 512, 1024),
+        quick=False):
+    if quick:
+        seqs = (128, 512)
+    rows = []
+    for opt in ("sgd", "ipsgd", "mezo", "addax"):
+        for s in seqs:
+            r = hlo_step_memory(arch, opt, batch, s, l_t=s // 2,
+                                k1=max(2, batch // 2))
+            rows.append(r)
+            print(f"[fig4] {opt:6s} seq={s:5d} bs={batch} "
+                  f"total={r['total_gb']:.3f} GB", flush=True)
+
+    def growth(opt):
+        sel = sorted((r for r in rows if r["optimizer"] == opt),
+                     key=lambda r: r["seq"])
+        return sel[-1]["temp_bytes"] / max(sel[0]["temp_bytes"], 1)
+
+    summary = {"arch": arch, "batch": batch, "rows": rows,
+               "temp_growth_last_over_first": {
+                   o: growth(o) for o in ("sgd", "ipsgd", "mezo",
+                                          "addax")}}
+    save_result("fig4_memory_vs_seqlen", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="tiny-100m")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(a.arch, a.batch, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 5 (right) analogue: the ZO-gradient regularization effect.
+K1 fixed, K0 swept from 0 (= IP-SGD) upward; we report final training
+loss and held-out classification accuracy per K0 over multiple seeds."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import eval_accuracy, save_result, train_run
+
+
+def run(steps=80, k0s=(0, 2, 4, 8), seeds=(0, 1), quick=False):
+    if quick:
+        steps, k0s, seeds = 100, (0, 4), (0,)
+    rows = []
+    for k0 in k0s:
+        for seed in seeds:
+            if k0 == 0:
+                r = train_run("tiny-100m", "ipsgd", steps, k1=4, seed=seed)
+            else:
+                r = train_run("tiny-100m", "addax", steps, k0=k0, k1=4,
+                              alpha=1e-3, seed=seed)
+            acc = eval_accuracy(r["bundle"], r["params"], r["pipe"])
+            rows.append({"k0": k0, "seed": seed,
+                         "final_loss": float(np.mean(r["losses"][-5:])),
+                         "accuracy": acc})
+            print(f"[fig5] K0={k0} seed={seed} "
+                  f"loss={rows[-1]['final_loss']:.4f} acc={acc:.3f}",
+                  flush=True)
+    summary = {"k1": 4, "steps": steps, "rows": rows}
+    save_result("fig5_k0_sweep", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=80)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(steps=a.steps, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Render the roofline table (§Roofline) from ``dryrun_artifacts/``:
+per (arch x shape x mesh) the three terms, dominant bottleneck, and the
+MODEL_FLOPS/HLO_FLOPS useful ratio.  Also emits the markdown table used
+by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.common import save_result
+
+
+def load_cells(art_dir="dryrun_artifacts", tag="baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir,
+                                              f"*__{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": "FAIL",
+                         "error": rec.get("error")})
+            continue
+        r = rec["roofline"]
+        hbm_gb = (r["memory_stats"].get("temp_size_in_bytes", 0)
+                  + r["memory_stats"].get("argument_size_in_bytes", 0)) \
+            / 2**30
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "mesh": rec["mesh"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_ratio": r["useful_ratio"],
+            "hbm_per_device_gb": round(hbm_gb, 3),
+            "model_flops": r["model_flops"],
+            "hlo_flops_per_dev": r["hlo_flops"],
+            "coll_by_op": r["coll_detail"]["by_op"],
+            "compile_s": rec.get("compile_s"),
+        })
+    return rows
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | coll_s | "
+           "dominant | useful | HBM/dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {r['hbm_per_device_gb']} |")
+    return "\n".join(lines)
+
+
+def run(art_dir="dryrun_artifacts", tag="baseline"):
+    rows = load_cells(art_dir, tag)
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"[roofline] {len(ok)}/{len(rows)} cells ok (tag={tag})")
+    for r in ok:
+        print(f"  {r['arch']:24s} {r['shape']:12s} {r['mesh']:7s} "
+              f"dom={r['dominant']:10s} useful={r['useful_ratio']:.3f} "
+              f"hbm={r['hbm_per_device_gb']:8.3f}GB")
+    by_dom = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    print(f"[roofline] dominant-term histogram: {by_dom}")
+    summary = {"tag": tag, "rows": rows, "dominant_histogram": by_dom,
+               "markdown": render_markdown(rows)}
+    save_result(f"roofline_{tag}", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="dryrun_artifacts")
+    p.add_argument("--tag", default="baseline")
+    a = p.parse_args(argv)
+    run(a.dir, a.tag)
+
+
+if __name__ == "__main__":
+    main()

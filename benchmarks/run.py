@@ -1,0 +1,56 @@
+"""Benchmark aggregator: ``python -m benchmarks.run [--full]``.
+
+Runs one benchmark per paper table/figure (quick settings by default so
+the whole suite finishes on the CPU container) plus the roofline report
+over the dry-run artifacts.  Results land in ``benchmarks/results/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="full sweep sizes (slower)")
+    p.add_argument("--only", action="append", default=None)
+    args = p.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (fig3_memory_vs_batch, fig4_memory_vs_seqlen,
+                            fig5_k0_sweep, fig11_convergence,
+                            roofline_report, table_accuracy_memory)
+    suite = {
+        "fig3_memory_vs_batch": lambda: fig3_memory_vs_batch.run(
+            quick=quick),
+        "fig4_memory_vs_seqlen": lambda: fig4_memory_vs_seqlen.run(
+            quick=quick),
+        "fig5_k0_sweep": lambda: fig5_k0_sweep.run(quick=quick),
+        "fig11_convergence": lambda: fig11_convergence.run(quick=quick),
+        "table_accuracy_memory": lambda: table_accuracy_memory.run(
+            quick=quick),
+        "roofline_report": lambda: roofline_report.run(),
+    }
+    if args.only:
+        suite = {k: v for k, v in suite.items() if k in args.only}
+
+    failures = []
+    for name, fn in suite.items():
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[done] {name} in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{len(suite) - len(failures)}/{len(suite)} benchmarks ok"
+          + (f"; FAILED: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

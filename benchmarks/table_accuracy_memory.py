@@ -1,0 +1,75 @@
+"""Paper Table 12/13 analogue: accuracy / memory / time across the five
+optimizers {MeZO, SGD, IP-SGD, Adam, Addax} on one task.
+
+Accuracy and wall time come from real small-scale runs (synthetic
+classify task, smoke config); memory is the HLO measure of the *full*
+config step at the paper-style shapes (bs from each method's column of
+Table 12), so the memory ordering matches the paper's A100 story:
+Adam >> SGD > IP-SGD > Addax ~ MeZO.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (eval_accuracy, hlo_step_memory, save_result,
+                               train_run)
+
+MEM_ARCH = "tiny-100m"   # memory profile target (full config, abstract)
+SEQ = 512
+
+
+def run(steps=100, mezo_steps=400, quick=False):
+    if quick:
+        steps, mezo_steps = 80, 240
+    rows = {}
+    plans = {
+        "mezo": dict(optimizer="mezo", steps=mezo_steps, lr=5e-5),
+        "sgd": dict(optimizer="sgd", steps=steps, lr=3e-1),  # normalized g
+        "ipsgd": dict(optimizer="ipsgd", steps=steps, lr=3e-3),
+        "adam": dict(optimizer="adam", steps=steps, lr=1e-3),
+        "addax": dict(optimizer="addax", steps=steps, lr=3e-3,
+                      alpha=1e-3, k0=4, k1=4),
+    }
+    mem_plan = {
+        "mezo": dict(batch=16, seq=SEQ),
+        "sgd": dict(batch=8, seq=SEQ),
+        "ipsgd": dict(batch=8, seq=SEQ),
+        "adam": dict(batch=8, seq=SEQ),
+        "addax": dict(batch=6, seq=SEQ, l_t=SEQ // 2, k1=4),
+    }
+    for name, plan in plans.items():
+        kw = dict(plan)
+        opt = kw.pop("optimizer")
+        n = kw.pop("steps")
+        r = train_run("tiny-100m", opt, n, **kw)
+        acc = eval_accuracy(r["bundle"], r["params"], r["pipe"])
+        mem = hlo_step_memory(MEM_ARCH, opt, **mem_plan[name])
+        rows[name] = {
+            "accuracy": round(acc, 4),
+            "final_loss": round(float(np.mean(r["losses"][-5:])), 4),
+            "wall_s": round(r["wall_s"], 2),
+            "steps": n,
+            "hlo_memory_gb": mem["total_gb"],
+        }
+        print(f"[table] {name:6s} acc={acc:.3f} "
+              f"loss={rows[name]['final_loss']:.4f} "
+              f"mem={mem['total_gb']:.3f}GB wall={r['wall_s']:.1f}s",
+              flush=True)
+    summary = {"task": "synthetic classify (paper Table 12 analogue)",
+               "rows": rows}
+    save_result("table_accuracy_memory", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

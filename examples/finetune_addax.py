@@ -1,0 +1,44 @@
+"""End-to-end driver: train the ~100M-parameter example model for a few
+hundred Addax steps with the full production loop — checkpointing,
+metrics JSONL, straggler watchdog — then evaluate and compare against an
+IP-SGD baseline (the paper's central comparison).
+
+    PYTHONPATH=src python examples/finetune_addax.py [--steps 200]
+
+(On TPU fleets the same code path is reached via
+``python -m repro.launch.train --arch tiny-100m --steps 400``.)
+"""
+
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import eval_accuracy, train_run
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=200)
+    args = p.parse_args()
+
+    results = {}
+    for opt, kw in (("addax", dict(alpha=1e-3, k0=4, k1=4)),
+                    ("ipsgd", dict(k1=4))):
+        r = train_run("tiny-100m", opt, args.steps, task="classify",
+                      lr=3e-3, **kw)
+        acc = eval_accuracy(r["bundle"], r["params"], r["pipe"])
+        results[opt] = (float(np.mean(r["losses"][-5:])), acc,
+                        r["wall_s"])
+        print(f"{opt:6s}: final_loss={results[opt][0]:.4f} "
+              f"acc={acc:.3f} wall={r['wall_s']:.1f}s")
+
+    a, i = results["addax"], results["ipsgd"]
+    print(f"\nAddax vs IP-SGD: loss {a[0]:.4f} vs {i[0]:.4f}; "
+          f"accuracy {a[1]:.3f} vs {i[1]:.3f} "
+          f"(paper: Addax matches or beats IP-SGD with far less memory)")
+
+
+if __name__ == "__main__":
+    main()

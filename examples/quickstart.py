@@ -1,0 +1,53 @@
+"""Quickstart: fine-tune a small LM with Addax in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a synthetic right-skewed fine-tuning corpus, partitions it by the
+L_T length threshold (paper §3.1), and runs a few dozen Addax steps —
+short sequences get backprop (IP-SGD half), long sequences get the
+two-forward-pass SPSA half, one fused update per step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.addax import AddaxConfig
+from repro.core import schedules
+from repro.core.addax import make_addax_step
+from repro.data.pipeline import AddaxPipeline, PipelineConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+from repro.models.registry import get_bundle
+
+
+def main():
+    bundle = get_bundle("tiny-100m", smoke=True)
+
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="rte", task="classify", vocab=bundle.mcfg.vocab,
+        n_examples=128, min_len=12, max_len=64))
+    lengths = np.array([len(e["tokens"]) for e in corpus])
+    pipe = AddaxPipeline(corpus, PipelineConfig(
+        k0=4, k1=4, l_t=int(np.median(lengths))))
+    print(f"corpus: {len(corpus)} examples, L_max={lengths.max()}, "
+          f"L_T={pipe.assignment.l_t} -> |D0|={pipe.assignment.d0.size} "
+          f"long / |D1|={pipe.assignment.d1.size} short")
+
+    cfg = AddaxConfig(lr=3e-3, alpha=1e-3, eps=1e-3)
+    step = jax.jit(make_addax_step(bundle.loss_fn(), cfg,
+                                   schedules.constant(cfg.lr)),
+                   donate_argnums=(0,))
+
+    params = bundle.init_params(jax.random.key(0))
+    for t in range(60):
+        b0, b1 = pipe.step_batches(t)
+        params, m = step(params, jnp.uint32(t), b0, b1)
+        if t % 10 == 0 or t == 59:
+            print(f"step {t:3d}  loss_fo={float(m['loss_fo']):.4f}  "
+                  f"loss_zo={float(m['loss_zo']):.4f}  "
+                  f"g0={float(m['g0']):+.3f}")
+    print("done — FO loss should have dropped well below the ~5.5 start")
+
+
+if __name__ == "__main__":
+    main()

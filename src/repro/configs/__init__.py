@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+import importlib
+
+from repro.configs.base import SHAPES, SMOKE_SHAPES, ArchConfig, ShapeCfg
+
+_MODULES = {
+    "granite-3-2b": "granite_3_2b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "gemma2-27b": "gemma2_27b",
+    "deepseek-67b": "deepseek_67b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "whisper-tiny": "whisper_tiny",
+    "internvl2-1b": "internvl2_1b",
+    "opt-1.3b-proxy": "opt_1_3b_proxy",
+    "tiny-100m": "tiny_100m",
+}
+
+ASSIGNED_ARCHS = list(_MODULES)[:10]
+ALL_ARCHS = list(_MODULES)
+
+
+def get_arch(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.smoke() if smoke else mod.full()
+
+
+__all__ = ["SHAPES", "SMOKE_SHAPES", "ArchConfig", "ShapeCfg", "get_arch",
+           "ASSIGNED_ARCHS", "ALL_ARCHS"]

@@ -1,0 +1,56 @@
+"""Config system: input-shape cells and per-architecture configs.
+
+Every assigned architecture ships as ``configs/<id>.py`` exposing
+``full()`` (the exact published config) and ``smoke()`` (a reduced config
+of the same family for CPU tests).  The shape registry carries the four
+assigned input-shape cells; ``train`` cells lower the Addax ``train_step``,
+``prefill``/``decode`` cells lower ``serve_step``s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+SMOKE_SHAPES: dict[str, ShapeCfg] = {
+    "train": ShapeCfg("train_smoke", 64, 4, "train"),
+    "prefill": ShapeCfg("prefill_smoke", 64, 2, "prefill"),
+    "decode": ShapeCfg("decode_smoke", 64, 2, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One selectable architecture (``--arch <id>``)."""
+    arch_id: str
+    family: str                   # decoder | encdec | hybrid
+    model: Any                    # TransformerCfg | EncDecCfg | HybridCfg
+    sub_quadratic: bool = False   # may run long_500k
+    # Addax data-assignment defaults for train cells: the FO stream takes
+    # ``fo_frac`` of the global batch at ``lt_frac * seq_len`` tokens (the
+    # L_T threshold); the ZO stream takes the rest at full length.
+    fo_frac: float = 0.5
+    lt_frac: float = 0.5
+    notes: str = ""
+
+    def shape_cells(self) -> list[str]:
+        cells = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.sub_quadratic:
+            cells.append("long_500k")
+        return cells

@@ -1,0 +1,24 @@
+"""deepseek-67b [dense]: 95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400 — llama-arch [arXiv:2401.02954]."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="deepseek-67b", family="decoder",
+        model=TransformerCfg(
+            name="deepseek-67b", n_layers=95, d_model=8192, n_heads=64,
+            n_kv=8, head_dim=128, d_ff=22016, vocab=102400,
+            tie_embeddings=False, rope_theta=10000.0),
+        notes="full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="deepseek-67b", family="decoder",
+        model=TransformerCfg(
+            name="deepseek-67b-smoke", n_layers=3, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256,
+            tie_embeddings=False))

@@ -1,0 +1,29 @@
+"""gemma2-27b [dense]: 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000 — local+global alternating, logit softcap [arXiv:2408.00118]."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="gemma2-27b", family="decoder",
+        model=TransformerCfg(
+            name="gemma2-27b", n_layers=46, d_model=4608, n_heads=32,
+            n_kv=16, head_dim=128, d_ff=36864, vocab=256000,
+            layer_pattern=("local", "global"), local_window=4096,
+            act="gelu", attn_softcap=50.0, final_softcap=30.0,
+            post_norms=True, embed_scale=True, tie_embeddings=True),
+        notes=("half the layers are global full attention: long_500k "
+               "skipped"))
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="gemma2-27b", family="decoder",
+        model=TransformerCfg(
+            name="gemma2-27b-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256,
+            layer_pattern=("local", "global"), local_window=16, act="gelu",
+            attn_softcap=50.0, final_softcap=30.0, post_norms=True,
+            embed_scale=True, tie_embeddings=True))

@@ -1,0 +1,26 @@
+"""granite-3-2b [dense]: 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155 — GQA [hf:ibm-granite/granite-3.0-2b-base].
+
+Simplification noted: granite-3.0's muP-style embedding/residual/logit
+multipliers are omitted (plain llama-style scaling)."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="granite-3-2b", family="decoder",
+        model=TransformerCfg(
+            name="granite-3-2b", n_layers=40, d_model=2048, n_heads=32,
+            n_kv=8, head_dim=64, d_ff=8192, vocab=49155,
+            tie_embeddings=True, rope_theta=10000.0),
+        notes="full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="granite-3-2b", family="decoder",
+        model=TransformerCfg(
+            name="granite-3-2b-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256, tie_embeddings=True))

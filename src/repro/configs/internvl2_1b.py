@@ -1,0 +1,29 @@
+"""internvl2-1b [vlm]: 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151655 — InternViT + Qwen2-0.5B LM [arXiv:2404.16821].
+
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides 256 precomputed, projected patch embeddings per example, which
+prefix the text tokens; the L_T data-assignment rule counts image tokens
+toward length(x)."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="internvl2-1b", family="decoder",
+        model=TransformerCfg(
+            name="internvl2-1b", n_layers=24, d_model=896, n_heads=14,
+            n_kv=2, head_dim=64, d_ff=4864, vocab=151655, qkv_bias=True,
+            tie_embeddings=True, rope_theta=1e6, prefix_len=256),
+        notes="full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="internvl2-1b", family="decoder",
+        model=TransformerCfg(
+            name="internvl2-1b-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256, qkv_bias=True,
+            tie_embeddings=True, prefix_len=8))

@@ -1,0 +1,28 @@
+"""Paper-family config: an OPT-1.3B-class decoder (the paper fine-tunes
+OPT-13B/30B/66B; this is the same family at a size the examples can train
+for real on CPU-hostable hardware).  Proxy notes: rotary positions stand in
+for OPT's learned absolute positions; pre-LN."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="opt-1.3b-proxy", family="decoder",
+        model=TransformerCfg(
+            name="opt-1.3b-proxy", n_layers=24, d_model=2048, n_heads=32,
+            n_kv=32, head_dim=64, d_ff=8192, vocab=50272, norm="ln",
+            act="gelu", gated_mlp=False, mlp_bias=True, qkv_bias=True,
+            tie_embeddings=True),
+        notes="paper's model family (proxy; see module docstring)")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="opt-1.3b-proxy", family="decoder",
+        model=TransformerCfg(
+            name="opt-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=4,
+            head_dim=16, d_ff=128, vocab=256, norm="ln", act="gelu",
+            gated_mlp=False, mlp_bias=True, qkv_bias=True,
+            tie_embeddings=True))

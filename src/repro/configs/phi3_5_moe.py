@@ -1,0 +1,28 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=6400
+per expert, vocab=32064, MoE 16e top-2 [hf:microsoft/Phi-3.5-MoE-instruct].
+
+Simplification noted: LongRoPE scaling omitted (plain RoPE)."""
+
+from repro.configs.base import ArchConfig
+from repro.models.moe import MoECfg
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="phi3.5-moe-42b-a6.6b", family="decoder",
+        model=TransformerCfg(
+            name="phi3.5-moe", n_layers=32, d_model=4096, n_heads=32,
+            n_kv=8, head_dim=128, d_ff=6400, vocab=32064,
+            tie_embeddings=False,
+            moe_cfg=MoECfg(d_model=4096, d_ff=6400, n_experts=16, top_k=2)),
+        notes="full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="phi3.5-moe-42b-a6.6b", family="decoder",
+        model=TransformerCfg(
+            name="phi3.5-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=32, vocab=256, tie_embeddings=False,
+            moe_cfg=MoECfg(d_model=64, d_ff=32, n_experts=4, top_k=2)))

@@ -1,0 +1,24 @@
+"""qwen2.5-32b [dense]: 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064 — GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B]."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="qwen2.5-32b", family="decoder",
+        model=TransformerCfg(
+            name="qwen2.5-32b", n_layers=64, d_model=5120, n_heads=40,
+            n_kv=8, head_dim=128, d_ff=27648, vocab=152064, qkv_bias=True,
+            tie_embeddings=False, rope_theta=1e6),
+        notes="full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="qwen2.5-32b", family="decoder",
+        model=TransformerCfg(
+            name="qwen2.5-32b-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256, qkv_bias=True,
+            tie_embeddings=False))

@@ -1,0 +1,31 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536
+— Finch, data-dependent decay [arXiv:2404.05892]."""
+
+from repro.configs.base import ArchConfig
+from repro.models.rwkv import RWKVCfg
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="rwkv6-1.6b", family="decoder",
+        model=TransformerCfg(
+            name="rwkv6-1.6b", n_layers=24, d_model=2048, n_heads=32,
+            n_kv=32, head_dim=64, d_ff=7168, vocab=65536,
+            layer_pattern=("rwkv",), norm="ln", tie_embeddings=False,
+            rwkv_cfg=RWKVCfg(d_model=2048, d_ff=7168, head_dim=64,
+                             decay_lora=64, chunk=16)),
+        sub_quadratic=True,
+        notes="attn-free linear recurrence: runs long_500k")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="rwkv6-1.6b", family="decoder",
+        model=TransformerCfg(
+            name="rwkv6-1.6b-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=4, head_dim=16, d_ff=128, vocab=256,
+            layer_pattern=("rwkv",), norm="ln", tie_embeddings=False,
+            rwkv_cfg=RWKVCfg(d_model=64, d_ff=128, head_dim=16,
+                             decay_lora=8, chunk=4)),
+        sub_quadratic=True)

@@ -1,0 +1,22 @@
+"""~100M-parameter decoder for the end-to-end example runs (train a few
+hundred steps on real hardware; a few steps on this CPU container)."""
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="tiny-100m", family="decoder",
+        model=TransformerCfg(
+            name="tiny-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv=4, head_dim=64, d_ff=2048, vocab=32000,
+            tie_embeddings=True))
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="tiny-100m", family="decoder",
+        model=TransformerCfg(
+            name="tiny-100m-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=2, head_dim=16, d_ff=128, vocab=256, tie_embeddings=True))

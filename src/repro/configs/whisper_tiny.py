@@ -1,0 +1,28 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865
+— enc-dec, conv frontend stub [arXiv:2212.04356].
+
+The conv-mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model).  For the
+large shape cells the decoder length is seq_len - n_frames."""
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="whisper-tiny", family="encdec",
+        model=EncDecCfg(
+            name="whisper-tiny", n_layers=4, d_model=384, n_heads=6,
+            n_kv=6, head_dim=64, d_ff=1536, vocab=51865, n_frames=1500,
+            max_text=40960),
+        notes="enc-dec; full attention: long_500k skipped")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="whisper-tiny", family="encdec",
+        model=EncDecCfg(
+            name="whisper-tiny-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv=4, head_dim=16, d_ff=128, vocab=256, n_frames=8,
+            max_text=128))

@@ -1,0 +1,32 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks
+[arXiv:2411.15242].
+
+Simplification noted: the shared block's per-invocation LoRA adapters and
+the concatenated-embedding input of the reference implementation are
+omitted (plain residual shared block every 6 Mamba layers)."""
+
+from repro.configs.base import ArchConfig
+from repro.models.hybrid import HybridCfg
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        arch_id="zamba2-1.2b", family="hybrid",
+        model=HybridCfg(
+            name="zamba2-1.2b", n_mamba=38, d_model=2048, n_heads=32,
+            n_kv=32, head_dim=64, d_ff=8192, vocab=32000, d_state=64,
+            segment=6),
+        sub_quadratic=True,
+        notes=("Mamba2 state is O(1); shared-attn KV caches are "
+               "sequence-sharded for long_500k"))
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        arch_id="zamba2-1.2b", family="hybrid",
+        model=HybridCfg(
+            name="zamba2-1.2b-smoke", n_mamba=4, d_model=64, n_heads=4,
+            n_kv=4, head_dim=16, d_ff=128, vocab=256, d_state=8,
+            segment=2),
+        sub_quadratic=True)

@@ -1,0 +1,78 @@
+"""Adam baseline (fp32 moments — the memory-hungry reference point the
+paper measures against).  Also provides the paper's "future work" variant:
+Addax-Adam, feeding the mixed ZO+FO gradient into Adam's moments."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng, spsa
+from repro.core.addax import AddaxConfig
+
+
+def init_adam_state(params: Any) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.copy, zeros)}
+
+
+def _adam_update(params, grads, state, lr, step_idx, b1=0.9, b2=0.999,
+                 eps=1e-8):
+    t = (step_idx + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree_util.tree_map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda o: o[2], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    return params, {"m": m, "v": v}
+
+
+def make_adam_step(loss_fn: Callable[[Any, Any], jax.Array],
+                   cfg: AddaxConfig, lr_fn):
+    """step(params, adam_state, step_idx, batch) -> (params, state, metrics)."""
+
+    def step(params, state, step_idx, batch):
+        lr = lr_fn(step_idx)
+        loss, g = jax.value_and_grad(loss_fn)(params, batch)
+        params, state = _adam_update(params, g, state, lr, step_idx)
+        return params, state, {"loss_fo": loss, "lr": lr}
+
+    return step
+
+
+def make_addax_adam_step(loss_fn: Callable[[Any, Any], jax.Array],
+                         cfg: AddaxConfig, lr_fn):
+    """Beyond-paper: mixed ZO+FO gradient driving Adam moments (paper §5
+    'future works')."""
+
+    def step(params, state, step_idx, batch0, batch1):
+        seed = rng.fold_seed(0xADA3, step_idx)
+        lr = lr_fn(step_idx)
+        g0, loss0, params = spsa.spsa_directional_grad(
+            loss_fn, params, batch0, seed, cfg.eps, cfg.spsa_mode)
+        loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
+        zo = spsa.zo_pseudo_gradient(g0, seed, params)
+        mixed = jax.tree_util.tree_map(
+            lambda a, b: cfg.alpha * a + (1 - cfg.alpha) * b.astype(jnp.float32),
+            zo, g1)
+        params, state = _adam_update(params, mixed, state, lr, step_idx)
+        return params, state, {"loss_zo": loss0, "loss_fo": loss1, "g0": g0,
+                               "lr": lr}
+
+    return step

@@ -1,0 +1,129 @@
+"""Addax step builders (paper Algorithm 1).
+
+One Addax step:
+
+  1. draw minibatch ``B0`` (long sequences, K0 examples at up to L_max) and
+     ``B1`` (short sequences, K1 examples at up to L_T) — done host-side by
+     ``repro.data.pipeline``; here they arrive as two fixed-shape batches,
+  2. ``g0, _, params = spsa_directional_grad(loss, params, B0, seed, eps)``
+     — two forward passes, scalar result (Algorithm 2),
+  3. ``g1 = grad(loss)(params, B1)`` — one backprop on the *short* batch,
+  4. fused update ``theta <- theta - eta (alpha g0 z + (1-alpha) g1)`` with
+     ``z`` regenerated leaf-by-leaf from the seed (never stored).
+
+Addax-WA ("without assignment", paper §3.1) is the same step with B0 and B1
+drawn from the same distribution — a data-pipeline choice, not a different
+step function.
+
+The returned step function is meant to be jitted with
+``donate_argnums=(0,)`` so XLA reuses the parameter buffers across the
+perturb/restore/update chain — the functional counterpart of the paper's
+in-place updates (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng, spsa
+
+
+@dataclasses.dataclass(frozen=True)
+class AddaxConfig:
+    """Hyper-parameters of Algorithm 1 (names follow the paper)."""
+    lr: float = 1e-4            # eta
+    eps: float = 1e-3           # SPSA perturbation scale
+    alpha: float = 5e-4         # ZO/FO mixing constant (paper OPT grid)
+    k0: int = 6                 # |B0| zeroth-order batch
+    k1: int = 4                 # |B1| first-order batch
+    l_t: int | None = None      # sequence-length threshold; None => Addax-WA
+    schedule: str = "constant"
+    spsa_mode: str = "chain"    # "chain" (paper-faithful) | "fresh"
+    grad_clip: float | None = None   # optional global-norm clip on g1
+
+
+LossFn = Callable[[Any, Any], jax.Array]
+
+
+def _tree_sq_norm(tree: Any) -> jax.Array:
+    parts = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0))
+
+
+def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
+                 seed: jax.Array, lr: jax.Array, alpha: float) -> Any:
+    """theta <- theta - lr * (alpha * g0 * z(seed) + (1-alpha) * fo_grads).
+
+    z is regenerated per leaf inside the map (paper Algorithm 1, steps
+    13-17); with donation this is a single streaming pass over the
+    parameters.  Either gradient source may be ``None`` (MeZO: fo=None,
+    IP-SGD: g0=None).
+    """
+    ids = rng.leaf_ids(params)
+
+    def one(leaf, lid, g1):
+        upd = jnp.zeros(leaf.shape, jnp.float32)
+        if g0 is not None:
+            z = rng.leaf_z(seed, lid, leaf.shape, jnp.float32)
+            upd = upd + alpha * g0 * z
+        if g1 is not None:
+            upd = upd + (1.0 - alpha if g0 is not None else 1.0) * \
+                g1.astype(jnp.float32)
+        return (leaf.astype(jnp.float32) - lr * upd).astype(leaf.dtype)
+
+    if fo_grads is None:
+        return jax.tree_util.tree_map(
+            lambda leaf, lid: one(leaf, lid, None), params, ids)
+    return jax.tree_util.tree_map(one, params, ids, fo_grads)
+
+
+def make_addax_step(loss_fn: LossFn, cfg: AddaxConfig,
+                    lr_fn: Callable[[jax.Array], jax.Array]):
+    """Build ``step(params, step_idx, batch0, batch1) -> (params, metrics)``.
+
+    ``batch0`` feeds the ZO estimator (long sequences), ``batch1`` the FO
+    estimator (short sequences).  Seeds derive from ``step_idx`` so restart
+    from a checkpoint reproduces the exact same perturbation stream.
+    """
+
+    def step(params, step_idx, batch0, batch1):
+        seed = rng.fold_seed(0xADDA, step_idx)
+        lr = lr_fn(step_idx)
+
+        # --- zeroth-order half: two forward passes, scalar g0 ------------
+        g0, loss0, params = spsa.spsa_directional_grad(
+            loss_fn, params, batch0, seed, cfg.eps, cfg.spsa_mode)
+
+        # --- first-order half: backprop on the short batch ---------------
+        loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
+        gnorm = jnp.sqrt(_tree_sq_norm(g1))
+        if cfg.grad_clip is not None:
+            scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+            g1 = jax.tree_util.tree_map(lambda g: g * scale, g1)
+
+        # --- fused mixed update ------------------------------------------
+        params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
+
+        metrics = {"loss_zo": loss0, "loss_fo": loss1, "g0": g0,
+                   "fo_grad_norm": gnorm, "lr": lr}
+        return params, metrics
+
+    return step
+
+
+def make_addax_wa_step(loss_fn: LossFn, cfg: AddaxConfig, lr_fn):
+    """Addax-WA: single data stream; B0 and B1 are two slices of one batch
+    drawn from the full dataset (paper Algorithm 1, step 3)."""
+    inner = make_addax_step(loss_fn, cfg, lr_fn)
+
+    def step(params, step_idx, batch):
+        b0 = jax.tree_util.tree_map(lambda x: x[:cfg.k0], batch)
+        b1 = jax.tree_util.tree_map(lambda x: x[cfg.k0:cfg.k0 + cfg.k1], batch)
+        return inner(params, step_idx, b0, b1)
+
+    return step

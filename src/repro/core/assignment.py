@@ -1,0 +1,62 @@
+"""Length-threshold data assignment (paper §3.1).
+
+``D0 = {x : length(x) > L_T}`` (zeroth-order, long sequences)
+``D1 = {x : length(x) <= L_T}`` (first-order, short sequences)
+
+XLA needs static shapes, so the split is realized host-side: examples are
+bucketed into two fixed-shape streams — ``D1`` padded to ``L_T`` and ``D0``
+padded to ``L_max``.  This module is pure-numpy (host pipeline); the
+invariants (partition, disjointness, threshold) are property-tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Index split of a dataset by sequence length."""
+    d0: np.ndarray          # indices with length > l_t  (ZO)
+    d1: np.ndarray          # indices with length <= l_t (FO)
+    l_t: int
+    l_max: int
+
+
+def assign(lengths: np.ndarray, l_t: int | None) -> Assignment:
+    """Partition by L_T.  ``l_t=None`` (or >= max length) means Addax-WA:
+    both streams see the whole dataset (paper Algorithm 1, step 3)."""
+    lengths = np.asarray(lengths)
+    l_max = int(lengths.max()) if lengths.size else 0
+    idx = np.arange(lengths.size)
+    if l_t is None or l_t >= l_max:
+        return Assignment(d0=idx, d1=idx, l_t=l_t if l_t is not None else l_max,
+                          l_max=l_max)
+    mask_long = lengths > l_t
+    return Assignment(d0=idx[mask_long], d1=idx[~mask_long], l_t=int(l_t),
+                      l_max=l_max)
+
+
+def choose_l_t(lengths: np.ndarray, fo_fraction: float = 0.5) -> int:
+    """Pick L_T as the ``fo_fraction`` quantile of the length distribution —
+    the paper tunes L_T per task so that the FO stream fits memory; the
+    quantile rule is the automated analogue (e.g. 0.5 -> median)."""
+    lengths = np.asarray(lengths)
+    return int(np.quantile(lengths, fo_fraction))
+
+
+def memory_model(seq_len: int, batch: int, n_layers: int, d_model: int,
+                 n_heads: int, dtype_bytes: int = 2,
+                 flash: bool = True) -> int:
+    """First-order activation-memory estimate in bytes (the quantity the
+    paper's Figure 4 measures empirically): per-layer residual + attention
+    internals that backprop must keep.  Used by the pipeline to auto-pick
+    (K0, K1, L_T) against a per-chip HBM budget, mirroring Appendix D.6."""
+    per_token = d_model * dtype_bytes
+    # ~8 live d_model-sized tensors per layer under our remat policy
+    act = 8 * n_layers * batch * seq_len * per_token
+    if not flash:
+        act += n_layers * batch * n_heads * seq_len * seq_len * dtype_bytes
+    return act

@@ -1,0 +1,26 @@
+"""MeZO baseline (Malladi et al. 2023): pure zeroth-order SGD with the
+seed trick — equivalent to Addax with alpha = 1 and no FO batch."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core import rng, spsa
+from repro.core.addax import AddaxConfig, fused_update
+
+
+def make_mezo_step(loss_fn: Callable[[Any, Any], jax.Array],
+                   cfg: AddaxConfig, lr_fn):
+    """step(params, step_idx, batch) -> (params, metrics)."""
+
+    def step(params, step_idx, batch):
+        seed = rng.fold_seed(0x3E20, step_idx)
+        lr = lr_fn(step_idx)
+        g0, loss, params = spsa.spsa_directional_grad(
+            loss_fn, params, batch, seed, cfg.eps, cfg.spsa_mode)
+        params = fused_update(params, None, g0, seed, lr, alpha=1.0)
+        return params, {"loss_zo": loss, "g0": g0, "lr": lr}
+
+    return step

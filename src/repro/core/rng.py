@@ -1,0 +1,166 @@
+"""Counter-based RNG for SPMD-safe zeroth-order perturbations.
+
+The heart of Addax/MeZO is the seed trick: the random direction ``z`` is never
+stored — it is regenerated from a seed wherever it is needed.  The paper's
+PyTorch implementation relies on a *stateful* generator replaying draws in the
+same order.  Under pjit/SPMD there is no replay order: different shards,
+different kernels, and different passes (perturb +eps, perturb -eps, final
+update) must all reproduce the *same* bits for the same logical parameter
+element.
+
+We therefore derive every element of ``z`` as a pure function of
+
+    (seed, leaf_id, row_index, col_index)
+
+via a self-contained Threefry-2x32 implementation (identical constants and
+round structure to ``jax.random``'s).  Because it is plain ``jnp`` integer
+arithmetic it runs unchanged:
+
+  * in ordinary jitted graphs (the pure-JAX model path),
+  * inside Pallas TPU kernels (tiles pass their global element offsets),
+  * in numpy-free ``interpret=True`` kernel validation on CPU.
+
+Every leaf is viewed as a logical 2-D matrix ``(rows, cols)`` where ``cols``
+is the trailing dimension; the counter words are ``(row, col)`` and the key
+words are ``(seed, leaf_id)``.  This keeps all counters well inside uint32
+for every architecture in this repo (max rows ~1e6, max cols ~3.7e4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Threefry-2x32 rotation distances (Salmon et al., SC'11), as used by
+# jax.random.  Two groups of four, repeated.
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl32(x: jax.Array, r: int) -> jax.Array:
+    return (x << r) | (x >> (32 - r))
+
+
+def threefry2x32(k0: jax.Array, k1: jax.Array, c0: jax.Array, c1: jax.Array):
+    """20-round Threefry-2x32. All args uint32 arrays (broadcastable).
+
+    Returns two uint32 arrays of the broadcasted shape.  Matches the round
+    structure of the reference implementation (5 four-round groups with key
+    injections between groups).
+    """
+    k0 = k0.astype(jnp.uint32)
+    k1 = k1.astype(jnp.uint32)
+    ks2 = k0 ^ k1 ^ _PARITY
+    ks = (k0, k1, ks2)
+
+    x0 = c0.astype(jnp.uint32) + ks[0]
+    x1 = c1.astype(jnp.uint32) + ks[1]
+
+    for d in range(5):
+        rots = _ROTATIONS[d % 2]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(d + 1) % 3]
+        x1 = x1 + ks[(d + 2) % 3] + jnp.uint32(d + 1)
+    return x0, x1
+
+
+def _bits_to_unit_open(bits: jax.Array) -> jax.Array:
+    """uint32 -> float32 strictly inside (0, 1): (top24 + 0.5) / 2^24."""
+    top = (bits >> 8).astype(jnp.float32)
+    return (top + 0.5) * jnp.float32(1.0 / (1 << 24))
+
+
+def normal_from_counters(seed: jax.Array, leaf_id: jax.Array,
+                         rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """Standard normal z for counter grid. All int32/uint32 broadcastable.
+
+    One Threefry call yields two 32-bit words per element; Box-Muller turns
+    them into one N(0,1) sample.  Deterministic in (seed, leaf_id, row, col).
+    """
+    b0, b1 = threefry2x32(
+        jnp.asarray(seed, jnp.uint32), jnp.asarray(leaf_id, jnp.uint32),
+        jnp.asarray(rows, jnp.uint32), jnp.asarray(cols, jnp.uint32))
+    u1 = _bits_to_unit_open(b0)
+    u2 = _bits_to_unit_open(b1)
+    radius = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = (2.0 * np.pi) * u2
+    return radius * jnp.cos(theta)
+
+
+def _leaf_counters(shape: tuple[int, ...]):
+    """Logical (rows, cols) index grids for an arbitrary-rank leaf."""
+    if len(shape) == 0:
+        return jnp.zeros((), jnp.uint32), jnp.zeros((), jnp.uint32)
+    cols = shape[-1]
+    rows = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 else 1
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    return r, c
+
+
+def leaf_z(seed: jax.Array, leaf_id: int, shape: tuple[int, ...],
+           dtype=jnp.float32) -> jax.Array:
+    """Full-leaf z ~ N(0, I) of `shape` (pure-JAX path)."""
+    r, c = _leaf_counters(tuple(shape))
+    z = normal_from_counters(seed, jnp.uint32(leaf_id), r, c)
+    return z.reshape(shape).astype(dtype)
+
+
+def leaf_ids(params: Any) -> Any:
+    """Deterministic integer id per leaf (flatten order, which is stable
+    for dict pytrees in JAX: keys are sorted)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(treedef, list(range(len(leaves))))
+
+
+def tree_z(seed: jax.Array, params: Any, dtype=None) -> Any:
+    """z pytree matching `params`. dtype defaults to each leaf's dtype."""
+    ids = leaf_ids(params)
+
+    def one(leaf, lid):
+        return leaf_z(seed, lid, leaf.shape, dtype or leaf.dtype)
+
+    return jax.tree_util.tree_map(one, params, ids)
+
+
+def tree_perturb(params: Any, seed: jax.Array, scale) -> Any:
+    """params + scale * z(seed) — the functional analogue of MeZO's
+    in-place ``PerturbParameters`` (Algorithm 3).  ``scale`` may be a python
+    scalar or traced scalar; z is regenerated, never stored across calls."""
+    ids = leaf_ids(params)
+
+    def one(leaf, lid):
+        z = leaf_z(seed, lid, leaf.shape, jnp.float32)
+        return (leaf.astype(jnp.float32) + scale * z).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(one, params, ids)
+
+
+def tree_dot_z(seed: jax.Array, tree: Any) -> jax.Array:
+    """<tree, z(seed)> — useful for tests and variance diagnostics."""
+    ids = leaf_ids(tree)
+    parts = jax.tree_util.tree_map(
+        lambda leaf, lid: jnp.vdot(
+            leaf.astype(jnp.float32),
+            leaf_z(seed, lid, leaf.shape, jnp.float32)),
+        tree, ids)
+    return jax.tree_util.tree_reduce(jnp.add, parts, jnp.float32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def _jit_leaf_z(seed, leaf_id, shape):
+    return leaf_z(seed, leaf_id, shape)
+
+
+def fold_seed(base_seed: int | jax.Array, step: jax.Array) -> jax.Array:
+    """Per-step seed derivation: one threefry call mixing (base, step)."""
+    b0, _ = threefry2x32(jnp.uint32(base_seed), jnp.uint32(0x5EED),
+                         jnp.asarray(step, jnp.uint32), jnp.uint32(1))
+    return b0

@@ -1,0 +1,42 @@
+"""Learning-rate schedules. The paper uses constant schedules for Addax /
+MeZO / (IP-)SGD and linear decay for Adam; both are provided, plus cosine
+and linear-warmup variants for the beyond-paper runs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.float32(lr)
+    return fn
+
+
+def linear_decay(lr: float, total_steps: int):
+    def fn(step):
+        frac = 1.0 - jnp.minimum(step, total_steps) / max(total_steps, 1)
+        return jnp.float32(lr) * frac
+    return fn
+
+
+def warmup_cosine(lr: float, total_steps: int, warmup: int = 0,
+                  final_frac: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def by_name(name: str, lr: float, total_steps: int):
+    if name == "constant":
+        return constant(lr)
+    if name == "linear":
+        return linear_decay(lr, total_steps)
+    if name == "cosine":
+        return warmup_cosine(lr, total_steps, warmup=total_steps // 20)
+    raise ValueError(f"unknown schedule {name!r}")

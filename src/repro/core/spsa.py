@@ -1,0 +1,65 @@
+"""SPSA zeroth-order gradient estimation (paper Algorithm 2, `ZerothGrad`).
+
+``g0 = (L(theta + eps z; B) - L(theta - eps z; B)) / (2 eps)``
+
+Two execution modes:
+
+* ``chain`` (paper-faithful, Algorithm 2/3): the parameters are perturbed
+  ``+eps``, evaluated, re-perturbed ``-2eps``, evaluated, restored ``+eps``.
+  Combined with buffer donation at the jit boundary this lets XLA keep a
+  single live parameter buffer — the functional analogue of MeZO's in-place
+  updates.  Restoration is arithmetic, so it carries one-ulp drift exactly
+  like the paper's fp16 implementation.
+
+* ``fresh``: each perturbation is computed from the original ``theta``
+  (bit-exact restore because ``theta`` itself is returned).  Costs one extra
+  live parameter-sized buffer; used in tests as the ground truth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
+
+
+def spsa_directional_grad(loss_fn: LossFn, params: Any, batch: Any,
+                          seed: jax.Array, eps: float,
+                          mode: str = "chain"):
+    """Returns ``(g0, loss_avg, params_restored)``.
+
+    ``g0`` is the scalar directional derivative estimate along ``z(seed)``;
+    ``loss_avg`` is ``(l+ + l-)/2`` (a serviceable loss metric that costs
+    nothing extra); ``params_restored`` is the parameter tree to keep using
+    (identical object in ``fresh`` mode, arithmetic restore in ``chain``).
+    """
+    if mode == "chain":
+        p_plus = rng.tree_perturb(params, seed, eps)
+        l_plus = loss_fn(p_plus, batch)
+        p_minus = rng.tree_perturb(p_plus, seed, -2.0 * eps)
+        l_minus = loss_fn(p_minus, batch)
+        restored = rng.tree_perturb(p_minus, seed, eps)
+    elif mode == "fresh":
+        l_plus = loss_fn(rng.tree_perturb(params, seed, eps), batch)
+        l_minus = loss_fn(rng.tree_perturb(params, seed, -eps), batch)
+        restored = params
+    else:
+        raise ValueError(f"unknown spsa mode: {mode!r}")
+
+    g0 = (l_plus - l_minus) / (2.0 * eps)
+    loss_avg = 0.5 * (l_plus + l_minus)
+    return g0.astype(jnp.float32), loss_avg.astype(jnp.float32), restored
+
+
+def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any) -> Any:
+    """Materialize ``g0 * z(seed)`` as a pytree (only used by baselines and
+    tests; the fused update path regenerates z leaf-by-leaf instead)."""
+    ids = rng.leaf_ids(params)
+    return jax.tree_util.tree_map(
+        lambda leaf, lid: g0 * rng.leaf_z(seed, lid, leaf.shape, jnp.float32),
+        params, ids)

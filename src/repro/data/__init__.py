@@ -1,0 +1,5 @@
+from repro.data.pipeline import AddaxPipeline, PipelineConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+
+__all__ = ["AddaxPipeline", "PipelineConfig", "SyntheticTaskConfig",
+           "make_corpus"]

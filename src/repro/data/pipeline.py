@@ -1,0 +1,123 @@
+"""Host-side Addax data pipeline: the paper's D0/D1 length split realized
+as two fixed-shape batch streams.
+
+Given a corpus and an ``Assignment`` (``repro.core.assignment``), each
+training step draws
+
+  * ``batch0`` — K0 examples from D0 (long), padded to ``s_full``,
+  * ``batch1`` — K1 examples from D1 (short), padded to ``L_T``,
+
+as next-token LM batches ``{tokens, targets, mask}``.  Sampling is a pure
+function of ``(seed, step)`` (counter-seeded numpy Generator), so a
+restarted job replays the identical stream with *no* data-state in the
+checkpoint — the data-pipeline analogue of the MeZO seed trick.
+
+Addax-WA: pass ``l_t=None`` — both streams draw from the full corpus and
+are padded to ``s_full``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import assignment as asg
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    k0: int = 6
+    k1: int = 4
+    l_t: int | None = None       # None => Addax-WA
+    s_full: int | None = None    # ZO pad length; default: corpus max
+    seed: int = 0
+    pad_multiple: int = 8        # align padded lengths (TPU lanes)
+
+
+def _pad_len(n: int, mult: int) -> int:
+    return int(np.ceil(n / mult) * mult)
+
+
+def _lm_batch(corpus: list[dict], idx: np.ndarray, pad_to: int) -> dict:
+    """Stack examples into {tokens,targets,mask} of width ``pad_to``.
+
+    tokens[t] predicts targets[t] = tokens[t+1]; the mask covers positions
+    whose *target* lies in the completion region (paper's prompt-masked
+    loss), never padding."""
+    b = len(idx)
+    tokens = np.zeros((b, pad_to), np.int32)
+    targets = np.zeros((b, pad_to), np.int32)
+    mask = np.zeros((b, pad_to), np.float32)
+    for r, i in enumerate(idx):
+        ex = corpus[int(i)]
+        t = ex["tokens"][:pad_to]
+        n = len(t)
+        tokens[r, :n] = t
+        targets[r, :n - 1] = t[1:]
+        lo = max(ex["completion_start"] - 1, 0)
+        mask[r, lo:n - 1] = 1.0
+    return {"tokens": tokens, "targets": targets, "mask": mask}
+
+
+class AddaxPipeline:
+    """Two-stream batch source for ``make_addax_step``."""
+
+    def __init__(self, corpus: list[dict], cfg: PipelineConfig):
+        self.corpus = corpus
+        self.cfg = cfg
+        lengths = np.array([len(e["tokens"]) for e in corpus])
+        self.assignment = asg.assign(lengths, cfg.l_t)
+        if self.assignment.d0.size == 0 or self.assignment.d1.size == 0:
+            raise ValueError(
+                f"L_T={cfg.l_t} leaves an empty stream "
+                f"(|D0|={self.assignment.d0.size}, "
+                f"|D1|={self.assignment.d1.size}); pick L_T strictly inside "
+                f"the length range or None for Addax-WA")
+        s_full = cfg.s_full or self.assignment.l_max
+        self.s_full = _pad_len(s_full, cfg.pad_multiple)
+        wa = cfg.l_t is None or cfg.l_t >= self.assignment.l_max
+        self.l_short = self.s_full if wa else _pad_len(cfg.l_t,
+                                                       cfg.pad_multiple)
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, int(step)]))
+
+    def step_batches(self, step: int) -> tuple[dict, dict]:
+        """(batch0 ZO @ s_full, batch1 FO @ l_short) for one step."""
+        rng = self._rng(step)
+        i0 = rng.choice(self.assignment.d0, size=self.cfg.k0, replace=True)
+        i1 = rng.choice(self.assignment.d1, size=self.cfg.k1, replace=True)
+        return (_lm_batch(self.corpus, i0, self.s_full),
+                _lm_batch(self.corpus, i1, self.l_short))
+
+    def eval_batches(self, corpus: list[dict], batch: int):
+        """Fixed-shape eval batches over a held-out corpus (no shuffling)."""
+        pad = _pad_len(max(len(e["tokens"]) for e in corpus),
+                       self.cfg.pad_multiple)
+        for lo in range(0, len(corpus) - batch + 1, batch):
+            idx = np.arange(lo, lo + batch)
+            yield _lm_batch(corpus, idx, pad)
+
+
+def auto_plan(corpus: list[dict], hbm_budget_bytes: int, n_layers: int,
+              d_model: int, n_heads: int, k1: int = 4, k0: int = 6,
+              fo_quantile: float = 0.5) -> PipelineConfig:
+    """Appendix D.6 automated: pick L_T from the length distribution, then
+    back off the quantile until the FO activation-memory model fits the
+    budget.  Falls back to Addax-WA when even the full length fits."""
+    lengths = np.array([len(e["tokens"]) for e in corpus])
+    l_max = int(lengths.max())
+    if asg.memory_model(l_max, k1, n_layers, d_model,
+                        n_heads) <= hbm_budget_bytes:
+        return PipelineConfig(k0=k0, k1=k1, l_t=None)
+    q = fo_quantile
+    while q > 0.05:
+        l_t = asg.choose_l_t(lengths, q)
+        if (l_t < l_max and l_t >= int(lengths.min()) and
+                asg.memory_model(l_t, k1, n_layers, d_model,
+                                 n_heads) <= hbm_budget_bytes):
+            return PipelineConfig(k0=k0, k1=k1, l_t=l_t)
+        q -= 0.05
+    return PipelineConfig(k0=k0, k1=k1, l_t=int(lengths.min()))

@@ -1,0 +1,267 @@
+"""Fault tolerance: mesh-agnostic checkpoints, elastic resume, preemption
+flags, and a straggler watchdog.
+
+Design constraints for 1000+ node fleets:
+
+* **Mesh-agnostic checkpoints.** Arrays are saved as *logical* (fully
+  replicated host values) per leaf, so a job killed on a (2,16,16) mesh can
+  resume on (16,16) or any other shape — resharding happens at load via the
+  target sharding.  Addax has no optimizer state, so a checkpoint is just
+  ``params + step + pipeline seed`` — tiny restart cost, and the ZO stream
+  replays exactly from ``(seed, step)``.
+* **Atomicity.** Writes go to ``<dir>/tmp.<uuid>`` then ``os.replace`` to
+  ``step_<n>``; a crash mid-write never corrupts the latest checkpoint.
+  ``latest`` is discovered by scanning, not by a mutable pointer file.
+* **Async save.** Serialization happens on a background thread off the
+  device-host copy, keeping the training loop's checkpoint stall to the
+  device->host transfer only.
+* **Preemption.** SIGTERM (or a ``PREEMPT`` flag file, for fleets that
+  signal via filesystem) sets a flag the loop polls; the loop saves and
+  exits cleanly.
+* **Straggler watchdog.** Step-time EWMA; steps slower than
+  ``threshold x EWMA`` are logged with their step index — on real fleets
+  this feeds the scheduler's hot-spare swap; here it is a log + counter
+  (and is unit-tested with a fake clock).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import re
+import signal
+import threading
+import time
+import uuid
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+# --------------------------------------------------------------------------
+# Checkpoint store
+# --------------------------------------------------------------------------
+
+def _flatten_with_paths(tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat]
+
+
+class CheckpointStore:
+    """Atomic, numbered, mesh-agnostic checkpoints under ``root``."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "DONE")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save/load ---------------------------------------------------------
+    def save(self, step: int, params: Any, extra: dict | None = None):
+        """Synchronous atomic save of ``params`` (+ JSON-serializable
+        ``extra`` metadata: pipeline seed, rng base, metrics...)."""
+        tmp = os.path.join(self.root, f"tmp.{uuid.uuid4().hex}")
+        os.makedirs(tmp)
+        arrays = {}
+        for name, leaf in _flatten_with_paths(params):
+            arrays[name] = np.asarray(jax.device_get(leaf))
+        np.savez(os.path.join(tmp, "params.npz"), **arrays)
+        meta = {"step": int(step), "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        final = self._dir(step)
+        if os.path.exists(final):  # same-step re-save: drop the old one
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Load into the structure of ``like`` (a params pytree or abstract
+        tree).  ``shardings`` (same structure or a single Sharding) places
+        leaves onto the *current* mesh — elastic resume."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._dir(step)
+        with np.load(os.path.join(d, "params.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat:
+            name = jax.tree_util.keystr(path)
+            if name not in arrays:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            a = arrays[name]
+            if tuple(a.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {name}: ckpt {a.shape} vs "
+                    f"model {leaf.shape}")
+            leaves.append(a.astype(leaf.dtype))
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            params = jax.device_put(params, shardings)
+        return params, meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            import shutil
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread writer around ``CheckpointStore``.
+
+    ``save()`` blocks only for the device->host copy; serialization and
+    fsync happen off-thread.  ``wait()`` drains pending writes (call before
+    exit/restore)."""
+
+    def __init__(self, store: CheckpointStore):
+        self.store = store
+        self._q: queue.Queue = queue.Queue()
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_params, extra = item
+            try:
+                self.store.save(step, host_params, extra)
+            except Exception as e:  # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, params: Any, extra: dict | None = None):
+        if self._err:
+            raise self._err
+        host = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), params)
+        self._q.put((step, host, extra))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+# --------------------------------------------------------------------------
+# Preemption
+# --------------------------------------------------------------------------
+
+class PreemptionGuard:
+    """Cooperative preemption: SIGTERM or a flag file requests a clean
+    save-and-exit at the next step boundary."""
+
+    def __init__(self, flag_path: str | None = None,
+                 install_signal: bool = True):
+        self.flag_path = flag_path
+        self._event = threading.Event()
+        if install_signal:
+            try:
+                signal.signal(signal.SIGTERM, self._on_signal)
+            except ValueError:
+                pass  # not on the main thread (tests)
+
+    def _on_signal(self, *_):
+        self._event.set()
+
+    def request(self):
+        self._event.set()
+
+    def should_stop(self) -> bool:
+        if self._event.is_set():
+            return True
+        if self.flag_path and os.path.exists(self.flag_path):
+            return True
+        return False
+
+
+# --------------------------------------------------------------------------
+# Straggler watchdog
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ewma: float
+
+
+class StragglerWatchdog:
+    """EWMA step-time monitor.  ``observe`` returns a StragglerEvent when a
+    step exceeds ``threshold x EWMA`` (after ``warmup`` steps)."""
+
+    def __init__(self, threshold: float = 2.0, decay: float = 0.9,
+                 warmup: int = 5,
+                 clock: Callable[[], float] = time.monotonic):
+        self.threshold = threshold
+        self.decay = decay
+        self.warmup = warmup
+        self.clock = clock
+        self.ewma: float | None = None
+        self.events: list[StragglerEvent] = []
+        self._n = 0
+        self._t0: float | None = None
+
+    def start(self):
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> StragglerEvent | None:
+        assert self._t0 is not None, "start() not called"
+        dt = self.clock() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
+
+    def observe(self, step: int, duration: float) -> StragglerEvent | None:
+        self._n += 1
+        if self.ewma is None:
+            self.ewma = duration
+            return None
+        is_straggler = (self._n > self.warmup and
+                        duration > self.threshold * self.ewma)
+        ev = None
+        if is_straggler:
+            ev = StragglerEvent(step=step, duration=duration,
+                                ewma=self.ewma)
+            self.events.append(ev)
+        else:
+            # stragglers do not poison the EWMA
+            self.ewma = self.decay * self.ewma + (1 - self.decay) * duration
+        return ev

@@ -1,0 +1,83 @@
+"""Logical-axis sharding rules.
+
+Model code never mentions mesh axes; it tags tensors with *logical* axes
+("batch", "heads", "ffn", ...).  A ``ShardingCtx`` maps logical axes to
+mesh axes and applies ``with_sharding_constraint`` when a mesh is active.
+The same rules generate the parameter ``PartitionSpec`` trees consumed by
+``jax.jit(in_shardings=...)`` in the launcher, so activation and parameter
+sharding can never drift apart.
+
+Default layout (DESIGN.md §3):
+
+  batch        -> (pod, data)        data parallel
+  heads/kv/ffn -> model              megatron tensor parallel
+  vocab        -> model              sharded embeddings + logits
+  experts      -> model iff MoE runs in EP mode
+  cache_seq    -> model (+data at batch==1)   sequence-sharded KV caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def default_rules(data_axes: Sequence[str] = ("data",),
+                  model_axis: str = "model",
+                  moe_parallelism: str = "tp",
+                  shard_cache_seq: bool = True) -> dict[str, Any]:
+    rules = {
+        "batch": tuple(data_axes),
+        "seq": None,
+        # residual-stream carries between scanned layers; "model" under
+        # Megatron sequence parallelism (CellOptions.seq_shard_residual)
+        "seq_res": None,
+        "embed": None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "head_dim": None,
+        "ffn": model_axis,
+        "vocab": model_axis,
+        "layers": None,
+        "experts": model_axis if moe_parallelism == "ep" else None,
+        "expert_ffn": None if moe_parallelism == "ep" else model_axis,
+        "cache_batch": tuple(data_axes),
+        "cache_seq": model_axis if shard_cache_seq else None,
+        "cache_heads": None if shard_cache_seq else model_axis,
+        "state": None,
+        "conv": None,
+    }
+    return rules
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Maps logical axis names to mesh axes; no-op when disabled."""
+    rules: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    enabled: bool = False
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*[None if a is None else self.rules.get(a) for a in logical])
+
+    def constrain(self, x, *logical: str | None):
+        """Annotate an intermediate with its logical layout."""
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(*logical))
+
+
+# A module-level default used by model code when the launcher does not
+# inject a context (tests / CPU smoke runs): all constraints are no-ops.
+NULL_CTX = ShardingCtx()
+
+
+def tree_specs(logical_tree: Any, ctx: ShardingCtx) -> Any:
+    """Convert a pytree of logical-axis tuples into PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: ctx.spec(*axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(a is None or isinstance(a, str) for a in x))

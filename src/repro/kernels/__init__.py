@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §5):
+
+* ``zo_matmul``       — y = x @ (W + s*eps*z(seed)): the ZO forward's
+                        perturbed matmul with z generated in VMEM tiles
+                        (never materialized in HBM).
+* ``addax_update``    — fused theta' = theta - lr(alpha g0 z + (1-a) g1)
+                        streaming in-place update (covers MeZO/IP-SGD).
+* ``flash_attention`` — blockwise online-softmax causal attention with
+                        sliding window + logit softcap (gemma2), GQA.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+public wrapper), ref.py (pure-jnp oracle) and is swept against its oracle
+in tests/test_kernels_*.py under ``interpret=True`` (CPU container; TPU
+is the lowering target).
+"""
+
+from repro.kernels.addax_update import addax_update, mezo_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.zo_matmul import zo_matmul
+
+__all__ = ["addax_update", "mezo_update", "flash_attention", "zo_matmul"]

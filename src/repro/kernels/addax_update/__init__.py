@@ -1,0 +1,4 @@
+from repro.kernels.addax_update.ops import addax_update, mezo_update
+from repro.kernels.addax_update.ref import addax_update_ref
+
+__all__ = ["addax_update", "mezo_update", "addax_update_ref"]

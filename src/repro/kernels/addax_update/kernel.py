@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused Addax parameter update (paper Algorithm 1,
+steps 9-17, collapsed into one streaming pass).
+
+    theta' = theta - lr * (alpha * g0 * z(seed) + (1 - alpha) * g1)
+
+The paper's PyTorch code walks the layers twice (FO update during the
+backward sweep, then a second seed-replayed loop for the ZO term).  Here
+one kernel reads each theta tile once, regenerates the matching z tile in
+VMEM (same counters as the perturbation/zo_matmul kernels), applies both
+terms, and writes the tile back — with ``input_output_aliasing`` the
+update is literally in-place in HBM: zero extra parameter-sized buffers,
+the TPU equivalent of IP-SGD + MeZO's storage story.
+
+Also covers MeZO (alpha=1: g1 absent) and IP-SGD (alpha=0: z skipped) so
+the baselines share the memory property.
+
+The leaf is processed as a logical (rows, cols) matrix (trailing dim =
+cols), tiled (block_r, block_c); counters are global element indices so
+any tiling produces identical bits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.zo_matmul.kernel import tile_z
+
+
+def _update_kernel(scalars_ref, theta_ref, g1_ref, o_ref, *,
+                   leaf_id: int, alpha: float, block_r: int, block_c: int,
+                   with_fo: bool, with_zo: bool):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    seed = scalars_ref[0]
+    theta = theta_ref[...].astype(jnp.float32)
+    upd = jnp.zeros_like(theta)
+    if with_zo:
+        g0 = jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32)
+        z = tile_z(seed, leaf_id, jnp.uint32(i * block_r),
+                   jnp.uint32(j * block_c), block_r, block_c)
+        upd = upd + (alpha * g0) * z
+    if with_fo:
+        w = (1.0 - alpha) if with_zo else 1.0
+        upd = upd + w * g1_ref[...].astype(jnp.float32)
+    lr = jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32)
+    o_ref[...] = (theta - lr * upd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leaf_id", "alpha", "block_r", "block_c", "with_fo", "with_zo",
+    "interpret"))
+def addax_update_pallas(theta2d: jax.Array, g1_2d: jax.Array, g0, seed, lr,
+                        *, leaf_id: int, alpha: float, block_r: int = 256,
+                        block_c: int = 256, with_fo: bool = True,
+                        with_zo: bool = True,
+                        interpret: bool = False) -> jax.Array:
+    """theta2d/g1_2d: (R, C) tile-aligned.  Scalars (seed, g0, lr) ride in
+    one SMEM vector; g0/lr are fp32 bitcast to uint32 (SMEM scalar refs
+    are single-dtype)."""
+    r, c = theta2d.shape
+    assert r % block_r == 0 and c % block_c == 0, ((r, c),
+                                                   (block_r, block_c))
+    scalars = jnp.stack([
+        jnp.asarray(seed, jnp.uint32),
+        jax.lax.bitcast_convert_type(jnp.asarray(g0, jnp.float32),
+                                     jnp.uint32),
+        jax.lax.bitcast_convert_type(jnp.asarray(lr, jnp.float32),
+                                     jnp.uint32)])
+    kernel = functools.partial(
+        _update_kernel, leaf_id=leaf_id, alpha=alpha, block_r=block_r,
+        block_c=block_c, with_fo=with_fo, with_zo=with_zo)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block_r, c // block_c),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), theta2d.dtype),
+        input_output_aliases={1: 0},       # theta updated in place
+        interpret=interpret,
+    )(scalars, theta2d, g1_2d)

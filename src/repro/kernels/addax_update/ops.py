@@ -1,0 +1,71 @@
+"""Jitted wrappers: leaf-shaped (any rank) fused Addax/MeZO updates.
+
+Leaves are viewed as (rows, cols) with cols = trailing dim — the same
+logical layout ``repro.core.rng.leaf_z`` uses — padded to tile multiples
+(padded z values are generated but their updates are sliced away; real
+elements keep their global counters, so results are tiling-invariant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.addax_update.kernel import addax_update_pallas
+
+
+def _as2d(x: jax.Array):
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    cols = x.shape[-1]
+    rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
+    return x.reshape(rows, cols)
+
+
+def _pad_tiles(x: jax.Array, br: int, bc: int):
+    pr = (-x.shape[0]) % br
+    pc = (-x.shape[1]) % bc
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "block_r",
+                                             "block_c", "interpret"))
+def addax_update(theta: jax.Array, g1: jax.Array, g0, seed, lr, *,
+                 leaf_id: int, alpha: float, block_r: int = 256,
+                 block_c: int = 256, interpret: bool = False) -> jax.Array:
+    """theta' = theta - lr*(alpha*g0*z + (1-alpha)*g1), any leaf shape."""
+    shape = theta.shape
+    t2 = _as2d(theta)
+    g2 = _as2d(g1.astype(theta.dtype))
+    br = min(block_r, max(8, t2.shape[0]))
+    bc = min(block_c, t2.shape[1])
+    tp = _pad_tiles(t2, br, bc)
+    gp = _pad_tiles(g2, br, bc)
+    out = addax_update_pallas(tp, gp, g0, seed, lr, leaf_id=leaf_id,
+                              alpha=alpha, block_r=br, block_c=bc,
+                              with_fo=True, with_zo=True,
+                              interpret=interpret)
+    return out[:t2.shape[0], :t2.shape[1]].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_id", "block_r",
+                                             "block_c", "interpret"))
+def mezo_update(theta: jax.Array, g0, seed, lr, *, leaf_id: int,
+                block_r: int = 256, block_c: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """MeZO special case: theta' = theta - lr*g0*z (alpha = 1)."""
+    shape = theta.shape
+    t2 = _as2d(theta)
+    br = min(block_r, max(8, t2.shape[0]))
+    bc = min(block_c, t2.shape[1])
+    tp = _pad_tiles(t2, br, bc)
+    out = addax_update_pallas(tp, tp, g0, seed, lr, leaf_id=leaf_id,
+                              alpha=1.0, block_r=br, block_c=bc,
+                              with_fo=False, with_zo=True,
+                              interpret=interpret)
+    return out[:t2.shape[0], :t2.shape[1]].reshape(shape)

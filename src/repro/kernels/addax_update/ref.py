@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused Addax update (paper eq. 3):
+
+    theta' = theta - lr * (alpha * g0 * z(seed) + (1 - alpha) * g1)
+
+z regenerated from ``repro.core.rng.leaf_z`` — identical bits to the
+kernel's per-tile threefry and to the perturbation passes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
+                     leaf_id: int, lr, alpha: float) -> jax.Array:
+    z = rng.leaf_z(seed, leaf_id, theta.shape, jnp.float32)
+    upd = alpha * g0 * z
+    if g1 is not None:
+        upd = upd + (1.0 - alpha) * g1.astype(jnp.float32)
+    return (theta.astype(jnp.float32) - lr * upd).astype(theta.dtype)

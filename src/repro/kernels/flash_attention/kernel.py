@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: blockwise online-softmax causal attention
+(FlashAttention re-tiled for VMEM/MXU), with GQA, sliding window (gemma2
+local layers) and logit softcap.
+
+Addax runs *two* full forward passes per ZO batch on top of the FO pass,
+so attention is ~2x hotter than in plain SGD fine-tuning — that is what
+earns it a kernel (DESIGN.md §5).  The S x S score matrix never exists:
+each (block_q, block_kv) tile of scores lives in VMEM, is folded into the
+running (m, l, acc) statistics, and is discarded.
+
+Grid: (B, H, n_q, n_kv) — n_kv innermost, so the fp32 accumulator and the
+softmax stats persist in VMEM scratch across the kv sweep of one q tile
+(TPU grids execute sequentially).  GQA: the k/v BlockSpec index maps head
+h to kv-head h // G, so kv tiles are fetched once per group sweep.
+Non-causal (q, kv) pairs are skipped with ``pl.when`` — their compute
+cost is zero; their prefetch is the standard TPU flash trade.
+
+Softmax stats are kept as (block_q, 128) lane-replicated tiles (TPU VREG
+layout); only lane 0 is meaningful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_kv: int, n_kv: int,
+                  window: int | None, softcap: float | None, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = i * block_q
+    k0 = j * block_kv
+    # block-level liveness: any (q, kv) pair with kv <= q (causal) and
+    # q - kv < window (local)
+    live = True
+    if causal:
+        live = k0 <= q0 + block_q - 1
+        if window is not None:
+            live = jnp.logical_and(live,
+                                   q0 + block_q - 1 - (k0 + block_kv - 1)
+                                   < window + block_q + block_kv)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bkv)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            qpos = q0 + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = k0 + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            rel = qpos - kpos
+            mask = rel >= 0
+            if window is not None:
+                mask = jnp.logical_and(mask, rel < window)
+            s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]                               # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)           # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                              # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "causal", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           causal: bool = True, block_q: int = 512,
+                           block_kv: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, hd); k/v: (B, K, S, hd); H = K*G.  S must tile."""
+    b, h, s, hd = q.shape
+    kheads = k.shape[1]
+    g = h // kheads
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    n_q, n_kv = s // block_q, s // block_kv
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        n_kv=n_kv, window=window, softcap=softcap, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bb, hh, i, j: (bb, hh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Jitted wrapper for the flash-attention kernel: (B, S, H, hd)-layout
+convenience entry (the model layer's layout), padding of odd sequence
+lengths, and the interpret switch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "causal", "block_q", "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int | None = None,
+                    softcap: float | None = None, causal: bool = True,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) -> (B, S, H, hd).
+
+    Sequences are zero-padded to the block multiple; padded *key* rows are
+    masked by causality (pad queries attend garbage but are sliced away).
+    """
+    b, s, h, hd = q.shape
+    bq = min(block_q, s)
+    bkv = min(block_kv, s)
+    blk = max(bq, bkv)
+    pad = (-s) % blk
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(qt, kt, vt, window=window,
+                                 softcap=softcap, causal=causal,
+                                 block_q=bq, block_kv=bkv,
+                                 interpret=interpret)
+    return jnp.swapaxes(out[:, :, :s], 1, 2)

@@ -1,0 +1,38 @@
+"""Dense-softmax oracle for the flash-attention kernel.
+
+q: (B, H, S, hd); k/v: (B, K, S, hd) with H = K * G (GQA).  Causal, with
+optional sliding window and logit softcap (gemma2).  fp32 math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int | None = None,
+                  softcap: float | None = None,
+                  causal: bool = True) -> jax.Array:
+    b, h, s, hd = q.shape
+    kheads = k.shape[1]
+    g = h // kheads
+    qf = q.astype(jnp.float32).reshape(b, kheads, g, s, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qf, kf) / np.sqrt(hd)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        rel = qpos - kpos
+        mask = rel >= 0
+        if window is not None:
+            mask = mask & (rel < window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return out.reshape(b, h, s, hd).astype(q.dtype)

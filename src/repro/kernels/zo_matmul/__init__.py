@@ -1,0 +1,4 @@
+from repro.kernels.zo_matmul.ops import zo_matmul
+from repro.kernels.zo_matmul.ref import zo_matmul_ref
+
+__all__ = ["zo_matmul", "zo_matmul_ref"]

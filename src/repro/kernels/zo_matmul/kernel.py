@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: perturbed matmul ``y = x @ (W + s*eps*z(seed))``.
+
+TPU-native adaptation of MeZO's in-place perturbation (DESIGN.md §2): on
+GPU/PyTorch the perturbation mutates the weights in place, storing only
+the RNG seed.  Under XLA we go one step further — the perturbation never
+exists in HBM at all.  Each (K, N) weight tile is loaded into VMEM, an
+``eps * z`` tile is generated *in registers* from the counter-based
+threefry (keyed on the tile's global element indices, so the bits match
+``repro.core.rng.leaf_z`` element-for-element), added, and fed to the
+MXU.  Both ZO forward passes stream W once each; z costs zero bytes of
+HBM traffic — the memory footprint of the ZO pass is exactly inference.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the fp32 accumulator tile stays
+resident in VMEM across the contraction (standard Pallas matmul pattern).
+Block shapes default to MXU-aligned (128, 128, 512).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+
+
+def _rotl32(x, r):
+    return (x << r) | (x >> (32 - r))
+
+
+def _threefry2x32(k0, k1, c0, c1):
+    """Same 20-round threefry as repro.core.rng (jnp-only, runs in-kernel)."""
+    ks2 = k0 ^ k1 ^ _PARITY
+    ks = (k0, k1, ks2)
+    x0 = c0 + ks[0]
+    x1 = c1 + ks[1]
+    for d in range(5):
+        for r in _ROTATIONS[d % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(d + 1) % 3]
+        x1 = x1 + ks[(d + 2) % 3] + jnp.uint32(d + 1)
+    return x0, x1
+
+
+def _bits_to_unit_open(bits):
+    top = (bits >> 8).astype(jnp.float32)
+    return (top + 0.5) * jnp.float32(1.0 / (1 << 24))
+
+
+def tile_z(seed, leaf_id, row0, col0, rows: int, cols: int):
+    """N(0,1) tile of shape (rows, cols) whose element (i, j) equals the
+    full-leaf z at global index (row0+i, col0+j) — pure function of the
+    counters, so kernel tiles, the jnp reference, and any mesh layout all
+    agree bit-for-bit."""
+    r = row0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    c = col0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    b0, b1 = _threefry2x32(jnp.uint32(seed), jnp.uint32(leaf_id), r, c)
+    u1 = _bits_to_unit_open(b0)
+    u2 = _bits_to_unit_open(b1)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(
+        jnp.float32(2.0 * np.pi) * u2)
+
+
+def _zo_matmul_kernel(seed_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                      leaf_id: int, eps: float, sign: float,
+                      block_k: int, n_k: int):
+    """One (bm, bn) output tile, iterated over the K grid dimension."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # regenerate this (bk, bn) weight tile's z in VMEM/registers
+    j = pl.program_id(1)
+    row0 = k_idx * block_k
+    col0 = j * w_ref.shape[1]
+    z = tile_z(seed_ref[0], leaf_id, jnp.uint32(row0), jnp.uint32(col0),
+               w_ref.shape[0], w_ref.shape[1])
+    w_pert = w_ref[...].astype(jnp.float32) + (sign * eps) * z
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w_pert,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leaf_id", "eps", "sign", "block_m", "block_n", "block_k", "interpret"))
+def zo_matmul_pallas(x: jax.Array, w: jax.Array, seed, *, leaf_id: int,
+                     eps: float, sign: float = 1.0, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ perturbed w: (K, N) -> (M, N).  Shapes must tile evenly
+    (``ops.zo_matmul`` pads otherwise)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    n_k = k // block_k
+
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(
+        _zo_matmul_kernel, leaf_id=leaf_id, eps=eps, sign=sign,
+        block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),      # seed (scalar)
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.uint32).reshape(1), x, w)

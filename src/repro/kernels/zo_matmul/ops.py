@@ -1,0 +1,51 @@
+"""Jitted public wrapper for the ``zo_matmul`` kernel.
+
+Handles batched inputs ((..., M, K) collapsed to 2-D), non-tile-aligned
+shapes (zero-padding — z counters are keyed on *global* indices, so
+padding never shifts the random field of real elements), and the
+``interpret=True`` CPU validation path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zo_matmul.kernel import zo_matmul_pallas
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leaf_id", "eps", "sign", "block_m", "block_n", "block_k", "interpret"))
+def zo_matmul(x: jax.Array, w: jax.Array, seed, *, leaf_id: int,
+              eps: float, sign: float = 1.0, block_m: int = 128,
+              block_n: int = 128, block_k: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """y = x @ (W + sign*eps*z(seed, leaf_id)) for x: (..., M, K)."""
+    batch_shape = x.shape[:-2]
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    x2 = x.reshape(m, x.shape[-1])
+    k, n = w.shape
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    xp = _pad_to(x2, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    y = zo_matmul_pallas(xp, wp, seed, leaf_id=leaf_id, eps=eps, sign=sign,
+                         block_m=bm, block_n=bn, block_k=bk,
+                         interpret=interpret)
+    y = y[:m, :n]
+    return y.reshape(*batch_shape, x.shape[-2] if batch_shape else m, n) \
+        if batch_shape else y

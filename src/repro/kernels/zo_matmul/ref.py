@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the ``zo_matmul`` kernel:
+
+    y = x @ (W + s * eps * z(seed))
+
+where ``z[i, j] = threefry_normal(seed, leaf_id, i, j)`` — exactly the
+bits ``repro.core.rng.leaf_z`` produces for leaf ``leaf_id`` of shape
+``W.shape``.  The oracle materializes z in full; the kernel regenerates it
+tile-by-tile in VMEM and never writes it to HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def zo_matmul_ref(x: jax.Array, w: jax.Array, seed, leaf_id: int,
+                  eps: float, sign: float = 1.0) -> jax.Array:
+    """x: (M, K); w: (K, N) -> (M, N) in x.dtype (fp32 accumulation)."""
+    z = rng.leaf_z(seed, leaf_id, w.shape, jnp.float32)
+    w_pert = w.astype(jnp.float32) + (sign * eps) * z
+    return jnp.dot(x.astype(jnp.float32), w_pert,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

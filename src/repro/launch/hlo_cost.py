@@ -1,0 +1,391 @@
+"""Post-SPMD HLO cost model: FLOPs / HBM bytes / collective bytes with
+*while-loop trip counts applied*.
+
+``compiled.cost_analysis()`` visits every computation once — a
+``lax.scan`` over 40 layers is counted as one layer, which would make the
+roofline off by the model depth.  This parser rebuilds the cost from
+``compiled.as_text()``:
+
+  * a symbol table per computation resolves bare ``%operand`` references
+    to shapes (post-partitioning = **per-device** shapes),
+  * ``dot`` FLOPs = 2 x prod(result dims) x prod(contracted lhs dims),
+  * HBM bytes are boundary-accounted: fusions/standalone ops contribute
+    operand + result bytes; tuple plumbing (parameter/gte/tuple/bitcast)
+    contributes nothing,
+  * collective bytes = operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async ``-start``
+    counted once),
+  * ``while`` multiplies its body+condition cost by the trip count
+    recovered from the condition's ``compare(iter, constant)`` literal.
+
+Everything is per-device (the SPMD module is the per-device program).
+Validated against known-FLOP probes in ``tests/test_hlo_cost.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "token": 0, "opaque": 0,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all",
+               "collective-broadcast")
+
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "after-all", "partition-id",
+               "replica-id", "opt-barrier"}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_ARRAY_SHAPE = re.compile(r"^([a-z0-9]+)\[[\d,]*\](?:\{[^}]*\})?")
+_OP_CALL = re.compile(r"^\s*([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_COUNT = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_ATTR_CALLS = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND = re.compile(r"%?([\w.\-]+)")
+_CONSTANT_VAL = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes_one(dtype: str, dims: str) -> tuple[int, tuple[int, ...]]:
+    shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4), shape
+
+
+def _parse_shape(text: str) -> tuple[int, list[tuple[int, ...]]]:
+    """bytes + list of array shapes in a (possibly tuple) shape string."""
+    total, shapes = 0, []
+    for dtype, dims in _SHAPE_TOKEN.findall(text):
+        if dtype in _DTYPE_BYTES or dtype not in ("", None):
+            b, s = _shape_bytes_one(dtype, dims)
+            total += b
+            shapes.append(s)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_shapes: list
+    operands: list[str]
+    calls: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0) + v * mult
+
+
+def _split_operands(arg_str: str) -> list[str]:
+    """Operand names from the call-paren region of an instruction line."""
+    depth, out, cur = 0, [], []
+    for ch in arg_str:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    names = []
+    for tok in out:
+        m = _OPERAND.search(tok.strip())
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, dict[str, Instr]] = {}
+        self.order: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        self._cost_memo: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------ parsing
+    def _parse(self, text: str):
+        cur: str | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line or line.lstrip().startswith("//"):
+                continue
+            if not line.startswith(" ") and line.endswith("{") and \
+                    "=" not in line.split("(")[0]:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = {}
+                    self.order[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                continue
+            hm = _INSTR_HEAD.match(line)
+            if not hm:
+                continue
+            name = hm.group(1)
+            tail = line[hm.end():]
+            if tail.startswith("("):       # tuple-typed result: scan parens
+                depth, i = 0, 0
+                for i, ch in enumerate(tail):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                shape_txt, tail = tail[:i + 1], tail[i + 1:]
+            else:
+                sm = _ARRAY_SHAPE.match(tail)
+                if not sm:
+                    continue
+                shape_txt, tail = sm.group(0), tail[sm.end():]
+            om = _OP_CALL.match(tail)
+            if not om:
+                continue
+            op = om.group(1)
+            rest = tail[om.end():]
+            rbytes, rshapes = _parse_shape(shape_txt)
+            # paren-matched operand region
+            operands = _split_operands(rest)
+            calls = _ATTR_CALLS.findall(rest)
+            bm = _BRANCHES.search(rest)
+            if bm:
+                calls += [c.strip().lstrip("%")
+                          for c in bm.group(1).split(",")]
+            instr = Instr(name=name, op=op, result_bytes=rbytes,
+                          result_shapes=rshapes, operands=operands,
+                          calls=calls, attrs=rest)
+            self.computations[cur][name] = instr
+            self.order[cur].append(instr)
+
+    # ------------------------------------------------------- shape lookup
+    def _operand_bytes(self, comp: str, names: list[str]) -> int:
+        table = self.computations[comp]
+        return sum(table[n].result_bytes for n in names if n in table)
+
+    def _boundary_bytes(self, comp: str, ins: Instr) -> int:
+        """HBM traffic of one executed instruction: result + operands,
+        EXCEPT in-place dynamic-update-slice (op or fusion root): XLA
+        aliases the donated buffer, so only the update slice moves — the
+        full buffer is neither re-read nor re-written.  (KV-cache decode
+        writes would otherwise be charged the whole cache per token.)"""
+        b = ins.result_bytes + self._operand_bytes(comp, ins.operands)
+        if ins.op == "dynamic-update-slice" or (
+                ins.op == "fusion" and "dynamic-update-slice" in ins.name):
+            table = self.computations[comp]
+            for n in ins.operands:
+                if n in table and \
+                        table[n].result_bytes == ins.result_bytes:
+                    b -= 2 * ins.result_bytes
+                    break
+            b = max(b, 0)
+        return b
+
+    def _operand_shape(self, comp: str, name: str):
+        table = self.computations[comp]
+        if name in table and table[name].result_shapes:
+            return table[name].result_shapes[0]
+        return None
+
+    # -------------------------------------------------------- trip counts
+    def trip_count(self, while_attrs: str, cond_comp: str | None) -> int:
+        """Trip count from ``backend_config known_trip_count`` (preferred)
+        or the largest integer constant in the condition computation
+        (scan conditions are ``compare(iter, N)``); 1 if unrecoverable."""
+        m = _TRIP_COUNT.search(while_attrs)
+        if m:
+            return max(int(m.group(1)), 1)
+        best = 0
+        for ins in self.order.get(cond_comp or "", []):
+            if ins.op == "constant":
+                cm = re.match(r"(\d+)\)", ins.attrs)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+        return best if best > 0 else 1
+
+    # --------------------------------------------------------------- cost
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._cost_memo:
+            return self._cost_memo[comp]
+        total = Cost()
+        self._cost_memo[comp] = total  # break cycles defensively
+        for ins in self.order.get(comp, []):
+            op = ins.op
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                trips = self.trip_count(ins.attrs,
+                                        cm.group(1) if cm else None)
+                if bm:
+                    total.add(self.computation_cost(bm.group(1)), trips)
+                continue
+            if op == "conditional":
+                for c in ins.calls:
+                    total.add(self.computation_cost(c), 1.0)
+                total.bytes += ins.result_bytes
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter"):
+                for c in ins.calls:
+                    sub = self.computation_cost(c)
+                    # fusion bodies never touch HBM; only flops escape
+                    total.flops += sub.flops
+                    total.transcendentals += sub.transcendentals
+                    total.coll_bytes += sub.coll_bytes
+                    for k, v in sub.coll_by_op.items():
+                        total.coll_by_op[k] = total.coll_by_op.get(k, 0) + v
+                total.bytes += self._boundary_bytes(comp, ins)
+                continue
+            if op == "dot":
+                k = 1
+                cm = _CONTRACT.search(ins.attrs)
+                lhs_shape = self._operand_shape(comp, ins.operands[0]) \
+                    if ins.operands else None
+                if cm and lhs_shape is not None:
+                    for di in cm.group(1).split(","):
+                        if di != "":
+                            k *= lhs_shape[int(di)]
+                n_out = 1
+                for d in (ins.result_shapes[0] if ins.result_shapes else ()):
+                    n_out *= d
+                total.flops += 2.0 * n_out * k
+                total.bytes += self._boundary_bytes(comp, ins)
+                continue
+            if op == "convolution":
+                # 2 * out_elems * (in_features * kernel_spatial): recover
+                # from operand shapes via dim_labels is overkill here; use
+                # operand-1 (kernel) full size as the per-output work.
+                kshape = self._operand_shape(comp, ins.operands[1]) \
+                    if len(ins.operands) > 1 else None
+                n_out = 1
+                for d in (ins.result_shapes[0] if ins.result_shapes else ()):
+                    n_out *= d
+                kelems = 1
+                for d in (kshape or ()):
+                    kelems *= d
+                total.flops += 2.0 * n_out * max(kelems, 1)
+                total.bytes += self._boundary_bytes(comp, ins)
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                ob = self._operand_bytes(comp, ins.operands)
+                total.coll_bytes += ob
+                total.coll_by_op[base] = total.coll_by_op.get(base, 0) + ob
+                total.bytes += ins.result_bytes + ob
+                continue
+            if op in _NO_TRAFFIC:
+                continue
+            # generic op: elementwise-ish; bytes = boundary, flops ~ out
+            total.bytes += self._boundary_bytes(comp, ins)
+            if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                      "power", "sine", "cosine", "logistic"):
+                n_out = 1
+                for d in (ins.result_shapes[0] if ins.result_shapes else ()):
+                    n_out *= d
+                total.transcendentals += n_out
+            elif op in ("add", "subtract", "multiply", "divide", "maximum",
+                        "minimum", "negate", "select", "compare", "and",
+                        "or", "xor", "clamp"):
+                n_out = 1
+                for d in (ins.result_shapes[0] if ins.result_shapes else ()):
+                    n_out *= d
+                total.flops += n_out
+        self._cost_memo[comp] = total
+        return total
+
+    def total_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).total_cost()
+
+
+def _comp_multipliers(mod: HloModule) -> dict[str, float]:
+    """HBM-boundary execution multiplier per computation: while bodies
+    multiply by trip count; fusion bodies get 0 (their instructions never
+    touch HBM — the fusion call site carries the boundary bytes)."""
+    mult: dict[str, float] = {}
+
+    def visit(comp: str, m: float):
+        mult[comp] = mult.get(comp, 0.0) + m
+        for ins in mod.order.get(comp, []):
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                trips = mod.trip_count(ins.attrs,
+                                       cm.group(1) if cm else None)
+                if bm:
+                    visit(bm.group(1), m * trips)
+            elif ins.op in ("call", "conditional"):
+                for c in ins.calls:
+                    visit(c, m)
+            # fusion bodies: boundary bytes live at the call site
+
+    if mod.entry:
+        visit(mod.entry, 1.0)
+    return mult
+
+
+def top_instructions(hlo_text: str, k: int = 15) -> list[dict]:
+    """Top-k instructions by trip-weighted boundary bytes — the §Perf
+    profiling view (what to fix next)."""
+    mod = HloModule(hlo_text)
+    mult = _comp_multipliers(mod)
+    rows = []
+    for comp, instrs in mod.order.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        for ins in instrs:
+            if ins.op in _NO_TRAFFIC:
+                continue
+            b = mod._boundary_bytes(comp, ins) * m
+            if b > 0:
+                rows.append({"bytes": b, "op": ins.op, "name": ins.name,
+                             "mult": m, "comp": comp})
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:k]

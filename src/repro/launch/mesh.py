@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Single pod:  (16, 16)   = 256 chips, axes (data, model)
+Multi-pod:   (2, 16, 16) = 512 chips, axes (pod, data, model)
+
+``make_production_mesh`` is a *function* (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests keep the real 1-device CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh for CPU multi-device tests (needs the XLA flag set)."""
+    return _mk((n_data, n_model), ("data", "model"))
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_degree(mesh) -> int:
+    size = 1
+    for a in data_axes_of(mesh):
+        size *= mesh.shape[a]
+    return size

@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Per (arch x shape x mesh) cell we derive three per-step time lower bounds
+on the TPU v5e target:
+
+  compute    = HLO_FLOPs            / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes_accessed   / (chips x 819e9  B/s HBM)
+  collective = collective_bytes     / (chips x 50e9   B/s ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the *post-partitioning* HLO (``compiled.as_text()``) by
+summing operand sizes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (async ``-start`` variants counted once,
+``-done`` skipped).  The dominant term is the bottleneck §Perf iterates
+on; MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+algorithmically useful (catches remat/padding waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per-device (cost_analysis convention)
+    hlo_bytes: float
+    coll_bytes: float            # per-device collective operand bytes
+    model_flops: float           # algorithmic 6ND-style FLOPs (global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+    coll_detail: dict = dataclasses.field(default_factory=dict)
+    memory_stats: dict = dataclasses.field(default_factory=dict)
+
+    def finalize(self) -> "RooflineTerms":
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        denom = self.hlo_flops * self.chips
+        self.useful_ratio = (self.model_flops / denom) if denom else 0.0
+        return self
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float) -> RooflineTerms:
+    """All quantities are **per device**: the post-SPMD module (parsed by
+    ``repro.launch.hlo_cost`` with while-loop trip counts applied) is the
+    per-device program.  ``compiled.cost_analysis()`` is kept as a
+    cross-check (it undercounts loops — body visited once)."""
+    from repro.launch import hlo_cost
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    parsed = hlo_cost.analyze_text(compiled.as_text())
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem["error"] = repr(e)
+    mem["xla_flops_while_once"] = float(cost.get("flops", 0.0))
+    mem["xla_bytes_while_once"] = float(cost.get("bytes accessed", 0.0))
+    top = hlo_cost.top_instructions(compiled.as_text(), k=12)
+    rt = RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=parsed.flops, hlo_bytes=parsed.bytes,
+        coll_bytes=parsed.coll_bytes, model_flops=model_flops,
+        coll_detail={"by_op": parsed.coll_by_op, "top_bytes": top},
+        memory_stats=mem)
+    return rt.finalize()
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS accounting (6ND-style, per DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+def count_params(bundle) -> dict:
+    """{"total": N, "active": N_active} from the PSpec tree.  ``active``
+    discounts unrouted experts (MoE: only top_k of E experts touch a
+    token)."""
+    import numpy as np
+    specs = bundle.param_specs()
+    total = 0
+    expert = 0
+    import jax
+    from repro.models.common import PSpec
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, PSpec))
+    for s in leaves:
+        n = int(np.prod(s.shape, dtype=np.int64))
+        total += n
+        if "experts" in s.axes:
+            expert += n
+    active = total
+    m = bundle.mcfg
+    moe = getattr(m, "moe_cfg", None)
+    if moe is not None and expert:
+        active = total - expert + expert * moe.top_k / moe.n_experts
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops_for(bundle, shape, notes: dict) -> float:
+    """Algorithmic FLOPs of one step (global, matmul-only 6ND model):
+
+      train (Addax) : 6 N (K1 L_T)  +  2 x 2 N (K0 S)   (FO bwd+fwd, 2 ZO fwd)
+      prefill       : 2 N (B S)
+      decode        : 2 N B          (one token; attention reads excluded —
+                                      they land in the memory term)
+    """
+    n = count_params(bundle)["active"]
+    if shape.kind == "train":
+        cell = notes.get("cell", {})
+        k0, k1 = cell.get("k0"), cell.get("k1")
+        s, lt = cell.get("s_full"), cell.get("l_t")
+        return 6.0 * n * (k1 * lt) + 4.0 * n * (k0 * s)
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def render_table(rows: list[RooflineTerms]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.mesh:10s} "
+            f"{r.compute_s:10.4g} {r.memory_s:10.4g} "
+            f"{r.collective_s:10.4g} {r.dominant:>10s} "
+            f"{r.useful_ratio:7.3f}")
+    return "\n".join(lines)
+
+
+def save_json(rows: list[RooflineTerms], path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_json() for r in rows], f, indent=1)

@@ -1,0 +1,267 @@
+"""Step builders: bind (arch bundle x shape cell x mesh x options) to a
+jitted train/serve step with full in/out shardings, ready to ``.lower()``.
+
+This is the single place where logical axes meet mesh axes — the dry-run,
+the real launcher, and the roofline harness all consume ``plan_cell``.
+
+``CellOptions`` carries the §Perf tuning knobs (sharding scheme variants,
+remat policy, MoE parallelism, attention impl, dtypes) so hillclimb
+iterations are config diffs, not code forks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.core import schedules
+from repro.core.addax import AddaxConfig, make_addax_step
+from repro.distributed import sharding as shd
+from repro.launch.mesh import data_axes_of
+from repro.models.registry import Bundle, plan_train_cell
+
+
+@dataclasses.dataclass(frozen=True)
+class CellOptions:
+    """§Perf knobs.  Defaults = paper-faithful baseline."""
+    param_dtype: Any = jnp.bfloat16
+    moe_parallelism: str = "tp"        # tp | ep
+    shard_cache_seq: bool = True
+    cache_seq_over_data: bool = False  # long_500k: also use idle data axis
+    seq_shard_residual: bool = False   # Megatron-SP residual stream
+    train_impl: str = "dense"          # dense | chunked attention (train)
+    prefill_impl: str = "chunked"
+    optimizer: str = "addax"           # addax | ipsgd | mezo (train cells)
+    remat: str = ""                    # ""=arch default | none | full | dots
+    scores_f32: bool = True            # False: bf16 softmax (16-bit paper
+                                       # mode; halves S^2 chain traffic)
+    alpha: float = 5e-4
+    eps: float = 1e-3
+    lr: float = 1e-4
+    replicate_small_kv: bool = True    # kv_heads unsharded when < TP degree
+                                       # (Megatron GQA practice; False forces
+                                       # GSPMD padding — §Perf ablation)
+    decode_2d_tp: bool = False         # batch==1 decode: shard ffn/vocab
+                                       # weights over (data x model) — 256-way
+                                       # 2D TP so per-step param reads shrink
+                                       # 16x (beyond-paper, §Perf)
+
+
+def build_ctx(bundle: Bundle, mesh, opts: CellOptions,
+              batch_one: bool = False) -> shd.ShardingCtx:
+    data_axes = data_axes_of(mesh)
+    rules = shd.default_rules(
+        data_axes=data_axes, model_axis="model",
+        moe_parallelism=opts.moe_parallelism,
+        shard_cache_seq=opts.shard_cache_seq)
+    if (opts.cache_seq_over_data or batch_one) and opts.shard_cache_seq:
+        # batch==1 decode: the data axis is idle on the batch dim; fold it
+        # into the cache's sequence sharding instead of wasting it.
+        rules["cache_seq"] = data_axes + ("model",)
+        rules["cache_batch"] = None
+    elif batch_one:
+        rules["cache_batch"] = None
+    if opts.seq_shard_residual:
+        rules["seq_res"] = "model"
+    if opts.decode_2d_tp and batch_one:
+        # one-request decode: every axis of the mesh works on the weights
+        rules["batch"] = None
+        rules["ffn"] = data_axes + ("model",)
+        rules["expert_ffn"] = data_axes + ("model",) \
+            if opts.moe_parallelism != "ep" else rules["expert_ffn"]
+        rules["vocab"] = data_axes + ("model",)
+    if opts.replicate_small_kv:
+        m = bundle.mcfg
+        if getattr(m, "n_kv", 0) and m.n_kv < mesh.shape["model"]:
+            rules["kv_heads"] = None
+    return shd.ShardingCtx(rules=rules, enabled=True)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _sharding_tree(axes_tree: Any, ctx: shd.ShardingCtx, mesh,
+                   shapes: Any = None):
+    """Logical-axes tree -> NamedSharding tree.  When ``shapes`` (a matching
+    tree of ShapeDtypeStructs/PSpecs) is given, any dim not divisible by its
+    mesh-axis product is replicated instead — pjit rejects uneven *argument*
+    shardings (internal constraints pad, arguments may not)."""
+    is_axes = lambda x: isinstance(x, tuple) and \
+        all(a is None or isinstance(a, str) for a in x)
+
+    def one(axes, sds=None):
+        spec = ctx.spec(*axes)
+        if sds is not None:
+            entries = list(spec)
+            for i, dim in enumerate(sds.shape):
+                if i < len(entries) and dim % _axis_size(mesh,
+                                                         entries[i]) != 0:
+                    entries[i] = None
+            spec = P(*entries)
+        return NamedSharding(mesh, spec)
+
+    if shapes is None:
+        return jax.tree_util.tree_map(one, axes_tree, is_leaf=is_axes)
+    return jax.tree_util.tree_map(one, axes_tree, shapes, is_leaf=is_axes)
+
+
+def _batch_shardings(batch_struct: Any, mesh, data_axes,
+                     batch_one: bool = False):
+    """Leading (batch) dim over the data axes; everything else replicated."""
+    spec = P() if batch_one else P(
+        data_axes if len(data_axes) > 1 else data_axes[0])
+
+    def one(sds):
+        return NamedSharding(mesh, P(*(
+            [spec[0] if spec else None] + [None] * (len(sds.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, batch_struct)
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower/compile one checklist cell."""
+    arch_id: str
+    shape: ShapeCfg
+    kind: str                  # train | prefill | decode
+    jitted: Any                # jitted callable
+    abstract_args: tuple       # args of ShapeDtypeStructs
+    notes: dict                # flops accounting inputs etc.
+
+    def lower(self):
+        return self.jitted.lower(*self.abstract_args)
+
+
+# --------------------------------------------------------------------------
+# Train cells
+# --------------------------------------------------------------------------
+
+def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
+                opts: CellOptions) -> CellPlan:
+    ctx = build_ctx(bundle, mesh, opts)
+    data_axes = data_axes_of(mesh)
+    loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
+    acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha)
+    lr_fn = schedules.constant(opts.lr)
+
+    cell = plan_train_cell(bundle.arch, shape)
+    b0, b1 = bundle.train_batches(shape, dtype=opts.param_dtype)
+
+    abstract_params = bundle.abstract_params(opts.param_dtype)
+    params_sh = _sharding_tree(bundle.axes(), ctx, mesh, abstract_params)
+    b0_sh = _batch_shardings(b0, mesh, data_axes)
+    b1_sh = _batch_shardings(b1, mesh, data_axes)
+
+    if opts.optimizer == "addax":
+        step = make_addax_step(loss_fn, acfg, lr_fn)
+        in_sh = (params_sh, _repl(mesh), b0_sh, b1_sh)
+        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32),
+                b0, b1)
+    elif opts.optimizer == "ipsgd":
+        from repro.core.sgd import make_ipsgd_step
+        step = make_ipsgd_step(loss_fn, acfg, lr_fn)
+        in_sh = (params_sh, _repl(mesh), b1_sh)
+        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32), b1)
+    elif opts.optimizer == "mezo":
+        from repro.core.mezo import make_mezo_step
+        step = make_mezo_step(loss_fn, acfg, lr_fn)
+        in_sh = (params_sh, _repl(mesh), b0_sh)
+        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32), b0)
+    else:
+        raise ValueError(opts.optimizer)
+
+    jitted = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(params_sh, None), donate_argnums=(0,))
+    return CellPlan(bundle.arch.arch_id, shape, "train", jitted, args,
+                    notes={"cell": dataclasses.asdict(cell)})
+
+
+# --------------------------------------------------------------------------
+# Serve cells
+# --------------------------------------------------------------------------
+
+def _plan_prefill(bundle: Bundle, shape: ShapeCfg, mesh,
+                  opts: CellOptions) -> CellPlan:
+    ctx = build_ctx(bundle, mesh, opts)
+    data_axes = data_axes_of(mesh)
+    batch = bundle._batch_struct(shape.global_batch, shape.seq_len,
+                                 opts.param_dtype)
+    batch.pop("targets"), batch.pop("mask")
+    abstract_params = bundle.abstract_params(opts.param_dtype)
+    params_sh = _sharding_tree(bundle.axes(), ctx, mesh, abstract_params)
+    batch_sh = _batch_shardings(batch, mesh, data_axes)
+    capacity = shape.seq_len
+
+    def serve_step(params, b):
+        return bundle.prefill(params, b, capacity, ctx,
+                              impl=opts.prefill_impl)
+
+    jitted = jax.jit(serve_step, in_shardings=(params_sh, batch_sh))
+    return CellPlan(bundle.arch.arch_id, shape, "prefill", jitted,
+                    (abstract_params, batch),
+                    notes={"capacity": capacity})
+
+
+def _plan_decode(bundle: Bundle, shape: ShapeCfg, mesh,
+                 opts: CellOptions) -> CellPlan:
+    batch_one = shape.global_batch == 1
+    ctx = build_ctx(bundle, mesh, opts, batch_one=batch_one)
+    data_axes = data_axes_of(mesh)
+    tokens, caches, cache_len = bundle.decode_inputs(shape,
+                                                     opts.param_dtype)
+    abstract_params = bundle.abstract_params(opts.param_dtype)
+    params_sh = _sharding_tree(bundle.axes(), ctx, mesh, abstract_params)
+    cache_sh = _sharding_tree(
+        bundle.cache_axes(shape.global_batch, shape.seq_len), ctx, mesh,
+        caches)
+    tok_sh = _batch_shardings({"t": tokens}, mesh, data_axes,
+                              batch_one=batch_one)["t"]
+
+    def serve_step(params, toks, cch, clen):
+        return bundle.decode(params, toks, cch, clen, ctx)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(params_sh, tok_sh, cache_sh, _repl(mesh)),
+        out_shardings=(None, cache_sh), donate_argnums=(2,))
+    return CellPlan(bundle.arch.arch_id, shape, "decode", jitted,
+                    (abstract_params, tokens, caches, cache_len),
+                    notes={"cache_entries": shape.seq_len})
+
+
+def plan_cell(bundle: Bundle, shape: ShapeCfg, mesh,
+              opts: CellOptions = CellOptions()) -> CellPlan:
+    model_over = {}
+    if opts.remat and hasattr(bundle.mcfg, "remat"):
+        model_over["remat"] = opts.remat
+    if not opts.scores_f32 and hasattr(bundle.mcfg, "scores_f32"):
+        model_over["scores_f32"] = False
+    if model_over:
+        bundle = Bundle(dataclasses.replace(
+            bundle.arch,
+            model=dataclasses.replace(bundle.mcfg, **model_over)))
+    if shape.kind == "train":
+        return _plan_train(bundle, shape, mesh, opts)
+    if shape.kind == "prefill":
+        return _plan_prefill(bundle, shape, mesh, opts)
+    if shape.kind == "decode":
+        return _plan_decode(bundle, shape, mesh, opts)
+    raise ValueError(shape.kind)

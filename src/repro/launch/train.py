@@ -1,0 +1,101 @@
+"""Fine-tuning launcher: ``python -m repro.launch.train --arch tiny-100m``.
+
+Single-process end-to-end driver: synthetic corpus -> L_T assignment ->
+Addax (or any baseline optimizer) -> checkpointed training loop.  On this
+CPU container it trains the smoke/tiny configs for real; on a TPU fleet
+the same entry point runs under the production mesh (``--mesh``) with the
+sharded step from ``repro.launch.steps``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="tiny-100m")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced config (CPU-friendly)")
+    p.add_argument("--optimizer", default="addax",
+                   choices=("addax", "addax-wa", "mezo", "ipsgd", "sgd",
+                            "adam", "addax-adam"))
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--k0", type=int, default=6)
+    p.add_argument("--k1", type=int, default=4)
+    p.add_argument("--l-t", type=int, default=None,
+                   help="length threshold; omit for Addax-WA")
+    p.add_argument("--lr", type=float, default=1e-4)
+    p.add_argument("--alpha", type=float, default=5e-4)
+    p.add_argument("--eps", type=float, default=1e-3)
+    p.add_argument("--task", default="markov",
+                   choices=("markov", "copy", "classify"))
+    p.add_argument("--profile", default="multirc",
+                   help="length-distribution profile (see data.synthetic)")
+    p.add_argument("--n-examples", type=int, default=512)
+    p.add_argument("--max-len", type=int, default=None)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--metrics", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--dtype", default="f32", choices=("f32", "bf16"))
+    args = p.parse_args(argv)
+
+    from repro.core.addax import AddaxConfig
+    from repro.data.pipeline import AddaxPipeline, PipelineConfig
+    from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+    from repro.models.registry import get_bundle
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    bundle = get_bundle(args.arch, smoke=args.smoke)
+    vocab = bundle.mcfg.vocab
+    corpus = make_corpus(SyntheticTaskConfig(
+        name=args.profile, task=args.task, vocab=vocab,
+        n_examples=args.n_examples, max_len=args.max_len, seed=args.seed))
+
+    pipe = AddaxPipeline(corpus, PipelineConfig(
+        k0=args.k0, k1=args.k1, l_t=args.l_t, seed=args.seed))
+    print(f"[data] {len(corpus)} examples, L_max={pipe.assignment.l_max}, "
+          f"L_T={pipe.assignment.l_t}, |D0|={pipe.assignment.d0.size}, "
+          f"|D1|={pipe.assignment.d1.size}")
+
+    acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
+                       k0=args.k0, k1=args.k1, l_t=args.l_t)
+    opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
+                          total_steps=args.steps)
+    dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16
+    params = bundle.init_params(jax.random.key(args.seed), dtype)
+    opt_state = opt.init_state(params) if opt.has_state else None
+
+    def place(b):
+        return jax.tree_util.tree_map(jnp.asarray, b)
+
+    out = run_training(
+        opt, params, pipe,
+        TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every,
+                        log_every=args.log_every,
+                        metrics_path=args.metrics),
+        opt_state=opt_state, place=place)
+
+    hist = out["history"]
+    key = "loss_fo" if any("loss_fo" in h for h in hist) else "loss_zo"
+    first = next(h[key] for h in hist if key in h)
+    last = next(h[key] for h in reversed(hist) if key in h)
+    print(f"[done] step={out['step']} {key}: {first:.4f} -> {last:.4f} "
+          f"stragglers={len(out['stragglers'])} "
+          f"preempted={out['preempted']}")
+    if args.metrics:
+        print(f"[metrics] {args.metrics}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,342 @@
+"""Attention layers: GQA with rotary embeddings, optional sliding window,
+optional logit softcap (gemma2), optional QKV bias (qwen2.5), cross
+attention (whisper), and cached single-token decode.
+
+Three execution strategies, one semantics (all verified against each other
+in tests):
+
+* ``attention_dense``   — materialized-scores attention for the *training*
+  paths (seq <= ~4k).  Differentiable; window may be a traced per-layer
+  scalar, which is what lets gemma2's local/global alternation live inside
+  a single scanned layer body.
+* ``attention_chunked`` — blockwise online-softmax attention for the
+  forward-only 32k prefill: only the causally-required (q-block, kv-block)
+  pairs are visited (a static pair list drives one ``lax.scan``), so HLO
+  FLOPs match the true causal cost and the score matrix never materializes.
+  This mirrors the Pallas ``flash_attention`` kernel tile-for-tile.
+* ``decode_attend``     — one new token against a KV cache, mask by traced
+  cache length; works with the cache's sequence axis sharded across the
+  mesh (long-context decode), where XLA turns the softmax/weighted-sum
+  reductions into the logsumexp-combine collective pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models.common import PSpec, rope_apply, softcap
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    softcap: float | None = None
+    causal: bool = True
+    scores_f32: bool = True    # False: bf16 softmax chain (paper's 16-bit
+                               # mode; halves S^2 HBM traffic — §Perf)
+
+
+def specs(cfg: AttnCfg) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": PSpec((d, H * hd), ("embed", "heads")),
+        "wk": PSpec((d, K * hd), ("embed", "kv_heads")),
+        "wv": PSpec((d, K * hd), ("embed", "kv_heads")),
+        "wo": PSpec((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PSpec((H * hd,), ("heads",), init="zeros")
+        p["bk"] = PSpec((K * hd,), ("kv_heads",), init="zeros")
+        p["bv"] = PSpec((K * hd,), ("kv_heads",), init="zeros")
+    return p
+
+
+def project_qkv(params: dict, x: jax.Array, kv_x: jax.Array, cfg: AttnCfg,
+                q_positions, kv_positions, ctx=NULL_CTX):
+    """-> q (B,Sq,K,G,hd), k/v (B,Skv,K,hd) with RoPE applied."""
+    B, Sq, _ = x.shape
+    Skv = kv_x.shape[1]
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    G = H // K
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, Sq, H, hd)
+    k = k.reshape(B, Skv, K, hd)
+    v = v.reshape(B, Skv, K, hd)
+    if cfg.use_rope:
+        q = rope_apply(q, q_positions, cfg.rope_theta)
+        k = rope_apply(k, kv_positions, cfg.rope_theta)
+    q = ctx.constrain(q, "batch", "seq", "heads", None)
+    k = ctx.constrain(k, "batch", "seq", "kv_heads", None)
+    v = ctx.constrain(v, "batch", "seq", "kv_heads", None)
+    return q.reshape(B, Sq, K, G, hd), k, v
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array, cap,
+                    f32: bool = True) -> jax.Array:
+    scores = softcap(scores.astype(jnp.float32 if f32 else scores.dtype),
+                     cap)
+    neg = -1e30 if f32 else -3e38
+    scores = jnp.where(mask, scores, jnp.asarray(neg, scores.dtype))
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def attention_dense(params: dict, x: jax.Array, cfg: AttnCfg, *,
+                    kv_x: jax.Array | None = None,
+                    window=None, q_offset=0, ctx=NULL_CTX) -> jax.Array:
+    """Materialized-scores attention (training path).
+
+    ``window`` may be None (full), a python int, or a traced scalar (per-
+    layer window inside a scanned body — gemma2).  ``q_offset`` shifts query
+    positions (prefix-decoder setups).
+    """
+    self_attn = kv_x is None
+    kv_x = x if self_attn else kv_x
+    B, Sq, _ = x.shape
+    Skv = kv_x.shape[1]
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(Skv)
+    q, k, v = project_qkv(params, x, kv_x, cfg,
+                          q_pos[None, :], kv_pos[None, :], ctx)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    acc_t = jnp.float32 if cfg.scores_f32 else x.dtype
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=acc_t) * scale
+    mask = jnp.ones((Sq, Skv), bool)
+    if cfg.causal and self_attn:
+        rel = q_pos[:, None] - kv_pos[None, :]
+        mask = rel >= 0
+        if window is not None:
+            mask = mask & (rel < window)
+    probs = _masked_softmax(scores, mask[None, None, None], cfg.softcap,
+                            cfg.scores_f32)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    out = out.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
+    y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def attention_flash(params: dict, x: jax.Array, cfg: AttnCfg, *,
+                    window: int | None = None, block_q: int = 512,
+                    block_kv: int = 512, ctx=NULL_CTX) -> jax.Array:
+    """Self-attention through the Pallas ``flash_attention`` kernel
+    (``impl="flash"``).  On TPU this is the compiled Mosaic kernel; on
+    CPU it transparently runs in interpret mode, so the whole model can
+    be smoke-tested with the kernel in the loop."""
+    from repro.kernels.flash_attention import flash_attention
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None]
+    q, k, v = project_qkv(params, x, x, cfg, pos, pos, ctx)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    interpret = jax.default_backend() != "tpu"
+    out = flash_attention(q, k, v, window=window, softcap=cfg.softcap,
+                          causal=cfg.causal, block_q=block_q,
+                          block_kv=block_kv, interpret=interpret)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def _causal_pairs(n_q: int, n_kv: int, block_q: int, block_kv: int,
+                  window: int | None):
+    """Static (i, j) block-pair list for causal blockwise attention,
+    computed in *token* space so unequal block_q/block_kv are handled:
+    a pair is live iff some (q_pos, kv_pos) in it satisfies
+    ``0 <= q_pos - kv_pos < window``."""
+    pairs = []
+    for i in range(n_q):
+        q_lo, q_hi = i * block_q, (i + 1) * block_q - 1
+        for j in range(n_kv):
+            k_lo, k_hi = j * block_kv, (j + 1) * block_kv - 1
+            if k_lo > q_hi:                       # strictly in the future
+                continue
+            if window is not None and k_hi < q_lo - window + 1:
+                continue                          # entirely out of window
+            pairs.append((i, j))
+    return np.array(pairs, np.int32)
+
+
+def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
+                      window: int | None = None, block_q: int = 512,
+                      block_kv: int = 1024, ctx=NULL_CTX) -> jax.Array:
+    """Blockwise online-softmax causal self-attention (forward/prefill).
+
+    Scans a static list of causally-live (q-block, kv-block) pairs; the
+    softmax statistics (m, l) and the output accumulator live in fp32 at
+    output size, never the S x S score matrix.
+    """
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    G = H // K
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    n_q, n_kv = S // block_q, S // block_kv
+    pos = jnp.arange(S)
+    q, k, v = project_qkv(params, x, x, cfg, pos[None], pos[None], ctx)
+    scale = 1.0 / np.sqrt(hd)
+
+    pairs = _causal_pairs(n_q, n_kv, block_q, block_kv, window)
+
+    acc = jnp.zeros((B, n_q, block_q, K, G, hd), jnp.float32)
+    m = jnp.full((B, n_q, block_q, K, G), -1e30, jnp.float32)
+    l = jnp.zeros((B, n_q, block_q, K, G), jnp.float32)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, axis=1)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cfg.softcap)
+        qp = i * block_q + jnp.arange(block_q)
+        kp = j * block_kv + jnp.arange(block_kv)
+        rel = qp[:, None] - kp[None, :]
+        msk = rel >= 0
+        if window is not None:
+            msk = msk & (rel < window)
+        s = jnp.where(msk[None, :, None, None, :], s, -1e30)
+
+        mi = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=1)[:, 0]
+        li = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=1)[:, 0]
+        ai = jax.lax.dynamic_slice_in_dim(acc, i, 1, axis=1)[:, 0]
+
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new[:, None], i, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new[:, None], i, 1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new[:, None], i, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), pairs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, S, H * hd).astype(x.dtype)
+    y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Cached decode
+# --------------------------------------------------------------------------
+
+def init_cache_specs(cfg: AttnCfg, batch: int, capacity: int):
+    K, hd = cfg.n_kv, cfg.head_dim
+    shape = (batch, capacity, K, hd)
+    # "cache_heads" is distinct from "kv_heads": the cache shards its
+    # *sequence* axis by default, so its head axis must stay unsharded
+    # (a PartitionSpec may use each mesh axis once).
+    axes = ("cache_batch", "cache_seq", "cache_heads", None)
+    return {"k": PSpec(shape, axes, init="zeros"),
+            "v": PSpec(shape, axes, init="zeros")}
+
+
+def prefill_cache(params: dict, x: jax.Array, cfg: AttnCfg, capacity: int,
+                  ctx=NULL_CTX):
+    """Run projections over a prompt and return a padded KV cache."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)[None]
+    _, k, v = project_qkv(params, x, x, cfg, pos, pos, ctx)
+    pad = [(0, 0), (0, capacity - S), (0, 0), (0, 0)]
+    return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+
+
+def decode_attend_stacked(params: dict, x_t: jax.Array, caches: dict,
+                          app_idx: int, cache_len: jax.Array,
+                          cfg: AttnCfg, *, window=None, ctx=NULL_CTX):
+    """Shared-block decode against slot ``app_idx`` of a *stacked* cache
+    (n_apps, B, S_cap, K, hd) — the new token is written straight into
+    the stacked buffer (one small DUS; with donation, true in-place),
+    instead of slicing out, updating, and re-stacking (which costs a full
+    cache copy per step — the zamba2 long_500k hotspot, EXPERIMENTS.md
+    §Perf cell 3)."""
+    B = x_t.shape[0]
+    K, hd, H = cfg.n_kv, cfg.head_dim, cfg.n_heads
+    pos = cache_len[None, None] if cache_len.ndim == 0 else cache_len
+    q, k_new, v_new = project_qkv(params, x_t, x_t, cfg,
+                                  jnp.broadcast_to(pos, (B, 1)),
+                                  jnp.broadcast_to(pos, (B, 1)), ctx)
+    zero = jnp.zeros((), jnp.int32)
+    k_all = jax.lax.dynamic_update_slice(
+        caches["k"], k_new.astype(caches["k"].dtype)[None],
+        (jnp.asarray(app_idx, jnp.int32), zero, cache_len, zero, zero))
+    v_all = jax.lax.dynamic_update_slice(
+        caches["v"], v_new.astype(caches["v"].dtype)[None],
+        (jnp.asarray(app_idx, jnp.int32), zero, cache_len, zero, zero))
+    y = _attend_cached(params, q, k_all[app_idx], v_all[app_idx],
+                       cache_len, cfg, window, ctx)
+    return y, {"k": k_all, "v": v_all}
+
+
+def _attend_cached(params, q, k_cache, v_cache, cache_len, cfg: AttnCfg,
+                   window, ctx):
+    B = q.shape[0]
+    K, hd, H = cfg.n_kv, cfg.head_dim, cfg.n_heads
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cfg.softcap)
+    kv_pos = jnp.arange(k_cache.shape[1])
+    valid = kv_pos <= cache_len
+    if window is not None:
+        valid = valid & (kv_pos > cache_len - window)
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H * hd)
+    y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+    return ctx.constrain(y, "batch", None, "embed")
+
+
+def decode_attend(params: dict, x_t: jax.Array, cache: dict,
+                  cache_len: jax.Array, cfg: AttnCfg, *,
+                  window=None, update: bool = True, ctx=NULL_CTX):
+    """One-token attention. x_t: (B, 1, d); cache k/v: (B, S_cap, K, hd);
+    cache_len: traced scalar — the new token is written at ``cache_len``
+    (``update=False`` attends over a frozen cache: cross-attention).
+
+    Returns (y (B,1,d), updated cache).  Works when the cache's sequence
+    axis is sharded: the max/sum over sequence and the weighted sum over V
+    lower to per-shard partials + small cross-shard reductions.
+    """
+    B = x_t.shape[0]
+    K, hd, H = cfg.n_kv, cfg.head_dim, cfg.n_heads
+    G = H // K
+    pos = cache_len[None, None] if cache_len.ndim == 0 else cache_len
+    q, k_new, v_new = project_qkv(params, x_t, x_t, cfg,
+                                  jnp.broadcast_to(pos, (B, 1)),
+                                  jnp.broadcast_to(pos, (B, 1)), ctx)
+    if update:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+
+    y = _attend_cached(params, q, k_cache, v_cache, cache_len, cfg,
+                       window, ctx)
+    return y, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,181 @@
+"""Shared model substrate: parameter specs, norms, rotary embeddings,
+losses.  No framework dependency (pure JAX pytrees) — parameters, their
+logical sharding axes, and abstract shapes all derive from one ``PSpec``
+tree so init/sharding/dry-run can never drift apart."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Parameter specification
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter: shape + logical sharding axes + init style."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"       # normal | zeros | ones | value:<float>
+    scale: float = 0.02        # stddev for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_tree(spec_tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialize parameters from a PSpec tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_pspec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def one(spec: PSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init.startswith("value:"):
+            return jnp.full(spec.shape, float(spec.init[6:]), dtype)
+        return (jax.random.normal(k, spec.shape, jnp.float32)
+                * spec.scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)])
+
+
+def axes_tree(spec_tree: Any) -> Any:
+    """Pytree of logical-axis tuples, same structure as the params."""
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree,
+                                  is_leaf=_is_pspec)
+
+
+def abstract_tree(spec_tree: Any, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStructs for lowering without allocation (dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=_is_pspec)
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacked leading dim (for lax.scan over layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: PSpec((n,) + s.shape, (axis_name,) + s.axes, s.init,
+                        s.scale),
+        spec_tree, is_leaf=_is_pspec)
+
+
+# --------------------------------------------------------------------------
+# Normalization / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_apply(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                             / head_dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding & loss
+# --------------------------------------------------------------------------
+
+def pad_vocab(vocab: int, mult: int = 256) -> int:
+    """Pad the embedding/logits vocab dim to a multiple of ``mult`` so it
+    shards evenly over the model axis (Megatron-style vocab padding; the
+    published vocab sizes 49155/51865/151655 are not 16-divisible).  Padded
+    logit columns are masked to -inf in ``compute_logits``."""
+    return -(-vocab // mult) * mult
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array,
+                 scale: float | None = None) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    if scale is not None:
+        out = out * jnp.asarray(scale, out.dtype)
+    return out
+
+
+def compute_logits(h: jax.Array, head: jax.Array, layout: str = "dv",
+                   final_softcap: float | None = None, ctx=None,
+                   true_vocab: int | None = None) -> jax.Array:
+    """h: (B,S,d) -> logits (B,S,V) fp32.  ``layout`` is "dv" for a (d,V)
+    head or "vd" for a tied (V,d) embedding table (no transpose copy).
+    ``true_vocab`` masks padded vocab columns (see ``pad_vocab``)."""
+    eq = "bsd,dv->bsv" if layout == "dv" else "bsd,vd->bsv"
+    logits = jnp.einsum(eq, h, head, preferred_element_type=jnp.float32)
+    if ctx is not None:
+        logits = ctx.constrain(logits, "batch", "seq", "vocab")
+    logits = softcap(logits, final_softcap)
+    if true_vocab is not None and true_vocab < logits.shape[-1]:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < true_vocab, logits, -1e30)
+    return logits
+
+
+def lm_loss(h: jax.Array, head: jax.Array, targets: jax.Array,
+            mask: jax.Array, final_softcap: float | None = None,
+            ctx=None, layout: str = "dv",
+            true_vocab: int | None = None) -> jax.Array:
+    """Masked next-token CE.  fp32 math.
+
+    The logits tensor is the largest activation in training; it is computed
+    with fp32 accumulation and stays sharded on the vocab axis —
+    logsumexp and the target-logit gather run on the sharded layout.
+    """
+    logits = compute_logits(h, head, layout, final_softcap, ctx, true_vocab)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub: the
+batch carries precomputed mel-frame embeddings, per the assignment).
+
+Encoder: bidirectional attention + GELU MLP, learned positions, LayerNorm.
+Decoder: causal self-attention + cross-attention over encoder output.
+Decode serving keeps a self-attention KV cache plus precomputed
+cross-attention K/V (built once at prefill from the encoder output).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models import attention, mlp
+from repro.models.common import (PSpec, compute_logits, embed_lookup,
+                                 layer_norm, lm_loss, stack_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecCfg:
+    name: str
+    n_layers: int            # per stack (encoder and decoder)
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    n_frames: int = 1500     # encoder positions (whisper 30s @ 50Hz)
+    max_text: int = 4096     # decoder positions
+    remat: str = "full"
+
+    def attn_cfg(self, causal: bool) -> attention.AttnCfg:
+        return attention.AttnCfg(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.head_dim, qkv_bias=True, use_rope=False,
+            causal=causal)
+
+    def mlp_cfg(self) -> mlp.MLPCfg:
+        return mlp.MLPCfg(self.d_model, self.d_ff, act="gelu", gated=False,
+                          bias=True)
+
+
+def _ln(cfg) -> dict:
+    return {"w": PSpec((cfg.d_model,), ("embed",), init="ones"),
+            "b": PSpec((cfg.d_model,), ("embed",), init="zeros")}
+
+
+def _enc_block(cfg: EncDecCfg) -> dict:
+    return {"ln1": _ln(cfg), "attn": attention.specs(cfg.attn_cfg(False)),
+            "ln2": _ln(cfg), "mlp": mlp.specs(cfg.mlp_cfg())}
+
+
+def _dec_block(cfg: EncDecCfg) -> dict:
+    return {"ln1": _ln(cfg), "self": attention.specs(cfg.attn_cfg(True)),
+            "ln2": _ln(cfg), "cross": attention.specs(cfg.attn_cfg(False)),
+            "ln3": _ln(cfg), "mlp": mlp.specs(cfg.mlp_cfg())}
+
+
+def model_specs(cfg: EncDecCfg) -> dict:
+    return {
+        "enc": {"pos": PSpec((cfg.n_frames, cfg.d_model), ("seq", "embed")),
+                "blocks": stack_specs(_enc_block(cfg), cfg.n_layers),
+                "final": _ln(cfg)},
+        "dec": {"tok": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+                "pos": PSpec((cfg.max_text, cfg.d_model), ("seq", "embed")),
+                "blocks": stack_specs(_dec_block(cfg), cfg.n_layers),
+                "final": _ln(cfg)},
+    }
+
+
+def _apply_ln(p, x):
+    return layer_norm(x, p["w"], p["b"])
+
+
+def _maybe_remat(fn, cfg):
+    return fn if cfg.remat == "none" else jax.checkpoint(fn)
+
+
+def encode(params: dict, audio_embeds: jax.Array, cfg: EncDecCfg,
+           ctx=NULL_CTX) -> jax.Array:
+    T = audio_embeds.shape[1]
+    h = audio_embeds + params["enc"]["pos"][:T].astype(audio_embeds.dtype)
+    acfg = cfg.attn_cfg(False)
+
+    def body(h, bp):
+        h = h + attention.attention_dense(bp["attn"],
+                                          _apply_ln(bp["ln1"], h), acfg,
+                                          ctx=ctx)
+        h = h + mlp.apply(bp["mlp"], _apply_ln(bp["ln2"], h), cfg.mlp_cfg(),
+                          ctx)
+        return ctx.constrain(h, "batch", "seq_res", "embed"), None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["enc"]["blocks"])
+    return _apply_ln(params["enc"]["final"], h)
+
+
+def _decode_stack(params: dict, h: jax.Array, enc_out: jax.Array,
+                  cfg: EncDecCfg, ctx) -> jax.Array:
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+
+    def body(h, bp):
+        h = h + attention.attention_dense(bp["self"],
+                                          _apply_ln(bp["ln1"], h), self_cfg,
+                                          ctx=ctx)
+        h = h + attention.attention_dense(bp["cross"],
+                                          _apply_ln(bp["ln2"], h), cross_cfg,
+                                          kv_x=enc_out, ctx=ctx)
+        h = h + mlp.apply(bp["mlp"], _apply_ln(bp["ln3"], h), cfg.mlp_cfg(),
+                          ctx)
+        return ctx.constrain(h, "batch", "seq_res", "embed"), None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["dec"]["blocks"])
+    return _apply_ln(params["dec"]["final"], h)
+
+
+def loss_fn(params: dict, batch: dict, cfg: EncDecCfg,
+            ctx=NULL_CTX) -> jax.Array:
+    """batch: audio_embeds (B,T,d), tokens/targets/mask (B,S)."""
+    enc_out = encode(params, batch["audio_embeds"], cfg, ctx)
+    S = batch["tokens"].shape[1]
+    h = embed_lookup(params["dec"]["tok"], batch["tokens"]) + \
+        params["dec"]["pos"][:S].astype(enc_out.dtype)
+    h = _decode_stack(params, h, enc_out, cfg, ctx)
+    return lm_loss(h, params["dec"]["tok"], batch["targets"], batch["mask"],
+                   ctx=ctx, layout="vd", true_vocab=cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: EncDecCfg, batch: int, capacity: int) -> dict:
+    self_c = attention.init_cache_specs(cfg.attn_cfg(True), batch, capacity)
+    cross_c = attention.init_cache_specs(cfg.attn_cfg(False), batch,
+                                         cfg.n_frames)
+    return {"self": stack_specs(self_c, cfg.n_layers),
+            "cross": stack_specs(cross_c, cfg.n_layers)}
+
+
+def prefill(params: dict, batch: dict, cfg: EncDecCfg, capacity: int,
+            ctx=NULL_CTX):
+    """Encoder pass + decoder prompt pass building self+cross caches."""
+    enc_out = encode(params, batch["audio_embeds"], cfg, ctx)
+    S = batch["tokens"].shape[1]
+    h = embed_lookup(params["dec"]["tok"], batch["tokens"]) + \
+        params["dec"]["pos"][:S].astype(enc_out.dtype)
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+
+    def body(h, bp):
+        a_in = _apply_ln(bp["ln1"], h)
+        self_cache = attention.prefill_cache(bp["self"], a_in, self_cfg,
+                                             capacity, ctx)
+        h = h + attention.attention_dense(bp["self"], a_in, self_cfg,
+                                          ctx=ctx)
+        cross_cache = attention.prefill_cache(bp["cross"], enc_out,
+                                              cross_cfg, cfg.n_frames, ctx)
+        h = h + attention.attention_dense(bp["cross"],
+                                          _apply_ln(bp["ln2"], h), cross_cfg,
+                                          kv_x=enc_out, ctx=ctx)
+        h = h + mlp.apply(bp["mlp"], _apply_ln(bp["ln3"], h), cfg.mlp_cfg(),
+                          ctx)
+        return h, {"self": self_cache, "cross": cross_cache}
+
+    h, caches = jax.lax.scan(body, h, params["dec"]["blocks"])
+    h = _apply_ln(params["dec"]["final"], h[:, -1:])
+    logits = compute_logits(h, params["dec"]["tok"], "vd", ctx=ctx,
+                            true_vocab=cfg.vocab)
+    return logits, caches
+
+
+def decode_step(params: dict, tokens: jax.Array, caches: dict,
+                cache_len: jax.Array, cfg: EncDecCfg, ctx=NULL_CTX):
+    """One decoder token against self cache (length ``cache_len``) and the
+    fixed cross cache."""
+    h = embed_lookup(params["dec"]["tok"], tokens)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["dec"]["pos"], cache_len, 1, axis=0)[None].astype(h.dtype)
+    self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+    n_frames = jnp.asarray(cfg.n_frames - 1, jnp.int32)
+
+    def body(h, xs):
+        bp, cache = xs
+        a, self_c = attention.decode_attend(bp["self"],
+                                            _apply_ln(bp["ln1"], h),
+                                            cache["self"], cache_len,
+                                            self_cfg, ctx=ctx)
+        h = h + a
+        # cross attention: cache is full and static — attend, don't update
+        x_t = _apply_ln(bp["ln2"], h)
+        a, _ = attention.decode_attend(bp["cross"], x_t, cache["cross"],
+                                       n_frames, cross_cfg, update=False,
+                                       ctx=ctx)
+        h = h + a
+        h = h + mlp.apply(bp["mlp"], _apply_ln(bp["ln3"], h), cfg.mlp_cfg(),
+                          ctx)
+        return h, {"self": self_c, "cross": cache["cross"]}
+
+    h, new_caches = jax.lax.scan(body, h, (params["dec"]["blocks"], caches))
+    h = _apply_ln(params["dec"]["final"], h)
+    logits = compute_logits(h, params["dec"]["tok"], "vd", ctx=ctx,
+                            true_vocab=cfg.vocab)
+    return logits, new_caches

@@ -1,0 +1,39 @@
+"""Modality frontend STUBS (per the assignment).
+
+``whisper-tiny``'s conv-mel frontend and ``internvl2-1b``'s InternViT are
+not implemented; instead the batch carries *precomputed* frame/patch
+embeddings.  These helpers produce (a) abstract ``ShapeDtypeStruct``
+stand-ins for the dry-run and (b) deterministic pseudo-embeddings for CPU
+smoke/e2e runs — a cheap hash-derived projection so tests get stable,
+non-degenerate inputs without any real audio/vision tower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def audio_frame_embeds_spec(batch: int, n_frames: int, d_model: int,
+                            dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    """Whisper stub: (B, T_frames, d) mel-frame embeddings."""
+    return jax.ShapeDtypeStruct((batch, n_frames, d_model), dtype)
+
+
+def vision_patch_embeds_spec(batch: int, n_patches: int, d_model: int,
+                             dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    """InternViT stub: (B, P, d) projected patch embeddings."""
+    return jax.ShapeDtypeStruct((batch, n_patches, d_model), dtype)
+
+
+def pseudo_embeds(seed: int, batch: int, length: int, d_model: int,
+                  dtype=jnp.float32) -> jax.Array:
+    """Deterministic stand-in embeddings ~N(0, 0.02) from the counter RNG.
+
+    Uses the same threefry path as the ZO perturbations so smoke runs are
+    reproducible across hosts/meshes without a stateful generator.
+    """
+    z = rng.leaf_z(jnp.uint32(seed), 0x0F0F, (batch, length, d_model))
+    return (0.02 * z).astype(dtype)

@@ -1,0 +1,244 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with one *shared*
+attention+MLP transformer block applied between segments (arXiv:2411.15242).
+
+The 38 Mamba layers are split into six segments of six plus a tail of two;
+after each full segment the shared block (one parameter set, six
+applications, six separate KV caches) runs on the residual stream.  The
+Mamba segments are ``lax.scan``s over stacked parameters; the shared block
+is ordinary straight-line code.
+
+Long-context decode is where this arch earns its ``long_500k`` cell: the
+Mamba state is O(1), and the six shared-attention KV caches (524k entries
+each) are sequence-sharded across the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models import attention, mlp, ssm
+from repro.models.common import (PSpec, compute_logits, embed_lookup,
+                                 lm_loss, rms_norm, stack_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCfg:
+    name: str
+    n_mamba: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    d_state: int = 64
+    segment: int = 6
+    rope_theta: float = 10000.0
+    remat: str = "full"
+    block_q: int = 512
+    block_kv: int = 1024
+
+    @property
+    def segments(self) -> list[int]:
+        full, rem = divmod(self.n_mamba, self.segment)
+        return [self.segment] * full + ([rem] if rem else [])
+
+    def attn_cfg(self) -> attention.AttnCfg:
+        return attention.AttnCfg(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.head_dim, rope_theta=self.rope_theta)
+
+    def mamba_cfg(self) -> ssm.MambaCfg:
+        return ssm.MambaCfg(d_model=self.d_model, d_state=self.d_state,
+                            head_dim=self.head_dim)
+
+    def mlp_cfg(self) -> mlp.MLPCfg:
+        return mlp.MLPCfg(self.d_model, self.d_ff, act="silu", gated=True)
+
+
+def _norm(cfg) -> dict:
+    return {"w": PSpec((cfg.d_model,), ("embed",), init="ones")}
+
+
+def model_specs(cfg: HybridCfg) -> dict:
+    mamba_block = {"ln": _norm(cfg), "mixer": ssm.specs(cfg.mamba_cfg())}
+    return {
+        "embed": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "mamba": stack_specs(mamba_block, cfg.n_mamba),
+        "shared": {"ln1": _norm(cfg),
+                   "attn": attention.specs(cfg.attn_cfg()),
+                   "ln2": _norm(cfg),
+                   "mlp": mlp.specs(cfg.mlp_cfg())},
+        "final_norm": _norm(cfg),
+    }
+
+
+def _slice_stack(tree, start: int, size: int):
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.slice_in_dim(x, start, start + size, axis=0), tree)
+
+
+def _mamba_segment(params_slice, h, cfg: HybridCfg, ctx):
+    mcfg = cfg.mamba_cfg()
+
+    def body(h, bp):
+        y = ssm.apply(bp["mixer"], rms_norm(h, bp["ln"]["w"]), mcfg, ctx)
+        return ctx.constrain(h + y, "batch", "seq_res", "embed"), None
+
+    body = body if cfg.remat == "none" else jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params_slice)
+    return h
+
+
+def _shared_block(params, h, cfg: HybridCfg, ctx, impl: str):
+    sp = params["shared"]
+    a_in = rms_norm(h, sp["ln1"]["w"])
+    if impl == "chunked":
+        a = attention.attention_chunked(sp["attn"], a_in, cfg.attn_cfg(),
+                                        block_q=cfg.block_q,
+                                        block_kv=cfg.block_kv, ctx=ctx)
+    else:
+        a = attention.attention_dense(sp["attn"], a_in, cfg.attn_cfg(),
+                                      ctx=ctx)
+    h = h + a
+    h = h + mlp.apply(sp["mlp"], rms_norm(h, sp["ln2"]["w"]), cfg.mlp_cfg(),
+                      ctx)
+    return h
+
+
+def run_stack(params, h, cfg: HybridCfg, ctx=NULL_CTX, impl="dense"):
+    off = 0
+    segs = cfg.segments
+    for i, n in enumerate(segs):
+        h = _mamba_segment(_slice_stack(params["mamba"], off, n), h, cfg,
+                           ctx)
+        off += n
+        if i < len(segs) - 1:
+            h = _shared_block(params, h, cfg, ctx, impl)
+    return h
+
+
+def loss_fn(params, batch, cfg: HybridCfg, ctx=NULL_CTX,
+            impl: str = "dense"):
+    h = embed_lookup(params["embed"], batch["tokens"])
+    h = ctx.constrain(h, "batch", "seq", "embed")
+    h = run_stack(params, h, cfg, ctx, impl)
+    h = rms_norm(h, params["final_norm"]["w"])
+    return lm_loss(h, params["embed"], batch["targets"], batch["mask"],
+                   ctx=ctx, layout="vd", true_vocab=cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: HybridCfg, batch: int, capacity: int) -> dict:
+    n_apps = len(cfg.segments) - 1
+    return {
+        "mamba": stack_specs(ssm.init_cache_specs(cfg.mamba_cfg(), batch),
+                             cfg.n_mamba),
+        "attn": stack_specs(
+            attention.init_cache_specs(cfg.attn_cfg(), batch, capacity),
+            n_apps),
+    }
+
+
+def prefill(params, batch, cfg: HybridCfg, capacity: int, ctx=NULL_CTX,
+            impl="chunked"):
+    h = embed_lookup(params["embed"], batch["tokens"])
+    h = ctx.constrain(h, "batch", "seq", "embed")
+    mcfg = cfg.mamba_cfg()
+    off = 0
+    mamba_caches, attn_caches = [], []
+    segs = cfg.segments
+    for i, n in enumerate(segs):
+        pslice = _slice_stack(params["mamba"], off, n)
+
+        def body(h, bp):
+            a_in = rms_norm(h, bp["ln"]["w"])
+            z, xBC, dt = ssm._split_proj(bp["mixer"], a_in, mcfg)
+            xBC, conv_state = ssm._causal_conv(
+                xBC, bp["mixer"]["conv_w"], bp["mixer"]["conv_b"])
+            xBC = jax.nn.silu(xBC)
+            xc, Bs, Cs, dts, dA = ssm._gates(bp["mixer"], xBC, dt, mcfg)
+            y, state = ssm.ssd_chunked(xc, dts, dA, Bs, Cs, mcfg.chunk)
+            y = y + bp["mixer"]["D"].astype(jnp.float32)[:, None] * \
+                xc.astype(jnp.float32)
+            y = y.reshape(h.shape[0], h.shape[1], mcfg.d_inner)
+            y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+            y = rms_norm(y, bp["mixer"]["norm"])
+            y = jnp.einsum("bsf,fd->bsd", y, bp["mixer"]["out_proj"])
+            cache = {"ssm": state.astype(h.dtype), "conv": conv_state}
+            return h + y, cache
+
+        h, seg_cache = jax.lax.scan(body, h, pslice)
+        mamba_caches.append(seg_cache)
+        off += n
+        if i < len(segs) - 1:
+            a_in = rms_norm(h, params["shared"]["ln1"]["w"])
+            attn_caches.append(attention.prefill_cache(
+                params["shared"]["attn"], a_in, cfg.attn_cfg(), capacity,
+                ctx))
+            h = _shared_block(params, h, cfg, ctx, impl)
+
+    h = rms_norm(h[:, -1:], params["final_norm"]["w"])
+    logits = compute_logits(h, params["embed"], "vd", ctx=ctx,
+                            true_vocab=cfg.vocab)
+    caches = {
+        "mamba": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *mamba_caches),
+        "attn": jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *attn_caches),
+    }
+    return logits, caches
+
+
+def decode_step(params, tokens, caches, cache_len, cfg: HybridCfg,
+                ctx=NULL_CTX):
+    """One-token decode.  The shared-attention KV caches stay *stacked*
+    ((n_apps, B, S_cap, K, hd)) and receive one small in-place write per
+    application (``decode_attend_stacked``) — slicing out, updating, and
+    re-stacking would copy the full multi-GB cache every step
+    (EXPERIMENTS.md §Perf cell 3)."""
+    h = embed_lookup(params["embed"], tokens)
+    mcfg = cfg.mamba_cfg()
+    off = 0
+    new_mamba = []
+    attn_caches = caches["attn"]
+    segs = cfg.segments
+    for i, n in enumerate(segs):
+        pslice = _slice_stack(params["mamba"], off, n)
+        cslice = _slice_stack(caches["mamba"], off, n)
+
+        def body(h, xs):
+            bp, c = xs
+            y, c1 = ssm.decode_step(bp["mixer"],
+                                    rms_norm(h, bp["ln"]["w"]), c, mcfg, ctx)
+            return h + y, c1
+
+        h, seg_cache = jax.lax.scan(body, h, (pslice, cslice))
+        new_mamba.append(seg_cache)
+        off += n
+        if i < len(segs) - 1:
+            sp = params["shared"]
+            a_in = rms_norm(h, sp["ln1"]["w"])
+            a, attn_caches = attention.decode_attend_stacked(
+                sp["attn"], a_in, attn_caches, i, cache_len,
+                cfg.attn_cfg(), ctx=ctx)
+            h = h + a
+            h = h + mlp.apply(sp["mlp"], rms_norm(h, sp["ln2"]["w"]),
+                              cfg.mlp_cfg(), ctx)
+
+    h = rms_norm(h, params["final_norm"]["w"])
+    logits = compute_logits(h, params["embed"], "vd", ctx=ctx,
+                            true_vocab=cfg.vocab)
+    caches = {
+        "mamba": jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba),
+        "attn": attn_caches,
+    }
+    return logits, caches

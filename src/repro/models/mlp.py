@@ -1,0 +1,53 @@
+"""Feed-forward blocks: gated-linear-unit (llama/qwen/gemma families) and
+plain 2-layer MLP (whisper)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models.common import ACTS, PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    act: str = "silu"
+    gated: bool = True
+    bias: bool = False
+
+
+def specs(cfg: MLPCfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"wd": PSpec((f, d), ("ffn", "embed"))}
+    if cfg.gated:
+        p["wg"] = PSpec((d, f), ("embed", "ffn"))
+        p["wu"] = PSpec((d, f), ("embed", "ffn"))
+    else:
+        p["wi"] = PSpec((d, f), ("embed", "ffn"))
+    if cfg.bias:
+        p["bi"] = PSpec((f,), ("ffn",), init="zeros")
+        p["bo"] = PSpec((d,), ("embed",), init="zeros")
+    return p
+
+
+def apply(params: dict, x: jax.Array, cfg: MLPCfg, ctx=NULL_CTX) -> jax.Array:
+    act = ACTS[cfg.act]
+    if cfg.gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"])
+        h = act(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+        if cfg.bias:
+            h = h + params["bi"]
+        h = act(h)
+    h = ctx.constrain(h, "batch", "seq", "ffn")
+    y = jnp.einsum("bsf,fd->bsd", h, params["wd"])
+    if cfg.bias:
+        y = y + params["bo"]
+    return ctx.constrain(y, "batch", "seq", "embed")

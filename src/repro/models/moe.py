@@ -1,0 +1,125 @@
+"""Mixture-of-Experts block: top-k routing with per-sequence capacity and
+gather/scatter dispatch (GShard-style capacity algorithm, but realized with
+gathers instead of one-hot einsums so HLO FLOPs stay proportional to
+*routed* tokens, not ``tokens x experts x capacity``).
+
+Two parallelism modes, selected by the sharding rules (DESIGN.md §3):
+
+* ``tp`` — experts replicated, each expert's hidden dim sharded over the
+  `model` axis (megatron-style inside every expert).
+* ``ep`` — experts sharded over the `model` axis; the dispatch gather is
+  shard-local (token activations are model-replicated between blocks) and
+  the combine scatter produces partial sums reduced across the axis.
+
+Dropped tokens (over capacity) contribute nothing — their residual stream
+passes through unchanged, which is the standard capacity-factor trade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models.common import ACTS, PSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    d_ff: int                  # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_jitter: float = 0.0
+
+
+def specs(cfg: MoECfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": PSpec((d, E), ("embed", "experts")),
+        "wg": PSpec((E, d, f), ("experts", "embed", "expert_ffn")),
+        "wu": PSpec((E, d, f), ("experts", "embed", "expert_ffn")),
+        "wd": PSpec((E, f, d), ("experts", "expert_ffn", "embed")),
+    }
+
+
+def capacity(cfg: MoECfg, seq: int) -> int:
+    c = int(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def route(params: dict, x: jax.Array, cfg: MoECfg):
+    """-> gates (B,S,k) fp32, expert_idx (B,S,k) int32."""
+    logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def apply(params: dict, x: jax.Array, cfg: MoECfg, ctx=NULL_CTX) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Each sequence is a capacity group."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    gates, idx = route(params, x, cfg)              # (B,S,k)
+
+    # Position of each routed (token, slot) within its expert, per group.
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)        # (B,S,k,E)
+    flat = onehot.reshape(B, S * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1                  # (B,S*k,E)
+    pos = jnp.sum(flat * pos_in_e, axis=-1).reshape(B, S, k)
+    keep = pos < C
+    slot = jnp.where(keep, idx * C + pos, E * C)             # dump -> E*C
+
+    # src[b, e*C+c] = token index feeding that slot (S = empty/pad row).
+    def scatter_src(slot_b):
+        toks = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(-1)
+        return jnp.full((E * C + 1,), S, jnp.int32).at[
+            slot_b.reshape(-1)].set(toks.astype(jnp.int32))
+
+    src = jax.vmap(scatter_src)(slot)[:, :E * C]             # (B, E*C)
+    gate_slot = jax.vmap(
+        lambda s_b, g_b: jnp.zeros((E * C + 1,), jnp.float32).at[
+            s_b.reshape(-1)].set(g_b.reshape(-1)))(slot, gates)[:, :E * C]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(x_pad, src[..., None], axis=1)  # (B,E*C,d)
+    xe = xe.reshape(B, E, C, d)
+    xe = ctx.constrain(xe, "batch", "experts", None, "embed")
+
+    act = ACTS[cfg.act]
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"])
+    u = jnp.einsum("becd,edf->becf", xe, params["wu"])
+    h = act(g) * u
+    h = ctx.constrain(h, "batch", "experts", None, "expert_ffn")
+    ye = jnp.einsum("becf,efd->becd", h, params["wd"])
+    ye = ye.reshape(B, E * C, d)
+    ye = ye * gate_slot[..., None].astype(ye.dtype)
+
+    # Combine: scatter-add expert outputs back to token positions.
+    def combine(y_b, src_b):
+        return jnp.zeros((S + 1, d), jnp.float32).at[src_b].add(
+            y_b.astype(jnp.float32))
+
+    y = jax.vmap(combine)(ye, src)[:, :S].astype(x.dtype)
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def load_balance_loss(params: dict, x: jax.Array, cfg: MoECfg) -> jax.Array:
+    """Auxiliary Switch-style balance loss (optional, off by default in the
+    fine-tuning recipes; exposed for the pre-training example)."""
+    logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * imp)

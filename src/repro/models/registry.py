@@ -1,0 +1,217 @@
+"""Arch-id -> model bundle: one uniform interface over the three model
+families (decoder / encdec / hybrid) so the launcher, dry-run, serving
+engine, tests and benchmarks never dispatch on family themselves.
+
+A ``Bundle`` exposes:
+
+  * ``param_specs()`` / ``init_params`` / ``abstract_params`` / ``axes``
+  * ``loss(params, batch)``                     — training loss
+  * ``train_batches(shape)``                    — (B0, B1) abstract batches
+    for one Addax step under the arch's L_T assignment policy
+  * ``make_train_batches(seed, shape)``         — concrete counterparts
+  * ``prefill(params, batch)``                  — build KV caches
+  * ``decode(params, tokens, caches, cache_len)``
+  * ``cache_specs(batch, capacity)`` + abstract/concrete decode inputs
+
+Batch layouts per family (everything else derives from these):
+
+  decoder  tokens (B, S-P) i32, targets/mask (B, S), prefix_embeds (B,P,d)
+           when the arch has a stub frontend prefix (internvl2)
+  encdec   audio_embeds (B, T_frames, d), tokens/targets/mask (B, S_text)
+  hybrid   tokens/targets/mask (B, S)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed.sharding import NULL_CTX, ShardingCtx
+from repro.models import encdec, frontends, hybrid, transformer
+from repro.models.common import abstract_tree, axes_tree, init_tree
+
+
+def _round_to(x: int, mult: int, lo: int) -> int:
+    return max(lo, (int(x) // mult) * mult)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCell:
+    """Static shape of one Addax train step for a given (arch, shape)."""
+    k0: int          # ZO batch size (long sequences, full S)
+    k1: int          # FO batch size (short sequences, <= L_T)
+    s_full: int      # ZO sequence length
+    l_t: int         # FO sequence length (the L_T threshold)
+
+
+def plan_train_cell(arch: ArchConfig, shape: ShapeCfg,
+                    seq_mult: int = 128) -> TrainCell:
+    """Paper §3.1 realized as two fixed-shape streams: the FO stream takes
+    ``fo_frac`` of the global batch padded to ``L_T = lt_frac * S``; the ZO
+    stream takes the rest at full ``S``.  ``lt_frac >= 1`` (or fo_frac==1)
+    degenerates to Addax-WA / IP-SGD shapes."""
+    b = shape.global_batch
+    k1 = max(1, int(round(b * arch.fo_frac)))
+    k0 = max(1, b - k1)
+    l_t = _round_to(shape.seq_len * arch.lt_frac, seq_mult, seq_mult)
+    l_t = min(l_t, shape.seq_len)
+    return TrainCell(k0=k0, k1=k1, s_full=shape.seq_len, l_t=l_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bundle:
+    arch: ArchConfig
+
+    # ---------------------------------------------------------------- params
+    @property
+    def mcfg(self):
+        return self.arch.model
+
+    @property
+    def family(self) -> str:
+        return self.arch.family
+
+    def _mod(self):
+        return {"decoder": transformer, "encdec": encdec,
+                "hybrid": hybrid}[self.family]
+
+    def param_specs(self) -> Any:
+        return self._mod().model_specs(self.mcfg)
+
+    def axes(self) -> Any:
+        return axes_tree(self.param_specs())
+
+    def init_params(self, key: jax.Array, dtype=jnp.float32) -> Any:
+        return init_tree(self.param_specs(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16) -> Any:
+        return abstract_tree(self.param_specs(), dtype)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params: Any, batch: Any, ctx: ShardingCtx = NULL_CTX,
+             impl: str = "dense") -> jax.Array:
+        if self.family == "encdec":
+            return encdec.loss_fn(params, batch, self.mcfg, ctx)
+        if self.family == "hybrid":
+            return hybrid.loss_fn(params, batch, self.mcfg, ctx, impl)
+        return transformer.loss_fn(params, batch, self.mcfg, ctx, impl)
+
+    def loss_fn(self, ctx: ShardingCtx = NULL_CTX, impl: str = "dense"):
+        return functools.partial(self.loss, ctx=ctx, impl=impl)
+
+    # -------------------------------------------------------- train batches
+    def _text_len(self, s_total: int) -> int:
+        """Tokens fed as text for a total logical length ``s_total``."""
+        m = self.mcfg
+        if self.family == "encdec":
+            return min(max(s_total - m.n_frames, 16), m.max_text)
+        if self.family == "decoder" and m.prefix_len:
+            return max(s_total - m.prefix_len, 16)
+        return s_total
+
+    def _batch_struct(self, b: int, s_total: int, dtype=jnp.bfloat16):
+        """Abstract train/prefill batch for ``b`` examples of total logical
+        length ``s_total`` (text + any stub-frontend prefix)."""
+        m = self.mcfg
+        s_text = self._text_len(s_total)
+        i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+        if self.family == "encdec":
+            return {
+                "audio_embeds": frontends.audio_frame_embeds_spec(
+                    b, m.n_frames, m.d_model, dtype),
+                "tokens": i32((b, s_text)),
+                "targets": i32((b, s_text)),
+                "mask": f32((b, s_text)),
+            }
+        if self.family == "decoder" and m.prefix_len:
+            return {
+                "prefix_embeds": frontends.vision_patch_embeds_spec(
+                    b, m.prefix_len, m.d_model, dtype),
+                "tokens": i32((b, s_text)),
+                "targets": i32((b, m.prefix_len + s_text)),
+                "mask": f32((b, m.prefix_len + s_text)),
+            }
+        return {"tokens": i32((b, s_text)), "targets": i32((b, s_text)),
+                "mask": f32((b, s_text))}
+
+    def train_batches(self, shape: ShapeCfg, dtype=jnp.bfloat16):
+        """(batch0, batch1) abstract inputs of one Addax step."""
+        cell = plan_train_cell(self.arch, shape)
+        return (self._batch_struct(cell.k0, cell.s_full, dtype),
+                self._batch_struct(cell.k1, cell.l_t, dtype))
+
+    def make_batch(self, seed: int, b: int, s_total: int,
+                   dtype=jnp.float32) -> dict:
+        """Concrete synthetic batch matching ``_batch_struct``."""
+        m = self.mcfg
+        struct = self._batch_struct(b, s_total, dtype)
+        key = jax.random.key(seed)
+        out = {}
+        for name, sds in struct.items():
+            if name in ("tokens", "targets"):
+                key, sub = jax.random.split(key)
+                out[name] = jax.random.randint(sub, sds.shape, 0,
+                                               m.vocab, jnp.int32)
+            elif name == "mask":
+                out[name] = jnp.ones(sds.shape, jnp.float32)
+            else:  # stub frontend embeddings
+                out[name] = frontends.pseudo_embeds(
+                    seed, sds.shape[0], sds.shape[1], sds.shape[2], dtype)
+        return out
+
+    def make_train_batches(self, seed: int, shape: ShapeCfg,
+                           dtype=jnp.float32):
+        cell = plan_train_cell(self.arch, shape)
+        return (self.make_batch(seed, cell.k0, cell.s_full, dtype),
+                self.make_batch(seed + 1, cell.k1, cell.l_t, dtype))
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params: Any, batch: Any, capacity: int,
+                ctx: ShardingCtx = NULL_CTX, impl: str = "chunked"):
+        return self._mod().prefill(params, batch, self.mcfg, capacity, ctx,
+                                   **({} if self.family == "encdec"
+                                      else {"impl": impl}))
+
+    def decode(self, params: Any, tokens: jax.Array, caches: Any,
+               cache_len: jax.Array, ctx: ShardingCtx = NULL_CTX):
+        return self._mod().decode_step(params, tokens, caches, cache_len,
+                                       self.mcfg, ctx)
+
+    def cache_specs(self, batch: int, capacity: int) -> Any:
+        return self._mod().cache_specs(self.mcfg, batch, capacity)
+
+    def abstract_caches(self, batch: int, capacity: int,
+                        dtype=jnp.bfloat16) -> Any:
+        return abstract_tree(self.cache_specs(batch, capacity), dtype)
+
+    def cache_axes(self, batch: int, capacity: int) -> Any:
+        return axes_tree(self.cache_specs(batch, capacity))
+
+    def init_caches(self, batch: int, capacity: int,
+                    dtype=jnp.float32) -> Any:
+        return init_tree(self.cache_specs(batch, capacity),
+                         jax.random.key(0), dtype)
+
+    def decode_inputs(self, shape: ShapeCfg, dtype=jnp.bfloat16):
+        """Abstract (tokens, caches, cache_len) of one decode step against
+        a ``shape.seq_len``-entry KV cache."""
+        b = shape.global_batch
+        return (jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                self.abstract_caches(b, shape.seq_len, dtype),
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(arch_id: str, smoke: bool) -> Bundle:
+    from repro.configs import get_arch
+    return Bundle(get_arch(arch_id, smoke=smoke))
+
+
+def get_bundle(arch_id: str, smoke: bool = False) -> Bundle:
+    return _cached(arch_id, smoke)

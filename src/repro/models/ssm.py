@@ -1,0 +1,222 @@
+"""Mamba2 (state-space duality) block — used by zamba2.
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk the recurrence is a
+masked attention-like matmul with per-head scalar decays; across chunks a
+``lax.scan`` carries the (heads, head_dim, state) tensor.  A naive
+token-by-token recurrence is provided as the test oracle
+(``ssd_reference``), and a single-token step drives decode.
+
+State decays are accumulated in fp32 log space; ``cum_t - cum_s <= 0`` for
+``t >= s`` so every exponent is bounded above by zero (no overflow).
+Restriction: ``ngroups == 1`` (true for the assigned zamba2 config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models.common import PSpec, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def specs(cfg: MambaCfg) -> dict:
+    d, din, N, nH = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj_out = 2 * din + 2 * N + nH      # z, x, B, C, dt
+    return {
+        "in_proj": PSpec((d, proj_out), ("embed", "ffn")),
+        "conv_w": PSpec((cfg.d_conv, cfg.conv_dim), ("conv", "ffn")),
+        "conv_b": PSpec((cfg.conv_dim,), ("ffn",), init="zeros"),
+        "A_log": PSpec((nH,), (None,), init="value:0.5"),
+        "D": PSpec((nH,), (None,), init="ones"),
+        "dt_bias": PSpec((nH,), (None,), init="zeros"),
+        "norm": PSpec((din,), ("ffn",), init="ones"),
+        "out_proj": PSpec((din, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: (B,S,C); w: (K,C).  If ``state``
+    (B, K-1, C) is given, runs in streaming mode and returns new state."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :]
+    return out, new_state
+
+
+def _split_proj(params: dict, x: jax.Array, cfg: MambaCfg):
+    din, N, nH = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:2 * din + 2 * N]
+    dt = zxbcdt[..., 2 * din + 2 * N:]
+    return z, xBC, dt
+
+
+def _gates(params: dict, xBC: jax.Array, dt: jax.Array, cfg: MambaCfg):
+    din, N, nH, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    B_, S = xBC.shape[:2]
+    xc = xBC[..., :din].reshape(B_, S, nH, hd)
+    Bs = xBC[..., din:din + N].astype(jnp.float32)
+    Cs = xBC[..., din + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dA = dt * (-jnp.exp(params["A_log"].astype(jnp.float32)))  # (B,S,nH) <0
+    return xc, Bs, Cs, dt, dA
+
+
+def fit_chunk(seq: int, chunk: int) -> int:
+    """Largest divisor of ``seq`` that is <= ``chunk`` (keeps the chunked
+    scan valid for short smoke sequences; full shapes use ``chunk``)."""
+    c = min(chunk, seq)
+    while seq % c:
+        c -= 1
+    return c
+
+
+def ssd_chunked(xc, dt, dA, Bs, Cs, chunk: int, state0=None):
+    """Chunked SSD.  xc: (B,S,nH,hd); dt/dA: (B,S,nH); Bs/Cs: (B,S,N).
+
+    Returns (y (B,S,nH,hd) fp32, final_state (B,nH,hd,N) fp32)."""
+    B_, S, nH, hd = xc.shape
+    N = Bs.shape[-1]
+    chunk = fit_chunk(S, chunk)
+    nc, Q = S // chunk, chunk
+
+    r = lambda t, extra=(): t.reshape((B_, nc, Q) + tuple(extra))
+    xc_ = r(xc.astype(jnp.float32), (nH, hd))
+    dt_ = r(dt, (nH,))
+    dA_ = r(dA, (nH,))
+    Bs_ = r(Bs, (N,))
+    Cs_ = r(Cs, (N,))
+
+    if state0 is None:
+        state0 = jnp.zeros((B_, nH, hd, N), jnp.float32)
+
+    def body(state, inp):
+        xcc, dtc, dac, bc, cc = inp      # (B,Q,...) one chunk
+        cum = jnp.cumsum(dac, axis=1)                       # (B,Q,nH)
+        # ---- intra-chunk: masked attention-like term ----
+        cb = jnp.einsum("bqn,bsn->bqs", cc, bc)             # (B,Q,Q)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Q,Q,nH)
+        tq = jnp.arange(Q)
+        mask = (tq[:, None] >= tq[None, :])[None, :, :, None]
+        decay = jnp.where(mask, jnp.exp(jnp.where(mask, rel, 0.0)), 0.0)
+        scores = cb[..., None] * decay * dtc[:, None, :, :]  # (B,Q,Q,nH)
+        y = jnp.einsum("bqsh,bshp->bqhp", scores, xcc)
+        # ---- inter-chunk: contribution of the carried state ----
+        dec_in = jnp.exp(cum)                               # (B,Q,nH)
+        y = y + jnp.einsum("bqn,bhpn,bqh->bqhp", cc, state, dec_in)
+        # ---- state update ----
+        cum_last = cum[:, -1:, :]                           # (B,1,nH)
+        dec_out = jnp.exp(cum_last - cum) * dtc             # (B,Q,nH)
+        state = state * jnp.exp(cum_last[:, 0, :])[:, :, None, None] + \
+            jnp.einsum("bqh,bqhp,bqn->bhpn", dec_out, xcc, bc)
+        return state, y
+
+    inps = (xc_, dt_, dA_, Bs_, Cs_)
+    inps = jax.tree_util.tree_map(lambda t: jnp.swapaxes(t, 0, 1), inps)
+    state, ys = jax.lax.scan(body, state0, inps)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B_, S, nH, hd)
+    return y, state
+
+
+def ssd_reference(xc, dt, dA, Bs, Cs, state0=None):
+    """Token-by-token oracle for tests."""
+    B_, S, nH, hd = xc.shape
+    N = Bs.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B_, nH, hd, N), jnp.float32)
+    xc = xc.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, da_t, b_t, c_t = inp
+        state = state * jnp.exp(da_t)[:, :, None, None] + \
+            jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, b_t)
+        y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y_t
+
+    inps = jax.tree_util.tree_map(
+        lambda t: jnp.swapaxes(t, 0, 1), (xc, dt, dA, Bs, Cs))
+    state, ys = jax.lax.scan(step, state0, inps)
+    return jnp.swapaxes(ys, 0, 1), state
+
+
+def apply(params: dict, x: jax.Array, cfg: MambaCfg, ctx=NULL_CTX):
+    """Full Mamba2 block (training path). x: (B,S,d) -> (B,S,d)."""
+    z, xBC, dt = _split_proj(params, x, cfg)
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xc, Bs, Cs, dt, dA = _gates(params, xBC, dt, cfg)
+    y, _ = ssd_chunked(xc, dt, dA, Bs, Cs, cfg.chunk)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xc.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = rms_norm(y, params["norm"])
+    y = ctx.constrain(y, "batch", "seq", "ffn")
+    out = jnp.einsum("bsf,fd->bsd", y, params["out_proj"])
+    return ctx.constrain(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_cache_specs(cfg: MambaCfg, batch: int) -> dict:
+    return {
+        "ssm": PSpec((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                     ("cache_batch", None, None, None), init="zeros"),
+        "conv": PSpec((batch, cfg.d_conv - 1, cfg.conv_dim),
+                      ("cache_batch", None, "ffn"), init="zeros"),
+    }
+
+
+def decode_step(params: dict, x_t: jax.Array, cache: dict, cfg: MambaCfg,
+                ctx=NULL_CTX):
+    """x_t: (B,1,d) -> (y (B,1,d), new cache). O(1) in sequence length."""
+    z, xBC, dt = _split_proj(params, x_t, cfg)
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                   state=cache["conv"])
+    xBC = jax.nn.silu(xBC)
+    xc, Bs, Cs, dt, dA = _gates(params, xBC, dt, cfg)
+    state = cache["ssm"].astype(jnp.float32)
+    state = state * jnp.exp(dA[:, 0])[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt[:, 0], xc[:, 0].astype(jnp.float32), Bs[:, 0])
+    y = jnp.einsum("bhpn,bn->bhp", state, Cs[:, 0])[:, None]
+    y = y + params["D"].astype(jnp.float32)[:, None] * xc.astype(jnp.float32)
+    y = y.reshape(x_t.shape[0], 1, cfg.d_inner)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    y = rms_norm(y, params["norm"])
+    out = jnp.einsum("bsf,fd->bsd", y, params["out_proj"])
+    new_cache = {"ssm": state.astype(cache["ssm"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+    return ctx.constrain(out, "batch", None, "embed"), new_cache

@@ -1,0 +1,336 @@
+"""Decoder-only transformer stack assembled from the layer library, with
+``lax.scan`` over layer groups.
+
+A *layer pattern* is a static cycle of block kinds, e.g. ``("global",)``
+for llama-style stacks, ``("local", "global")`` for gemma2's alternation,
+``("rwkv",)`` for RWKV-6.  The stack scans over ``n_layers/len(pattern)``
+groups whose bodies apply each kind in sequence — HLO stays O(pattern), not
+O(depth), and every kind keeps its *static* attributes (window size,
+chunked-attention block pairs) while sharing one compiled body.
+
+Covers the dense (granite/qwen/gemma2/deepseek/internvl2-LM), MoE
+(phi3.5-moe/granite-moe) and RWKV families; whisper and zamba2 live in
+``encdec.py`` / ``hybrid.py`` and reuse the same blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NULL_CTX
+from repro.models import attention, mlp, moe, rwkv
+from repro.models.common import (PSpec, embed_lookup, layer_norm, lm_loss,
+                                 compute_logits, pad_vocab, rms_norm,
+                                 stack_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    layer_pattern: tuple[str, ...] = ("global",)
+    norm: str = "rms"                  # rms | ln
+    act: str = "silu"
+    gated_mlp: bool = True
+    mlp_bias: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    embed_scale: bool = False          # gemma: sqrt(d_model)
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_norms: bool = False           # gemma2 post-block norms
+    local_window: int | None = None
+    moe_cfg: moe.MoECfg | None = None
+    rwkv_cfg: rwkv.RWKVCfg | None = None
+    remat: str = "full"                # none | full | dots
+    prefix_len: int = 0                # VLM: precomputed prefix embeddings
+    scores_f32: bool = True            # attention softmax precision
+    block_q: int = 512                 # chunked-attention tile sizes
+    block_kv: int = 1024
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.layer_pattern) == 0
+        return self.n_layers // len(self.layer_pattern)
+
+    def attn_cfg(self) -> attention.AttnCfg:
+        return attention.AttnCfg(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.head_dim, qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta, softcap=self.attn_softcap,
+            scores_f32=self.scores_f32)
+
+    def mlp_cfg(self) -> mlp.MLPCfg:
+        return mlp.MLPCfg(d_model=self.d_model, d_ff=self.d_ff, act=self.act,
+                          gated=self.gated_mlp, bias=self.mlp_bias)
+
+    def window_for(self, kind: str) -> int | None:
+        return self.local_window if kind == "local" else None
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def _norm_specs(cfg: TransformerCfg) -> dict:
+    if cfg.norm == "rms":
+        return {"w": PSpec((cfg.d_model,), ("embed",), init="ones")}
+    return {"w": PSpec((cfg.d_model,), ("embed",), init="ones"),
+            "b": PSpec((cfg.d_model,), ("embed",), init="zeros")}
+
+
+def apply_norm(params: dict, x: jax.Array, cfg: TransformerCfg) -> jax.Array:
+    if cfg.norm == "rms":
+        return rms_norm(x, params["w"])
+    return layer_norm(x, params["w"], params["b"])
+
+
+def block_specs(cfg: TransformerCfg, kind: str) -> dict:
+    if kind == "rwkv":
+        return {"ln1": _norm_specs(cfg), "ln2": _norm_specs(cfg),
+                "tm": rwkv.time_mix_specs(cfg.rwkv_cfg),
+                "cm": rwkv.channel_mix_specs(cfg.rwkv_cfg)}
+    p = {"ln1": _norm_specs(cfg), "ln2": _norm_specs(cfg),
+         "attn": attention.specs(cfg.attn_cfg())}
+    if kind == "moe" or (cfg.moe_cfg is not None and kind in
+                         ("global", "local")):
+        p["moe"] = moe.specs(cfg.moe_cfg)
+    else:
+        p["mlp"] = mlp.specs(cfg.mlp_cfg())
+    if cfg.post_norms:
+        p["ln1p"] = _norm_specs(cfg)
+        p["ln2p"] = _norm_specs(cfg)
+    return p
+
+
+def model_specs(cfg: TransformerCfg) -> dict:
+    groups = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        groups[f"{i}:{kind}"] = stack_specs(block_specs(cfg, kind),
+                                            cfg.n_groups)
+    vp = pad_vocab(cfg.vocab)
+    p = {"embed": PSpec((vp, cfg.d_model), ("vocab", "embed")),
+         "blocks": groups,
+         "final_norm": _norm_specs(cfg)}
+    if not cfg.tie_embeddings:
+        p["head"] = PSpec((cfg.d_model, vp), ("embed", "vocab"))
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
+                ctx, impl: str) -> jax.Array:
+    if kind == "rwkv":
+        h = h + rwkv.time_mix(params["tm"], apply_norm(params["ln1"], h, cfg),
+                              cfg.rwkv_cfg, ctx)
+        h = h + rwkv.channel_mix(params["cm"],
+                                 apply_norm(params["ln2"], h, cfg),
+                                 cfg.rwkv_cfg, ctx)
+        return h
+    acfg = cfg.attn_cfg()
+    window = cfg.window_for(kind)
+    a_in = apply_norm(params["ln1"], h, cfg)
+    if impl == "chunked":
+        a = attention.attention_chunked(params["attn"], a_in, acfg,
+                                        window=window, block_q=cfg.block_q,
+                                        block_kv=cfg.block_kv, ctx=ctx)
+    elif impl == "flash":
+        a = attention.attention_flash(params["attn"], a_in, acfg,
+                                      window=window, block_q=cfg.block_q,
+                                      block_kv=cfg.block_kv, ctx=ctx)
+    else:
+        a = attention.attention_dense(params["attn"], a_in, acfg,
+                                      window=window, ctx=ctx)
+    if cfg.post_norms:
+        a = apply_norm(params["ln1p"], a, cfg)
+    h = h + a
+    f_in = apply_norm(params["ln2"], h, cfg)
+    if "moe" in params:
+        f = moe.apply(params["moe"], f_in, cfg.moe_cfg, ctx)
+    else:
+        f = mlp.apply(params["mlp"], f_in, cfg.mlp_cfg(), ctx)
+    if cfg.post_norms:
+        f = apply_norm(params["ln2p"], f, cfg)
+    return h + f
+
+
+def _maybe_remat(fn, cfg: TransformerCfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def run_stack(params: dict, h: jax.Array, cfg: TransformerCfg,
+              ctx=NULL_CTX, impl: str = "dense") -> jax.Array:
+    """Scan the layer groups over the residual stream."""
+
+    def body(h, group_params):
+        for i, kind in enumerate(cfg.layer_pattern):
+            h = apply_block(group_params[f"{i}:{kind}"], h, kind, cfg, ctx,
+                            impl)
+        # the carry is what remat saves per layer group: under Megatron
+        # sequence parallelism it is sharded on seq ("seq_res" rule)
+        h = ctx.constrain(h, "batch", "seq_res", "embed")
+        return h, None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["blocks"])
+    return h
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: TransformerCfg,
+                 prefix: jax.Array | None = None) -> jax.Array:
+    scale = float(cfg.d_model) ** 0.5 if cfg.embed_scale else None
+    h = embed_lookup(params["embed"], tokens, scale)
+    if prefix is not None:
+        h = jnp.concatenate([prefix.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _head(params: dict, cfg: TransformerCfg):
+    if cfg.tie_embeddings:
+        return params["embed"], "vd"
+    return params["head"], "dv"
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerCfg,
+            ctx=NULL_CTX, impl: str = "dense") -> jax.Array:
+    """batch: tokens (B,S_text), targets/mask (B, prefix+S_text),
+    optional prefix_embeds (B,P,d)."""
+    h = embed_tokens(params, batch["tokens"], cfg,
+                     batch.get("prefix_embeds"))
+    h = ctx.constrain(h, "batch", "seq", "embed")
+    h = run_stack(params, h, cfg, ctx, impl)
+    h = apply_norm(params["final_norm"], h, cfg)
+    head, layout = _head(params, cfg)
+    return lm_loss(h, head, batch["targets"], batch["mask"],
+                   cfg.final_softcap, ctx, layout, true_vocab=cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + cached decode
+# --------------------------------------------------------------------------
+
+def cache_specs(cfg: TransformerCfg, batch: int, capacity: int) -> dict:
+    groups = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "rwkv":
+            per = rwkv.init_cache_specs(cfg.rwkv_cfg, batch)
+        else:
+            per = attention.init_cache_specs(cfg.attn_cfg(), batch, capacity)
+        groups[f"{i}:{kind}"] = stack_specs(per, cfg.n_groups)
+    return groups
+
+
+def prefill(params: dict, batch: dict, cfg: TransformerCfg, capacity: int,
+            ctx=NULL_CTX, impl: str = "chunked"):
+    """Forward over the prompt; returns (last-token logits, caches).
+
+    The KV caches for every layer are emitted as scan outputs (stacked
+    leading group dim), padded to ``capacity``.
+    """
+    h = embed_tokens(params, batch["tokens"], cfg,
+                     batch.get("prefix_embeds"))
+    h = ctx.constrain(h, "batch", "seq", "embed")
+    acfg = cfg.attn_cfg()
+
+    def body(h, group_params):
+        caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            gp = group_params[f"{i}:{kind}"]
+            if kind == "rwkv":
+                rcfg = cfg.rwkv_cfg
+                a_in = apply_norm(gp["ln1"], h, cfg)
+                r, k, v, g, w = rwkv._project(gp["tm"], a_in,
+                                              rwkv._shift(a_in), rcfg)
+                out, state = rwkv.wkv_chunked(r, k, v, w, gp["tm"]["u"],
+                                              rcfg.chunk)
+                out = rwkv._head_norm(out, gp["tm"], rcfg, h.shape[0],
+                                      h.shape[1]).astype(h.dtype)
+                h = h + jnp.einsum("bsh,hd->bsd", out * g, gp["tm"]["wo"])
+                cm_in = apply_norm(gp["ln2"], h, cfg)
+                h = h + rwkv.channel_mix(gp["cm"], cm_in, rcfg, ctx)
+                caches[f"{i}:{kind}"] = {
+                    "state": state.astype(h.dtype),
+                    "tm_x": a_in[:, -1:],
+                    "cm_x": cm_in[:, -1:]}
+            else:
+                a_in = apply_norm(gp["ln1"], h, cfg)
+                caches[f"{i}:{kind}"] = attention.prefill_cache(
+                    gp["attn"], a_in, acfg, capacity, ctx)
+                h = apply_block(gp, h, kind, cfg, ctx, impl)
+        return h, caches
+
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = apply_norm(params["final_norm"], h[:, -1:], cfg)
+    head, layout = _head(params, cfg)
+    logits = compute_logits(h, head, layout, cfg.final_softcap, ctx,
+                            true_vocab=cfg.vocab)
+    return logits, caches
+
+
+def decode_step(params: dict, tokens: jax.Array, caches: dict,
+                cache_len: jax.Array, cfg: TransformerCfg, ctx=NULL_CTX):
+    """One decode step. tokens: (B,1). Returns (logits (B,1,V) fp32,
+    new caches)."""
+    h = embed_tokens(params, tokens, cfg)
+    acfg = cfg.attn_cfg()
+
+    def body(h, xs):
+        group_params, cache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            gp = group_params[f"{i}:{kind}"]
+            c = cache[f"{i}:{kind}"]
+            if kind == "rwkv":
+                a_in = apply_norm(gp["ln1"], h, cfg)
+                y, c1 = rwkv.time_mix_decode(gp["tm"], a_in, c, cfg.rwkv_cfg,
+                                             ctx)
+                h = h + y
+                cm_in = apply_norm(gp["ln2"], h, cfg)
+                y, c1 = rwkv.channel_mix_decode(gp["cm"], cm_in, c1,
+                                                cfg.rwkv_cfg, ctx)
+                h = h + y
+                new_caches[f"{i}:{kind}"] = c1
+            else:
+                a_in = apply_norm(gp["ln1"], h, cfg)
+                a, c1 = attention.decode_attend(
+                    gp["attn"], a_in, c, cache_len, acfg,
+                    window=cfg.window_for(kind), ctx=ctx)
+                if cfg.post_norms:
+                    a = apply_norm(gp["ln1p"], a, cfg)
+                h = h + a
+                f_in = apply_norm(gp["ln2"], h, cfg)
+                if "moe" in gp:
+                    f = moe.apply(gp["moe"], f_in, cfg.moe_cfg, ctx)
+                else:
+                    f = mlp.apply(gp["mlp"], f_in, cfg.mlp_cfg(), ctx)
+                if cfg.post_norms:
+                    f = apply_norm(gp["ln2p"], f, cfg)
+                h = h + f
+                new_caches[f"{i}:{kind}"] = c1
+        return h, new_caches
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], caches))
+    h = apply_norm(params["final_norm"], h, cfg)
+    head, layout = _head(params, cfg)
+    logits = compute_logits(h, head, layout, cfg.final_softcap, ctx,
+                            true_vocab=cfg.vocab)
+    return logits, new_caches

@@ -1,0 +1,5 @@
+from repro.train.loop import TrainLoopConfig, run_training
+from repro.train.state import OptimizerSetup, build_optimizer
+
+__all__ = ["TrainLoopConfig", "run_training", "OptimizerSetup",
+           "build_optimizer"]

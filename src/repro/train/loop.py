@@ -1,0 +1,142 @@
+"""Training loop: checkpoint/restart, preemption, straggler logging,
+metrics JSONL — the piece that has to survive a 1000-node fleet.
+
+The loop is device-layout agnostic: it takes an already-jitted step
+function plus a batch *placer* (identity on CPU; ``device_put`` with batch
+shardings under a mesh).  All restart-relevant state is
+``(params[, opt_state], step)`` — the data stream and the ZO perturbations
+replay from ``(seed, step)`` alone (see ``repro.data.pipeline`` /
+``repro.core.rng``), so checkpoints stay tiny and elastic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import AddaxPipeline
+from repro.distributed.fault_tolerance import (AsyncCheckpointer,
+                                               CheckpointStore,
+                                               PreemptionGuard,
+                                               StragglerWatchdog)
+from repro.train.state import OptimizerSetup
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    metrics_path: str | None = None
+    eval_every: int | None = None
+    keep_ckpts: int = 3
+    straggler_threshold: float = 2.5
+
+
+def _to_host_scalar(x) -> float:
+    return float(np.asarray(jax.device_get(x)))
+
+
+class MetricsLogger:
+    def __init__(self, path: str | None):
+        self.path = path
+        self.history: list[dict] = []
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._f = open(path, "a")
+        else:
+            self._f = None
+
+    def log(self, record: dict):
+        self.history.append(record)
+        if self._f:
+            self._f.write(json.dumps(record) + "\n")
+            self._f.flush()
+
+    def close(self):
+        if self._f:
+            self._f.close()
+
+
+def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
+                 cfg: TrainLoopConfig, *,
+                 opt_state: Any = None,
+                 place: Callable[[Any], Any] = lambda x: x,
+                 eval_fn: Callable[[Any], dict] | None = None,
+                 guard: PreemptionGuard | None = None,
+                 jit: bool = True) -> dict:
+    """Run (or resume) training.  Returns {params, opt_state, step,
+    history, stragglers, preempted}."""
+    store = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
+        if cfg.ckpt_dir else None
+    ckpt = AsyncCheckpointer(store) if store else None
+    guard = guard or PreemptionGuard(install_signal=False)
+    watchdog = StragglerWatchdog(threshold=cfg.straggler_threshold)
+    logger = MetricsLogger(cfg.metrics_path)
+
+    start_step = 0
+    if store and store.latest_step() is not None:
+        params, meta = store.restore(params)
+        start_step = meta["step"] + 1
+        if opt.has_state and opt_state is not None:
+            opt_state, _ = CheckpointStore(
+                os.path.join(cfg.ckpt_dir, "opt")).restore(opt_state)
+
+    step_fn = opt.step_fn
+    if jit:
+        donate = (0, 1) if opt.has_state else (0,)
+        step_fn = jax.jit(step_fn, donate_argnums=donate)
+
+    preempted = False
+    completed = start_step - 1          # last fully-executed step
+    for step in range(start_step, cfg.total_steps):
+        if guard.should_stop():
+            preempted = True
+            break
+        b0, b1 = pipeline.step_batches(step)
+        idx = jnp.uint32(step)
+        watchdog.start()
+        if opt.two_stream:
+            args = (place(b0), place(b1))
+        else:
+            args = (place(b0 if opt.stream == "zo" else b1),)
+        if opt.has_state:
+            params, opt_state, metrics = step_fn(params, opt_state, idx,
+                                                 *args)
+        else:
+            params, metrics = step_fn(params, idx, *args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
+        ev = watchdog.stop(step)
+        completed = step
+
+        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
+            rec = {"step": step,
+                   **{k: _to_host_scalar(v) for k, v in metrics.items()}}
+            if ev:
+                rec["straggler"] = True
+            logger.log(rec)
+        if eval_fn and cfg.eval_every and step and \
+                step % cfg.eval_every == 0:
+            logger.log({"step": step, **eval_fn(params)})
+        if ckpt and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+            ckpt.save(step, params)
+            if opt.has_state:
+                CheckpointStore(os.path.join(cfg.ckpt_dir, "opt"),
+                                keep=cfg.keep_ckpts).save(step, opt_state)
+
+    if ckpt:
+        if completed >= start_step:     # never re-stamp a stale step
+            ckpt.save(completed, params)  # final / preemption checkpoint
+        ckpt.close()
+    logger.close()
+    return {"params": params, "opt_state": opt_state, "step": completed,
+            "history": logger.history,
+            "stragglers": watchdog.events, "preempted": preempted}

@@ -1,0 +1,77 @@
+"""Optimizer setup: binds ``--optimizer <name>`` to a step function and its
+state layout.
+
+Addax/MeZO/IP-SGD carry **no optimizer state** (that is the point of the
+paper); Adam and Addax+Adam (paper §5 "future work", implemented here as a
+beyond-paper extension) carry (m, v).
+
+Step-function signatures (uniform across optimizers):
+
+  two-stream (addax, addax-adam):   step(params, [state,] i, b0, b1)
+  one-stream (mezo, ipsgd, sgd, adam): step(params, [state,] i, batch)
+
+``OptimizerSetup.two_stream`` tells the caller which to feed; for
+one-stream optimizers the loop feeds the FO batch (short stream) except
+MeZO, which trains on the ZO batch (long stream) exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core import adam, addax, mezo, schedules, sgd
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSetup:
+    name: str
+    step_fn: Callable
+    two_stream: bool            # consumes (batch0, batch1)?
+    has_state: bool             # carries (m, v)?
+    init_state: Callable[[Any], Any] | None
+    stream: str = "fo"          # one-stream optimizers: which stream
+    donate: tuple[int, ...] = (0,)
+
+
+def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
+                    total_steps: int = 1000) -> OptimizerSetup:
+    lr_fn = schedules.by_name(cfg.schedule, cfg.lr, total_steps)
+    if name == "addax":
+        return OptimizerSetup(
+            name, addax.make_addax_step(loss_fn, cfg, lr_fn),
+            two_stream=True, has_state=False, init_state=None)
+    if name == "addax-wa":
+        # WA consumes one batch internally split into (B0, B1); the loop
+        # still feeds two streams drawn from the same distribution, so we
+        # reuse the two-stream step (identical semantics, static shapes).
+        return OptimizerSetup(
+            name, addax.make_addax_step(loss_fn, cfg, lr_fn),
+            two_stream=True, has_state=False, init_state=None)
+    if name == "mezo":
+        return OptimizerSetup(
+            name, mezo.make_mezo_step(loss_fn, cfg, lr_fn),
+            two_stream=False, has_state=False, init_state=None, stream="zo")
+    if name == "ipsgd":
+        return OptimizerSetup(
+            name, sgd.make_ipsgd_step(loss_fn, cfg, lr_fn),
+            two_stream=False, has_state=False, init_state=None)
+    if name == "sgd":
+        return OptimizerSetup(
+            name, sgd.make_sgd_step(loss_fn, cfg, lr_fn),
+            two_stream=False, has_state=False, init_state=None)
+    if name == "adam":
+        return OptimizerSetup(
+            name, adam.make_adam_step(loss_fn, cfg, lr_fn),
+            two_stream=False, has_state=True,
+            init_state=adam.init_adam_state)
+    if name == "addax-adam":
+        return OptimizerSetup(
+            name, adam.make_addax_adam_step(loss_fn, cfg, lr_fn),
+            two_stream=True, has_state=True,
+            init_state=adam.init_adam_state)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+OPTIMIZERS = ("addax", "addax-wa", "mezo", "ipsgd", "sgd", "adam",
+              "addax-adam")

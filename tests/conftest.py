@@ -1,0 +1,11 @@
+"""Shared test config.  NOTE: no XLA device-count flags here — smoke
+tests and benches must see the real 1-device CPU (the dry-run sets its
+own flag in a separate process)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,58 @@
+"""End-to-end CLI tests: the train and serve launchers run as a user
+would invoke them (subprocess, real argv)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run(args, timeout=560):
+    return subprocess.run([sys.executable, "-m"] + args, env=ENV,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli_smoke(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "tiny-100m", "--smoke",
+              "--steps", "8", "--k0", "2", "--k1", "2",
+              "--n-examples", "32", "--max-len", "48",
+              "--ckpt-dir", str(tmp_path / "ck"),
+              "--metrics", str(tmp_path / "m.jsonl"),
+              "--ckpt-every", "4", "--log-every", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[done] step=7" in r.stdout
+    assert (tmp_path / "m.jsonl").exists()
+    assert any(d.startswith("step_")
+               for d in os.listdir(tmp_path / "ck"))
+
+
+def test_train_cli_resumes(tmp_path):
+    ck = str(tmp_path / "ck")
+    a = _run(["repro.launch.train", "--arch", "tiny-100m", "--smoke",
+              "--steps", "4", "--k0", "2", "--k1", "2",
+              "--n-examples", "32", "--max-len", "48",
+              "--ckpt-dir", ck, "--ckpt-every", "2"])
+    assert a.returncode == 0, a.stderr[-2000:]
+    b = _run(["repro.launch.train", "--arch", "tiny-100m", "--smoke",
+              "--steps", "8", "--k0", "2", "--k1", "2",
+              "--n-examples", "32", "--max-len", "48",
+              "--ckpt-dir", ck, "--ckpt-every", "4"])
+    assert b.returncode == 0, b.stderr[-2000:]
+    assert "[done] step=7" in b.stdout
+
+
+def test_train_cli_baseline_optimizers(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "tiny-100m", "--smoke",
+              "--steps", "4", "--optimizer", "mezo",
+              "--n-examples", "32", "--max-len", "48"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss_zo" in r.stdout
+
+
+def test_serve_cli_smoke():
+    r = _run(["repro.launch.serve", "--arch", "tiny-100m", "--smoke",
+              "--requests", "4", "--max-new", "4", "--capacity", "64"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[serve] 4 requests" in r.stdout

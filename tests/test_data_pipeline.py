@@ -1,0 +1,114 @@
+"""Property tests for the L_T assignment (paper §3.1) and the two-stream
+pipeline: partition/disjointness invariants, deterministic restart
+replay, mask correctness."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import assignment as asg
+from repro.data.pipeline import AddaxPipeline, PipelineConfig, auto_plan
+from repro.data.synthetic import (LENGTH_PROFILES, SyntheticTaskConfig,
+                                  corpus_lengths, make_corpus)
+
+
+@given(lengths=st.lists(st.integers(1, 1000), min_size=1, max_size=200),
+       l_t=st.one_of(st.none(), st.integers(1, 1000)))
+@settings(max_examples=50, deadline=None)
+def test_assignment_partition_property(lengths, l_t):
+    """D0/D1 is a partition when L_T < L_max; both = full set otherwise
+    (Addax-WA).  Threshold semantics exactly match the paper."""
+    lengths = np.array(lengths)
+    a = asg.assign(lengths, l_t)
+    if l_t is None or l_t >= lengths.max():
+        assert len(a.d0) == len(a.d1) == len(lengths)
+    else:
+        assert set(a.d0) | set(a.d1) == set(range(len(lengths)))
+        assert set(a.d0) & set(a.d1) == set()
+        assert all(lengths[i] > l_t for i in a.d0)
+        assert all(lengths[i] <= l_t for i in a.d1)
+
+
+@given(frac=st.floats(0.05, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_choose_l_t_quantile(frac):
+    lengths = np.arange(1, 101)
+    l_t = asg.choose_l_t(lengths, frac)
+    below = (lengths <= l_t).mean()
+    assert abs(below - frac) < 0.05
+
+
+@pytest.mark.parametrize("profile", list(LENGTH_PROFILES))
+def test_synthetic_profiles_right_skewed(profile):
+    corpus = make_corpus(SyntheticTaskConfig(name=profile, vocab=1000,
+                                             n_examples=400))
+    lens = corpus_lengths(corpus)
+    _, _, prof_max = LENGTH_PROFILES[profile]
+    assert lens.max() <= prof_max
+    assert np.median(lens) <= lens.mean() + 1  # right skew (paper Fig. 6)
+
+
+def test_pipeline_shapes_and_masks():
+    corpus = make_corpus(SyntheticTaskConfig(name="multirc", vocab=500,
+                                             n_examples=200))
+    lens = corpus_lengths(corpus)
+    l_t = int(np.median(lens))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=3, k1=5, l_t=l_t))
+    b0, b1 = pipe.step_batches(0)
+    assert b0["tokens"].shape == (3, pipe.s_full)
+    assert b1["tokens"].shape == (5, pipe.l_short)
+    assert pipe.l_short <= pipe.s_full
+    # mask never covers padding and only completion targets
+    for b in (b0, b1):
+        assert b["mask"].min() >= 0 and b["mask"].max() <= 1
+        # masked positions have a real next token
+        live = b["mask"] > 0
+        assert (b["targets"][live] >= 0).all()
+
+
+def test_pipeline_deterministic_replay():
+    """Restart at step t replays the identical batches — the data-side
+    seed trick that keeps checkpoints tiny."""
+    corpus = make_corpus(SyntheticTaskConfig(name="rte", vocab=100,
+                                             n_examples=100))
+    cfg = PipelineConfig(k0=2, k1=2, l_t=None, seed=42)
+    p1 = AddaxPipeline(corpus, cfg)
+    p2 = AddaxPipeline(corpus, cfg)
+    for step in (0, 7, 123):
+        a0, a1 = p1.step_batches(step)
+        b0, b1 = p2.step_batches(step)
+        np.testing.assert_array_equal(a0["tokens"], b0["tokens"])
+        np.testing.assert_array_equal(a1["mask"], b1["mask"])
+
+
+def test_pipeline_wa_mode():
+    corpus = make_corpus(SyntheticTaskConfig(name="sst2", vocab=100,
+                                             n_examples=64))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=2, k1=2, l_t=None))
+    assert pipe.l_short == pipe.s_full  # no split: both at full width
+
+
+def test_pipeline_rejects_degenerate_threshold():
+    """L_T below every sequence length leaves D1 empty -> hard error
+    (silently training FO on nothing would be a footgun)."""
+    corpus = make_corpus(SyntheticTaskConfig(name="sst2", vocab=100,
+                                             n_examples=64))
+    lens = corpus_lengths(corpus)
+    with pytest.raises(ValueError):
+        AddaxPipeline(corpus, PipelineConfig(l_t=int(lens.min()) - 1,
+                                             k0=1, k1=1))
+
+
+def test_auto_plan_backs_off_quantile():
+    """auto_plan picks Addax-WA when memory is plentiful and a finite L_T
+    when it is not (Appendix D.6 automation)."""
+    corpus = make_corpus(SyntheticTaskConfig(name="multirc", vocab=100,
+                                             n_examples=200))
+    rich = auto_plan(corpus, hbm_budget_bytes=int(1e15), n_layers=12,
+                     d_model=768, n_heads=12)
+    assert rich.l_t is None
+    tight = auto_plan(corpus, hbm_budget_bytes=int(2e8), n_layers=12,
+                      d_model=768, n_heads=12)
+    assert tight.l_t is not None
+    lens = corpus_lengths(corpus)
+    assert tight.l_t < lens.max()

@@ -1,0 +1,140 @@
+"""Distributed-path tests.  Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main test
+process keeps the real 1-device CPU (assignment requirement)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def test_int8_quantization_roundtrip():
+    g = jax.random.normal(jax.random.key(0), (128,)) * 3.0
+    q, scale = compression.quantize_int8(g)
+    back = compression.dequantize_int8(q, scale)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(back), np.asarray(g),
+                               atol=float(scale) / 127 + 1e-6)
+
+
+def test_dp_addax_step_matches_single_device():
+    """shard_map DP Addax over 8 shards == the single-process step on the
+    concatenated batch (pmean == global mean), and the ZO sync is one
+    scalar: parameters must come back identical across shards."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import schedules
+        from repro.core.addax import AddaxConfig, make_addax_step
+        from repro.distributed.collectives import (batch_sharding,
+                                                   make_dp_addax_step,
+                                                   replicated)
+        from repro.models.registry import get_bundle
+
+        mesh = jax.make_mesh((8,), ("data",),
+            axis_types=(jax.sharding.AxisType.Auto,))
+        b = get_bundle("tiny-100m", smoke=True)
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+        lr_fn = schedules.constant(cfg.lr)
+        params = b.init_params(jax.random.key(0))
+        b0 = b.make_batch(0, 16, 64)
+        b1 = b.make_batch(1, 16, 32)
+
+        # distributed
+        dp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh)
+        pd = jax.device_put(params, replicated(mesh))
+        bd0 = jax.device_put(b0, batch_sharding(mesh))
+        bd1 = jax.device_put(b1, batch_sharding(mesh))
+        p_dist, m_dist = jax.jit(dp)(pd, jnp.uint32(3), bd0, bd1)
+
+        # single-device reference
+        ref_step = make_addax_step(b.loss_fn(), cfg, lr_fn)
+        p_ref, m_ref = ref_step(params, jnp.uint32(3), b0, b1)
+
+        diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                       - c.astype(jnp.float32))))
+                 for a, c in zip(jax.tree_util.tree_leaves(p_dist),
+                                 jax.tree_util.tree_leaves(p_ref))]
+        print(json.dumps({
+            "max_param_diff": max(diffs),
+            "g0_diff": abs(float(m_dist["g0"]) - float(m_ref["g0"])),
+            "loss_fo_diff": abs(float(m_dist["loss_fo"])
+                                - float(m_ref["loss_fo"])),
+        }))
+    """)
+    res = _run_subprocess(code)
+    # fp32 reduction-order noise only
+    assert res["g0_diff"] < 1e-3
+    assert res["loss_fo_diff"] < 1e-4
+    assert res["max_param_diff"] < 1e-5
+
+
+def test_dp_addax_step_compressed_fo():
+    """int8-compressed FO all-reduce stays close to the exact one and
+    still produces identical params on every shard."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import schedules
+        from repro.core.addax import AddaxConfig
+        from repro.distributed.collectives import (batch_sharding,
+                                                   make_dp_addax_step,
+                                                   replicated)
+        from repro.models.registry import get_bundle
+
+        mesh = jax.make_mesh((8,), ("data",),
+            axis_types=(jax.sharding.AxisType.Auto,))
+        b = get_bundle("tiny-100m", smoke=True)
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+        lr_fn = schedules.constant(cfg.lr)
+        params = jax.device_put(b.init_params(jax.random.key(0)),
+                                replicated(mesh))
+        b0 = jax.device_put(b.make_batch(0, 16, 64), batch_sharding(mesh))
+        b1 = jax.device_put(b.make_batch(1, 16, 32), batch_sharding(mesh))
+
+        exact = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh,
+                                   compress_fo=False)
+        comp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh,
+                                  compress_fo=True)
+        pe, _ = jax.jit(exact)(params, jnp.uint32(0), b0, b1)
+        pc, _ = jax.jit(comp)(params, jnp.uint32(0), b0, b1)
+        rel = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - c.astype(jnp.float32))))
+               for a, c in zip(jax.tree_util.tree_leaves(pe),
+                               jax.tree_util.tree_leaves(pc))]
+        print(json.dumps({"max_diff": max(rel)}))
+    """)
+    res = _run_subprocess(code)
+    # int8 quantization error scaled by lr: small but nonzero
+    assert res["max_diff"] < 1e-4
+
+
+def test_collective_bytes_model():
+    """The ZO term's wire cost is a scalar regardless of model size."""
+    from repro.distributed.collectives import collective_bytes_of_dp_step
+    small = collective_bytes_of_dp_step(int(1e8), dp=16, compress=False)
+    big = collective_bytes_of_dp_step(int(7e10), dp=16, compress=False)
+    assert small["zo_bytes"] == big["zo_bytes"] == 8
+    assert big["fo_bytes"] == 7e10 * 4
+    cbig = collective_bytes_of_dp_step(int(7e10), dp=16, compress=True)
+    assert cbig["fo_bytes"] == 7e10  # 4x cut

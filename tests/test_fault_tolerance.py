@@ -1,0 +1,123 @@
+"""Fault-tolerance unit tests: atomic checkpoints, async writer,
+preemption, straggler watchdog with a fake clock."""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import (AsyncCheckpointer,
+                                               CheckpointStore,
+                                               PreemptionGuard,
+                                               StragglerWatchdog)
+
+
+def _params(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (8, 4)),
+            "b": {"c": jnp.arange(6, dtype=jnp.float32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    p = _params()
+    store.save(10, p, extra={"pipeline_seed": 42})
+    q, meta = store.restore(p)
+    assert meta["step"] == 10 and meta["extra"]["pipeline_seed"] == 42
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(q)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    p = _params()
+    for s in (1, 5, 9):
+        store.save(s, p)
+    assert store.latest_step() == 9
+    assert store.steps() == [5, 9]  # step 1 garbage-collected
+
+
+def test_restore_specific_step(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=5)
+    for s in (1, 2):
+        store.save(s, {"a": jnp.full((2,), float(s))})
+    q, meta = store.restore({"a": jnp.zeros((2,))}, step=1)
+    assert meta["step"] == 1 and float(q["a"][0]) == 1.0
+
+
+def test_partial_write_invisible(tmp_path):
+    """A tmp dir without DONE never shows up as a checkpoint."""
+    store = CheckpointStore(str(tmp_path))
+    os.makedirs(tmp_path / "step_7")
+    (tmp_path / "step_7" / "params.npz").write_bytes(b"garbage")
+    assert store.steps() == []       # no DONE marker
+    with pytest.raises(FileNotFoundError):
+        store.restore(_params())
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(0, {"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        store.restore({"a": jnp.zeros((5,))})
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restore into a different dtype (bf16 job resuming an f32 ckpt)."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(0, {"a": jnp.linspace(0, 1, 8, dtype=jnp.float32)})
+    q, _ = store.restore({"a": jnp.zeros((8,), jnp.bfloat16)})
+    assert q["a"].dtype == jnp.bfloat16
+
+
+def test_async_checkpointer(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    ck = AsyncCheckpointer(store)
+    p = _params()
+    for s in range(3):
+        ck.save(s, p)
+    ck.wait()
+    assert store.latest_step() == 2
+    ck.close()
+
+
+def test_preemption_flag_file(tmp_path):
+    flag = tmp_path / "PREEMPT"
+    g = PreemptionGuard(flag_path=str(flag), install_signal=False)
+    assert not g.should_stop()
+    flag.write_text("now")
+    assert g.should_stop()
+
+
+def test_preemption_request():
+    g = PreemptionGuard(install_signal=False)
+    assert not g.should_stop()
+    g.request()
+    assert g.should_stop()
+
+
+def test_straggler_watchdog_fake_clock():
+    t = [0.0]
+    wd = StragglerWatchdog(threshold=2.0, decay=0.5, warmup=2,
+                           clock=lambda: t[0])
+    # steady 1.0s steps
+    for step in range(5):
+        wd.start()
+        t[0] += 1.0
+        assert wd.stop(step) is None
+    # a 5x step -> flagged, EWMA unpoisoned
+    ewma_before = wd.ewma
+    wd.start()
+    t[0] += 5.0
+    ev = wd.stop(5)
+    assert ev is not None and ev.step == 5 and ev.duration == 5.0
+    assert wd.ewma == ewma_before
+    # recovery not flagged
+    wd.start()
+    t[0] += 1.0
+    assert wd.stop(6) is None

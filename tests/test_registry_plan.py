@@ -1,0 +1,112 @@
+"""Registry/planner invariants: batch-shape math per family, train-cell
+planning properties, and a real lower+compile of plan_cell on a small
+virtual mesh (subprocess, 8 devices)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ALL_ARCHS, SHAPES, get_arch
+from repro.configs.base import ShapeCfg
+from repro.models.registry import get_bundle, plan_train_cell
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@given(batch=st.integers(2, 512), seq=st.sampled_from([1024, 4096, 32768]),
+       fo_frac=st.floats(0.1, 0.9), lt_frac=st.floats(0.1, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_plan_train_cell_properties(batch, seq, fo_frac, lt_frac):
+    import dataclasses
+    arch = dataclasses.replace(get_arch("tiny-100m"), fo_frac=fo_frac,
+                               lt_frac=lt_frac)
+    cell = plan_train_cell(arch, ShapeCfg("t", seq, batch, "train"))
+    assert cell.k0 >= 1 and cell.k1 >= 1
+    assert cell.k0 + cell.k1 >= batch - 1     # split covers the batch
+    assert cell.l_t % 128 == 0 or cell.l_t == seq
+    assert 128 <= cell.l_t <= seq == cell.s_full
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_batch_structs_match_make_batch(arch):
+    """Abstract batch structs and concrete batches agree in shape/dtype
+    for every family (the dry-run lowers the former, runs use the
+    latter)."""
+    b = get_bundle(arch, smoke=True)
+    struct = b._batch_struct(2, 64, jnp.float32)
+    concrete = b.make_batch(0, 2, 64, jnp.float32)
+    assert set(struct) == set(concrete)
+    for k in struct:
+        assert struct[k].shape == concrete[k].shape, (arch, k)
+        assert struct[k].dtype == concrete[k].dtype, (arch, k)
+
+
+def test_full_shape_cells_cover_assignment():
+    """40 nominal cells = 10 archs x 4 shapes; live cells drop long_500k
+    for the 8 full-attention archs -> 32."""
+    from repro.configs import ASSIGNED_ARCHS
+    live = sum(len(get_arch(a).shape_cells()) for a in ASSIGNED_ARCHS)
+    assert live == 32
+    assert len(ASSIGNED_ARCHS) * 4 == 40
+
+
+def test_decode_inputs_shapes():
+    b = get_bundle("tiny-100m", smoke=True)
+    toks, caches, clen = b.decode_inputs(SHAPES["decode_32k"])
+    assert toks.shape == (128, 1)
+    import jax
+    for leaf in jax.tree_util.tree_leaves(caches):
+        assert 32768 in leaf.shape  # capacity present in cache dims
+
+
+def test_plan_cell_compiles_on_virtual_mesh():
+    """plan_cell -> lower -> compile for train/prefill/decode on a tiny
+    (2,4) mesh with a reduced shape — the dry-run path as a fast test."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs.base import ShapeCfg
+        from repro.launch.mesh import _mk
+        from repro.launch.steps import CellOptions, plan_cell
+        from repro.models.registry import get_bundle
+
+        mesh = _mk((2, 4), ("data", "model"))
+        bundle = get_bundle("tiny-100m", smoke=True)
+        out = {}
+        cells = [ShapeCfg("t", 128, 8, "train"),
+                 ShapeCfg("p", 128, 4, "prefill"),
+                 ShapeCfg("d", 128, 8, "decode"),
+                 ShapeCfg("l", 256, 1, "decode")]
+        with mesh:
+            for sh in cells:
+                plan = plan_cell(bundle, sh, mesh, CellOptions(
+                    seq_shard_residual=(sh.kind == "train")))
+                c = plan.lower().compile()
+                out[sh.name] = int(c.memory_analysis().temp_size_in_bytes)
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.splitlines()[-1])
+    assert set(out) == {"t", "p", "d", "l"}
+    assert all(v > 0 for v in out.values())
+
+
+def test_dryrun_opts_parsing():
+    from repro.launch.dryrun import _parse_opts
+    o = _parse_opts(["optimizer=ipsgd", "seq_shard_residual=true",
+                     "alpha=0.01", "param_dtype=f32"])
+    assert o.optimizer == "ipsgd"
+    assert o.seq_shard_residual is True
+    assert o.alpha == 0.01
+    assert o.param_dtype == jnp.float32
