@@ -33,7 +33,7 @@ def save_result(name: str, payload) -> str:
 
 def hlo_step_memory(arch: str, optimizer: str, batch: int, seq: int,
                     l_t: int | None = None, k1: int | None = None,
-                    dtype=jnp.bfloat16) -> dict:
+                    dtype=jnp.bfloat16, n_dirs: int = 1) -> dict:
     """Bytes of one train step from abstract lowering (no allocation).
 
     For Addax, ``batch`` is K0 (ZO stream at ``seq``) and ``k1`` examples
@@ -50,7 +50,7 @@ def hlo_step_memory(arch: str, optimizer: str, batch: int, seq: int,
         bundle = Bundle(dataclasses.replace(
             bundle.arch,
             model=dataclasses.replace(bundle.mcfg, remat="none")))
-    acfg = AddaxConfig(lr=1e-4, alpha=5e-4, eps=1e-3)
+    acfg = AddaxConfig(lr=1e-4, alpha=5e-4, eps=1e-3, n_dirs=n_dirs)
     lr_fn = schedules.constant(1e-4)
     loss_fn = bundle.loss_fn()
     params = bundle.abstract_params(dtype)
@@ -106,7 +106,7 @@ def hlo_step_memory(arch: str, optimizer: str, batch: int, seq: int,
 
 def train_run(arch: str, optimizer: str, steps: int, *, task="classify",
               lr=1e-3, alpha=1e-3, k0=4, k1=4, l_t=None, seed=0,
-              n_examples=96) -> dict:
+              n_examples=96, n_dirs=1) -> dict:
     """A real (small) training run; returns loss curve + wall time."""
     from repro.data.pipeline import AddaxPipeline, PipelineConfig
     from repro.data.synthetic import SyntheticTaskConfig, make_corpus
@@ -119,7 +119,8 @@ def train_run(arch: str, optimizer: str, steps: int, *, task="classify",
         n_examples=n_examples, min_len=12, max_len=64, seed=seed))
     pipe = AddaxPipeline(corpus, PipelineConfig(k0=k0, k1=k1, l_t=l_t,
                                                 seed=seed))
-    acfg = AddaxConfig(lr=lr, alpha=alpha, eps=1e-3, k0=k0, k1=k1)
+    acfg = AddaxConfig(lr=lr, alpha=alpha, eps=1e-3, k0=k0, k1=k1,
+                       n_dirs=n_dirs)
     opt = build_optimizer(optimizer, bundle.loss_fn(), acfg,
                           total_steps=steps)
     params = bundle.init_params(jax.random.key(seed))

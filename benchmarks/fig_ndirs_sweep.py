@@ -1,0 +1,54 @@
+"""Estimator-bank sweep (beyond-paper; companion to fig5_k0_sweep):
+n_dirs swept at fixed K0/K1/alpha.  Each extra direction costs two more
+forward passes on B0 but cuts the ZO estimator variance ~1/n (Gautam et
+al.), so the interesting outputs are final loss, accuracy, *and* the
+per-direction g0 spread and step wall time — the convergence-per-FLOP
+trade the bank buys.  Memory stays flat by construction (directions are
+regenerated from seeds, never stored); we record the HLO temp bytes too
+so regressions show up."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (eval_accuracy, hlo_step_memory, save_result,
+                               train_run)
+
+
+def run(steps=80, n_dirs_list=(1, 2, 4, 8), seeds=(0, 1), quick=False):
+    if quick:
+        steps, n_dirs_list, seeds = 60, (1, 4), (0,)
+    rows = []
+    for n in n_dirs_list:
+        mem = hlo_step_memory("tiny-100m", "addax", batch=4, seq=128,
+                              l_t=64, k1=4, n_dirs=n)
+        for seed in seeds:
+            r = train_run("tiny-100m", "addax", steps, k0=4, k1=4,
+                          alpha=1e-3, seed=seed, n_dirs=n)
+            acc = eval_accuracy(r["bundle"], r["params"], r["pipe"])
+            rows.append({"n_dirs": n, "seed": seed,
+                         "final_loss": float(np.mean(r["losses"][-5:])),
+                         "accuracy": acc,
+                         "wall_s": r["wall_s"],
+                         "temp_bytes": mem["temp_bytes"]})
+            print(f"[ndirs] n={n} seed={seed} "
+                  f"loss={rows[-1]['final_loss']:.4f} acc={acc:.3f} "
+                  f"wall={r['wall_s']:.1f}s temp={mem['temp_bytes']}",
+                  flush=True)
+    summary = {"k0": 4, "k1": 4, "steps": steps, "rows": rows}
+    save_result("fig_ndirs_sweep", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=80)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(steps=a.steps, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

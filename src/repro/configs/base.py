@@ -47,6 +47,9 @@ class ArchConfig:
     # L_T threshold); the ZO stream takes the rest at full length.
     fo_frac: float = 0.5
     lt_frac: float = 0.5
+    # SPSA estimator-bank size for train cells: directions averaged per ZO
+    # step (1 = the paper's single probe; >1 = variance-reduced bank).
+    n_dirs: int = 1
     notes: str = ""
 
     def shape_cells(self) -> list[str]:

@@ -5,10 +5,12 @@ from repro.core.addax import AddaxConfig, fused_update, make_addax_step, \
 from repro.core.adam import init_adam_state, make_adam_step
 from repro.core.mezo import make_mezo_step
 from repro.core.sgd import make_ipsgd_step, make_sgd_step
-from repro.core.spsa import spsa_directional_grad, zo_pseudo_gradient
+from repro.core.spsa import spsa_bank_grad, spsa_directional_grad, \
+    zo_pseudo_gradient
 
 __all__ = [
     "AddaxConfig", "fused_update", "make_addax_step", "make_addax_wa_step",
     "make_mezo_step", "make_ipsgd_step", "make_sgd_step", "make_adam_step",
-    "init_adam_state", "spsa_directional_grad", "zo_pseudo_gradient",
+    "init_adam_state", "spsa_bank_grad", "spsa_directional_grad",
+    "zo_pseudo_gradient",
 ]

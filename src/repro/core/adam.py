@@ -64,15 +64,16 @@ def make_addax_adam_step(loss_fn: Callable[[Any, Any], jax.Array],
     def step(params, state, step_idx, batch0, batch1):
         seed = rng.fold_seed(0xADA3, step_idx)
         lr = lr_fn(step_idx)
-        g0, loss0, params = spsa.spsa_directional_grad(
-            loss_fn, params, batch0, seed, cfg.eps, cfg.spsa_mode)
+        g0, loss0, params = spsa.spsa_bank_grad(
+            loss_fn, params, batch0, seed, cfg.eps, cfg.n_dirs,
+            cfg.spsa_mode)
         loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
         zo = spsa.zo_pseudo_gradient(g0, seed, params)
         mixed = jax.tree_util.tree_map(
             lambda a, b: cfg.alpha * a + (1 - cfg.alpha) * b.astype(jnp.float32),
             zo, g1)
         params, state = _adam_update(params, mixed, state, lr, step_idx)
-        return params, state, {"loss_zo": loss0, "loss_fo": loss1, "g0": g0,
-                               "lr": lr}
+        return params, state, {"loss_zo": loss0, "loss_fo": loss1,
+                               "g0": jnp.mean(g0), "lr": lr}
 
     return step

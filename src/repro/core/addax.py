@@ -5,11 +5,13 @@ One Addax step:
   1. draw minibatch ``B0`` (long sequences, K0 examples at up to L_max) and
      ``B1`` (short sequences, K1 examples at up to L_T) — done host-side by
      ``repro.data.pipeline``; here they arrive as two fixed-shape batches,
-  2. ``g0, _, params = spsa_directional_grad(loss, params, B0, seed, eps)``
-     — two forward passes, scalar result (Algorithm 2),
+  2. ``g0, _, params = spsa_bank_grad(loss, params, B0, seed, eps, n)``
+     — ``2 n_dirs`` forward passes, one directional derivative per bank
+     direction (Algorithm 2; ``n_dirs=1`` is the paper's single probe),
   3. ``g1 = grad(loss)(params, B1)`` — one backprop on the *short* batch,
-  4. fused update ``theta <- theta - eta (alpha g0 z + (1-alpha) g1)`` with
-     ``z`` regenerated leaf-by-leaf from the seed (never stored).
+  4. fused update ``theta <- theta - eta (alpha mean_k(g0_k z_k)
+     + (1-alpha) g1)`` with every ``z_k`` regenerated leaf-by-leaf from
+     the per-direction seeds (never stored).
 
 Addax-WA ("without assignment", paper §3.1) is the same step with B0 and B1
 drawn from the same distribution — a data-pipeline choice, not a different
@@ -44,6 +46,7 @@ class AddaxConfig:
     schedule: str = "constant"
     spsa_mode: str = "chain"    # "chain" (paper-faithful) | "fresh"
     grad_clip: float | None = None   # optional global-norm clip on g1
+    n_dirs: int = 1             # SPSA estimator-bank size (1 = paper alg.)
 
 
 LossFn = Callable[[Any, Any], jax.Array]
@@ -57,20 +60,31 @@ def _tree_sq_norm(tree: Any) -> jax.Array:
 
 def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
                  seed: jax.Array, lr: jax.Array, alpha: float) -> Any:
-    """theta <- theta - lr * (alpha * g0 * z(seed) + (1-alpha) * fo_grads).
+    """theta <- theta - lr * (alpha * zo + (1-alpha) * fo_grads), where
+    ``zo`` is ``g0 * z(seed)`` for a scalar ``g0`` and the estimator-bank
+    mean ``mean_k(g0[k] * z(fold_dir(seed, k)))`` for a vector ``g0`` of
+    shape ``(n_dirs,)``.
 
-    z is regenerated per leaf inside the map (paper Algorithm 1, steps
-    13-17); with donation this is a single streaming pass over the
-    parameters.  Either gradient source may be ``None`` (MeZO: fo=None,
-    IP-SGD: g0=None).
+    Every direction's z is regenerated per leaf inside the map (paper
+    Algorithm 1, steps 13-17); with donation this stays a single streaming
+    pass over the parameters regardless of ``n_dirs``.  Either gradient
+    source may be ``None`` (MeZO: fo=None, IP-SGD: g0=None).  A
+    one-direction bank applies ``(alpha * g0[0]) * z`` exactly like the
+    scalar path — bit-identical.
     """
     ids = rng.leaf_ids(params)
+    if g0 is not None:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        n_dirs = g0v.shape[0]
+        seeds = rng.dir_seeds(seed, n_dirs)
+        w_zo = alpha / n_dirs       # python float: exact for n_dirs = 1
 
     def one(leaf, lid, g1):
         upd = jnp.zeros(leaf.shape, jnp.float32)
         if g0 is not None:
-            z = rng.leaf_z(seed, lid, leaf.shape, jnp.float32)
-            upd = upd + alpha * g0 * z
+            for k in range(n_dirs):
+                z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
+                upd = upd + (w_zo * g0v[k]) * z
         if g1 is not None:
             upd = upd + (1.0 - alpha if g0 is not None else 1.0) * \
                 g1.astype(jnp.float32)
@@ -95,9 +109,10 @@ def make_addax_step(loss_fn: LossFn, cfg: AddaxConfig,
         seed = rng.fold_seed(0xADDA, step_idx)
         lr = lr_fn(step_idx)
 
-        # --- zeroth-order half: two forward passes, scalar g0 ------------
-        g0, loss0, params = spsa.spsa_directional_grad(
-            loss_fn, params, batch0, seed, cfg.eps, cfg.spsa_mode)
+        # --- zeroth-order half: 2*n_dirs forward passes, g0 vector -------
+        g0, loss0, params = spsa.spsa_bank_grad(
+            loss_fn, params, batch0, seed, cfg.eps, cfg.n_dirs,
+            cfg.spsa_mode)
 
         # --- first-order half: backprop on the short batch ---------------
         loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
@@ -109,8 +124,10 @@ def make_addax_step(loss_fn: LossFn, cfg: AddaxConfig,
         # --- fused mixed update ------------------------------------------
         params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
 
-        metrics = {"loss_zo": loss0, "loss_fo": loss1, "g0": g0,
-                   "fo_grad_norm": gnorm, "lr": lr}
+        metrics = {"loss_zo": loss0, "loss_fo": loss1,
+                   "g0": jnp.mean(g0), "fo_grad_norm": gnorm, "lr": lr}
+        if cfg.n_dirs > 1:
+            metrics["g0_std"] = jnp.std(g0)
         return params, metrics
 
     return step

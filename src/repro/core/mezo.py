@@ -6,6 +6,7 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import rng, spsa
 from repro.core.addax import AddaxConfig, fused_update
@@ -18,9 +19,13 @@ def make_mezo_step(loss_fn: Callable[[Any, Any], jax.Array],
     def step(params, step_idx, batch):
         seed = rng.fold_seed(0x3E20, step_idx)
         lr = lr_fn(step_idx)
-        g0, loss, params = spsa.spsa_directional_grad(
-            loss_fn, params, batch, seed, cfg.eps, cfg.spsa_mode)
+        g0, loss, params = spsa.spsa_bank_grad(
+            loss_fn, params, batch, seed, cfg.eps, cfg.n_dirs,
+            cfg.spsa_mode)
         params = fused_update(params, None, g0, seed, lr, alpha=1.0)
-        return params, {"loss_zo": loss, "g0": g0, "lr": lr}
+        metrics = {"loss_zo": loss, "g0": jnp.mean(g0), "lr": lr}
+        if cfg.n_dirs > 1:
+            metrics["g0_std"] = jnp.std(g0)
+        return params, metrics
 
     return step

@@ -143,6 +143,23 @@ def tree_perturb(params: Any, seed: jax.Array, scale) -> Any:
     return jax.tree_util.tree_map(one, params, ids)
 
 
+def tree_perturb2(params: Any, seed_a: jax.Array, scale_a,
+                  seed_b: jax.Array, scale_b) -> Any:
+    """params + scale_a * z(seed_a) + scale_b * z(seed_b) in one streaming
+    pass — the estimator bank's fused "restore direction k, perturb
+    direction k+1" transition (chain walk ``…, +eps z_k + eps z_{k+1}, …``).
+    Halves the parameter traffic of the naive restore-then-perturb pair."""
+    ids = leaf_ids(params)
+
+    def one(leaf, lid):
+        za = leaf_z(seed_a, lid, leaf.shape, jnp.float32)
+        zb = leaf_z(seed_b, lid, leaf.shape, jnp.float32)
+        return (leaf.astype(jnp.float32)
+                + scale_a * za + scale_b * zb).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(one, params, ids)
+
+
 def tree_dot_z(seed: jax.Array, tree: Any) -> jax.Array:
     """<tree, z(seed)> — useful for tests and variance diagnostics."""
     ids = leaf_ids(tree)
@@ -164,3 +181,29 @@ def fold_seed(base_seed: int | jax.Array, step: jax.Array) -> jax.Array:
     b0, _ = threefry2x32(jnp.uint32(base_seed), jnp.uint32(0x5EED),
                          jnp.asarray(step, jnp.uint32), jnp.uint32(1))
     return b0
+
+
+def fold_dir(seed: jax.Array, k: int) -> jax.Array:
+    """Per-direction seed for the multi-direction estimator bank.
+
+    Direction 0 keeps the base (per-step) seed untouched so ``n_dirs=1``
+    reduces bit-exactly to the single-direction path; direction ``k > 0``
+    mixes ``(seed, k)`` through one threefry call.  ``k`` is a static
+    python int (the bank size is a compile-time constant)."""
+    if k == 0:
+        return jnp.asarray(seed, jnp.uint32)
+    b0, _ = threefry2x32(jnp.asarray(seed, jnp.uint32), jnp.uint32(0xD14),
+                         jnp.uint32(k), jnp.uint32(2))
+    return b0
+
+
+def dir_seeds(seed: jax.Array, n_dirs: int) -> list[jax.Array]:
+    """The bank's seed vector ``[fold_dir(seed, k) for k in range(n)]``.
+
+    Every consumer of the bank (the SPSA walk, the fused jnp update, the
+    Pallas kernel's scalar-prefetch vector, and the kernel's oracle) derives
+    direction seeds through this one function — that is what keeps the
+    checkpoint-replay story intact: state is still ``(base seed, step)``."""
+    if n_dirs < 1:
+        raise ValueError(f"n_dirs must be >= 1, got {n_dirs}")
+    return [fold_dir(seed, k) for k in range(n_dirs)]

@@ -56,10 +56,78 @@ def spsa_directional_grad(loss_fn: LossFn, params: Any, batch: Any,
     return g0.astype(jnp.float32), loss_avg.astype(jnp.float32), restored
 
 
+def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
+                   seed: jax.Array, eps: float, n_dirs: int = 1,
+                   mode: str = "chain"):
+    """Multi-direction estimator bank: ``n_dirs`` independent SPSA probes
+    per step (variance-reduced ZO a la Gautam et al.).  Returns
+    ``(g0, loss_avg, params_restored)`` where ``g0`` has shape
+    ``(n_dirs,)`` with ``g0[k]`` the central difference along
+    ``z(fold_dir(seed, k))``.
+
+    ``chain`` mode generalizes the Algorithm 2/3 walk while keeping the
+    single-live-buffer property: the parameters move through
+
+        +eps z_0,  -2eps z_0,  +eps z_0 + eps z_1,  -2eps z_1,  ...,
+        -2eps z_{n-1},  +eps z_{n-1}
+
+    i.e. each direction's restore is fused with the next direction's
+    perturbation (``rng.tree_perturb2``), so there are ``2 n_dirs + 1``
+    streaming passes and never a second parameter buffer.  ``fresh`` mode
+    probes every direction from the original ``theta`` (bit-exact restore;
+    test ground truth).
+
+    ``n_dirs=1`` performs the exact op sequence of
+    ``spsa_directional_grad`` — same seeds, same arithmetic — so it is
+    bit-identical to the single-direction path (``g0`` just gains a
+    leading axis of size 1).
+    """
+    seeds = rng.dir_seeds(seed, n_dirs)
+    g0s, loss_avgs = [], []
+    if mode == "chain":
+        p = rng.tree_perturb(params, seeds[0], eps)
+        for k in range(n_dirs):
+            l_plus = loss_fn(p, batch)
+            p = rng.tree_perturb(p, seeds[k], -2.0 * eps)
+            l_minus = loss_fn(p, batch)
+            if k + 1 < n_dirs:
+                p = rng.tree_perturb2(p, seeds[k], eps, seeds[k + 1], eps)
+            else:
+                p = rng.tree_perturb(p, seeds[k], eps)
+            g0s.append((l_plus - l_minus) / (2.0 * eps))
+            loss_avgs.append(0.5 * (l_plus + l_minus))
+        restored = p
+    elif mode == "fresh":
+        for k in range(n_dirs):
+            l_plus = loss_fn(rng.tree_perturb(params, seeds[k], eps), batch)
+            l_minus = loss_fn(rng.tree_perturb(params, seeds[k], -eps),
+                              batch)
+            g0s.append((l_plus - l_minus) / (2.0 * eps))
+            loss_avgs.append(0.5 * (l_plus + l_minus))
+        restored = params
+    else:
+        raise ValueError(f"unknown spsa mode: {mode!r}")
+
+    g0 = jnp.stack(g0s).astype(jnp.float32)
+    loss_avg = jnp.mean(jnp.stack(loss_avgs)).astype(jnp.float32)
+    return g0, loss_avg, restored
+
+
 def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any) -> Any:
-    """Materialize ``g0 * z(seed)`` as a pytree (only used by baselines and
-    tests; the fused update path regenerates z leaf-by-leaf instead)."""
+    """Materialize the ZO pseudo-gradient as a pytree (only used by
+    baselines and tests; the fused update path regenerates z leaf-by-leaf
+    instead).  Scalar ``g0``: ``g0 * z(seed)``.  Vector ``g0`` of shape
+    ``(n,)``: the bank mean ``mean_k(g0[k] * z(fold_dir(seed, k)))``."""
     ids = rng.leaf_ids(params)
-    return jax.tree_util.tree_map(
-        lambda leaf, lid: g0 * rng.leaf_z(seed, lid, leaf.shape, jnp.float32),
-        params, ids)
+    g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+    n = g0v.shape[0]
+    seeds = rng.dir_seeds(seed, n)
+
+    def one(leaf, lid):
+        acc = jnp.zeros(leaf.shape, jnp.float32)
+        for k in range(n):
+            acc = acc + (g0v[k] / n) * rng.leaf_z(seeds[k], lid, leaf.shape,
+                                                  jnp.float32)
+        return acc
+
+    return jax.tree_util.tree_map(one, params, ids)

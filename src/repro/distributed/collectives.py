@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compression, rng
+from repro.core import compression, rng, spsa
 from repro.core.addax import AddaxConfig, fused_update
 
 
@@ -47,13 +47,15 @@ def make_dp_addax_step(loss_fn: Callable[[Any, Any], jax.Array],
         seed = rng.fold_seed(0xADDA, step_idx)
         lr = lr_fn(step_idx)
 
-        # --- ZO half: local loss diffs, scalar psum --------------------
-        p_plus = rng.tree_perturb(params, seed, cfg.eps)
-        l_plus = jax.lax.pmean(loss_fn(p_plus, b0), axes)
-        p_minus = rng.tree_perturb(p_plus, seed, -2.0 * cfg.eps)
-        l_minus = jax.lax.pmean(loss_fn(p_minus, b0), axes)
-        params = rng.tree_perturb(p_minus, seed, cfg.eps)
-        g0 = (l_plus - l_minus) / (2.0 * cfg.eps)
+        # --- ZO half: the shared bank walk over a pmean'd loss — each
+        # direction synchronizes two scalars (z replays bit-identically
+        # per shard, so the wire cost stays 2 * n_dirs floats, never d)
+        def pmean_loss(p, b):
+            return jax.lax.pmean(loss_fn(p, b), axes)
+
+        g0, loss0, params = spsa.spsa_bank_grad(
+            pmean_loss, params, b0, seed, cfg.eps, cfg.n_dirs,
+            cfg.spsa_mode)
 
         # --- FO half: local grad, (compressed) psum ---------------------
         loss1, g1 = jax.value_and_grad(loss_fn)(params, b1)
@@ -65,16 +67,26 @@ def make_dp_addax_step(loss_fn: Callable[[Any, Any], jax.Array],
                 lambda g: jax.lax.pmean(g, axes), g1)
 
         params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
-        metrics = {"loss_zo": 0.5 * (l_plus + l_minus), "loss_fo": loss1,
-                   "g0": g0, "lr": lr}
+        metrics = {"loss_zo": loss0, "loss_fo": loss1,
+                   "g0": jnp.mean(g0), "lr": lr}
+        if cfg.n_dirs > 1:
+            metrics["g0_std"] = jnp.std(g0)
         return params, metrics
 
     batch_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-    shmapped = jax.shard_map(
-        local_step, mesh=mesh,
-        in_specs=(P(), P(), batch_spec, batch_spec),
-        out_specs=(P(), P()),
-        check_vma=False)
+    if hasattr(jax, "shard_map"):
+        shmapped = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(P(), P(), batch_spec, batch_spec),
+            out_specs=(P(), P()),
+            check_vma=False)
+    else:   # older jax: experimental namespace, check_rep spelling
+        from jax.experimental.shard_map import shard_map
+        shmapped = shard_map(
+            local_step, mesh=mesh,
+            in_specs=(P(), P(), batch_spec, batch_spec),
+            out_specs=(P(), P()),
+            check_rep=False)
     return shmapped
 
 
@@ -91,11 +103,13 @@ def batch_sharding(mesh: Mesh, data_axes: tuple[str, ...] = ("data",)):
 
 
 def collective_bytes_of_dp_step(n_params: int, dp: int,
-                                compress: bool) -> dict:
+                                compress: bool, n_dirs: int = 1) -> dict:
     """Napkin model of per-step DP collective bytes (used by benchmarks):
-    ZO = one scalar ring all-reduce; FO = ring all-reduce of the gradient
-    (2 (dp-1)/dp bytes-per-elem factor folded out — we report payload)."""
+    ZO = two scalar ring all-reduces per bank direction; FO = ring
+    all-reduce of the gradient (2 (dp-1)/dp bytes-per-elem factor folded
+    out — we report payload)."""
     fo_bytes = n_params * (1 if compress else 4)
-    return {"zo_bytes": 8, "fo_bytes": fo_bytes,
+    zo_bytes = 8 * n_dirs
+    return {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
             "sgd_bytes": n_params * 4,
-            "ratio_vs_sgd": (8 + fo_bytes) / (n_params * 4)}
+            "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}

@@ -1,18 +1,28 @@
 """Pallas TPU kernel: fused Addax parameter update (paper Algorithm 1,
-steps 9-17, collapsed into one streaming pass).
+steps 9-17, collapsed into one streaming pass), generalized to the
+multi-direction estimator bank:
 
-    theta' = theta - lr * (alpha * g0 * z(seed) + (1 - alpha) * g1)
+    theta' = theta - lr * (alpha/n * sum_k g0[k] * z(seed_k) + (1-alpha) g1)
 
 The paper's PyTorch code walks the layers twice (FO update during the
 backward sweep, then a second seed-replayed loop for the ZO term).  Here
-one kernel reads each theta tile once, regenerates the matching z tile in
-VMEM (same counters as the perturbation/zo_matmul kernels), applies both
-terms, and writes the tile back — with ``input_output_aliasing`` the
-update is literally in-place in HBM: zero extra parameter-sized buffers,
-the TPU equivalent of IP-SGD + MeZO's storage story.
+one kernel reads each theta tile once, regenerates the matching z tile of
+*every* bank direction in VMEM (same counters as the perturbation/
+zo_matmul kernels), applies all terms, and writes the tile back — with
+``input_output_aliasing`` the update is literally in-place in HBM: zero
+extra parameter-sized buffers regardless of ``n_dirs``, the TPU
+equivalent of IP-SGD + MeZO's storage story.
 
 Also covers MeZO (alpha=1: g1 absent) and IP-SGD (alpha=0: z skipped) so
 the baselines share the memory property.
+
+Scalar layout: the per-direction seeds and the ``g0`` vector ride in one
+uint32 scalar-prefetch vector ``[lr, seed_0..seed_{n-1},
+g0_0..g0_{n-1}]`` (fp32 entries bitcast — prefetch refs are
+single-dtype), available before the kernel body runs via
+``pltpu.PrefetchScalarGridSpec``.  The per-direction loop is unrolled at
+trace time (``n_dirs`` is static), so each direction costs one extra
+threefry + FMA per element and nothing in HBM traffic.
 
 The leaf is processed as a logical (rows, cols) matrix (trailing dim =
 cols), tiled (block_r, block_c); counters are global element indices so
@@ -32,57 +42,73 @@ from repro.kernels.zo_matmul.kernel import tile_z
 
 
 def _update_kernel(scalars_ref, theta_ref, g1_ref, o_ref, *,
-                   leaf_id: int, alpha: float, block_r: int, block_c: int,
+                   leaf_id: int, alpha: float, n_dirs: int,
+                   block_r: int, block_c: int,
                    with_fo: bool, with_zo: bool):
     i = pl.program_id(0)
     j = pl.program_id(1)
-    seed = scalars_ref[0]
     theta = theta_ref[...].astype(jnp.float32)
     upd = jnp.zeros_like(theta)
     if with_zo:
-        g0 = jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32)
-        z = tile_z(seed, leaf_id, jnp.uint32(i * block_r),
-                   jnp.uint32(j * block_c), block_r, block_c)
-        upd = upd + (alpha * g0) * z
+        w_zo = alpha / n_dirs        # python float: exact for n_dirs = 1
+        for k in range(n_dirs):
+            seed_k = scalars_ref[1 + k]
+            g0_k = jax.lax.bitcast_convert_type(
+                scalars_ref[1 + n_dirs + k], jnp.float32)
+            z = tile_z(seed_k, leaf_id, jnp.uint32(i * block_r),
+                       jnp.uint32(j * block_c), block_r, block_c)
+            upd = upd + (w_zo * g0_k) * z
     if with_fo:
         w = (1.0 - alpha) if with_zo else 1.0
         upd = upd + w * g1_ref[...].astype(jnp.float32)
-    lr = jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32)
+    lr = jax.lax.bitcast_convert_type(scalars_ref[0], jnp.float32)
     o_ref[...] = (theta - lr * upd).astype(o_ref.dtype)
 
 
+def pack_scalars(seeds: jax.Array, g0: jax.Array, lr) -> jax.Array:
+    """Build the kernel's uint32 scalar-prefetch vector
+    ``[lr, seed_0.., g0_0..]``.  ``seeds``: (n,) uint32 (from
+    ``rng.dir_seeds``); ``g0``: (n,) fp32."""
+    lr_bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(lr, jnp.float32), jnp.uint32)
+    g0_bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(g0, jnp.float32), jnp.uint32)
+    return jnp.concatenate([lr_bits.reshape(1),
+                            jnp.asarray(seeds, jnp.uint32).reshape(-1),
+                            g0_bits.reshape(-1)])
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "leaf_id", "alpha", "block_r", "block_c", "with_fo", "with_zo",
-    "interpret"))
-def addax_update_pallas(theta2d: jax.Array, g1_2d: jax.Array, g0, seed, lr,
-                        *, leaf_id: int, alpha: float, block_r: int = 256,
+    "leaf_id", "alpha", "n_dirs", "block_r", "block_c", "with_fo",
+    "with_zo", "interpret"))
+def addax_update_pallas(theta2d: jax.Array, g1_2d: jax.Array,
+                        scalars: jax.Array, *, leaf_id: int, alpha: float,
+                        n_dirs: int = 1, block_r: int = 256,
                         block_c: int = 256, with_fo: bool = True,
                         with_zo: bool = True,
                         interpret: bool = False) -> jax.Array:
-    """theta2d/g1_2d: (R, C) tile-aligned.  Scalars (seed, g0, lr) ride in
-    one SMEM vector; g0/lr are fp32 bitcast to uint32 (SMEM scalar refs
-    are single-dtype)."""
+    """theta2d/g1_2d: (R, C) tile-aligned.  ``scalars``: the uint32
+    prefetch vector from ``pack_scalars`` (length ``1 + 2 n_dirs``)."""
     r, c = theta2d.shape
     assert r % block_r == 0 and c % block_c == 0, ((r, c),
                                                    (block_r, block_c))
-    scalars = jnp.stack([
-        jnp.asarray(seed, jnp.uint32),
-        jax.lax.bitcast_convert_type(jnp.asarray(g0, jnp.float32),
-                                     jnp.uint32),
-        jax.lax.bitcast_convert_type(jnp.asarray(lr, jnp.float32),
-                                     jnp.uint32)])
+    assert scalars.shape == (1 + 2 * n_dirs,), (scalars.shape, n_dirs)
     kernel = functools.partial(
-        _update_kernel, leaf_id=leaf_id, alpha=alpha, block_r=block_r,
-        block_c=block_c, with_fo=with_fo, with_zo=with_zo)
+        _update_kernel, leaf_id=leaf_id, alpha=alpha, n_dirs=n_dirs,
+        block_r=block_r, block_c=block_c, with_fo=with_fo, with_zo=with_zo)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r // block_r, c // block_c),
+        # index maps receive the prefetch ref as a trailing argument
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j)),
+    )
     return pl.pallas_call(
         kernel,
-        grid=(r // block_r, c // block_c),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
-            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((r, c), theta2d.dtype),
         input_output_aliases={1: 0},       # theta updated in place
         interpret=interpret,

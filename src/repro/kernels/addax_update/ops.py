@@ -1,9 +1,16 @@
-"""Jitted wrappers: leaf-shaped (any rank) fused Addax/MeZO updates.
+"""Jitted wrappers: leaf-shaped (any rank) fused Addax/MeZO/IP-SGD
+updates, generalized to the multi-direction estimator bank.
 
 Leaves are viewed as (rows, cols) with cols = trailing dim — the same
 logical layout ``repro.core.rng.leaf_z`` uses — padded to tile multiples
 (padded z values are generated but their updates are sliced away; real
 elements keep their global counters, so results are tiling-invariant).
+
+``g0`` may be a scalar (single direction, the paper algorithm), an
+``(n_dirs,)`` vector (bank mean ``alpha/n sum_k g0_k z_k``), or ``None``
+(IP-SGD: pure FO update).  ``g1 = None`` gives MeZO.  Per-direction seeds
+derive from the base seed via ``repro.core.rng.dir_seeds`` and ride into
+the kernel through its scalar-prefetch vector.
 """
 
 from __future__ import annotations
@@ -14,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.addax_update.kernel import addax_update_pallas
+from repro.core import rng
+from repro.kernels.addax_update.kernel import (addax_update_pallas,
+                                               pack_scalars)
 
 
 def _as2d(x: jax.Array):
@@ -35,20 +44,32 @@ def _pad_tiles(x: jax.Array, br: int, bc: int):
 
 @functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "block_r",
                                              "block_c", "interpret"))
-def addax_update(theta: jax.Array, g1: jax.Array, g0, seed, lr, *,
+def addax_update(theta: jax.Array, g1: jax.Array | None, g0, seed, lr, *,
                  leaf_id: int, alpha: float, block_r: int = 256,
                  block_c: int = 256, interpret: bool = False) -> jax.Array:
-    """theta' = theta - lr*(alpha*g0*z + (1-alpha)*g1), any leaf shape."""
+    """theta' = theta - lr*(alpha/n sum_k g0_k z_k + (1-alpha)*g1), any
+    leaf shape.  ``g0=None`` drops the ZO term, ``g1=None`` the FO term."""
     shape = theta.shape
     t2 = _as2d(theta)
-    g2 = _as2d(g1.astype(theta.dtype))
+    with_zo = g0 is not None
+    with_fo = g1 is not None
+    if with_zo:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        n_dirs = g0v.shape[0]
+        seeds = jnp.stack(rng.dir_seeds(seed, n_dirs))
+    else:
+        g0v = jnp.zeros((1,), jnp.float32)
+        n_dirs = 1
+        seeds = jnp.zeros((1,), jnp.uint32)
+    scalars = pack_scalars(seeds, g0v, lr)
     br = min(block_r, max(8, t2.shape[0]))
     bc = min(block_c, t2.shape[1])
     tp = _pad_tiles(t2, br, bc)
+    g2 = _as2d(g1.astype(theta.dtype)) if with_fo else t2
     gp = _pad_tiles(g2, br, bc)
-    out = addax_update_pallas(tp, gp, g0, seed, lr, leaf_id=leaf_id,
-                              alpha=alpha, block_r=br, block_c=bc,
-                              with_fo=True, with_zo=True,
+    out = addax_update_pallas(tp, gp, scalars, leaf_id=leaf_id,
+                              alpha=alpha, n_dirs=n_dirs, block_r=br,
+                              block_c=bc, with_fo=with_fo, with_zo=with_zo,
                               interpret=interpret)
     return out[:t2.shape[0], :t2.shape[1]].reshape(shape)
 
@@ -58,14 +79,8 @@ def addax_update(theta: jax.Array, g1: jax.Array, g0, seed, lr, *,
 def mezo_update(theta: jax.Array, g0, seed, lr, *, leaf_id: int,
                 block_r: int = 256, block_c: int = 256,
                 interpret: bool = False) -> jax.Array:
-    """MeZO special case: theta' = theta - lr*g0*z (alpha = 1)."""
-    shape = theta.shape
-    t2 = _as2d(theta)
-    br = min(block_r, max(8, t2.shape[0]))
-    bc = min(block_c, t2.shape[1])
-    tp = _pad_tiles(t2, br, bc)
-    out = addax_update_pallas(tp, tp, g0, seed, lr, leaf_id=leaf_id,
-                              alpha=1.0, block_r=br, block_c=bc,
-                              with_fo=False, with_zo=True,
-                              interpret=interpret)
-    return out[:t2.shape[0], :t2.shape[1]].reshape(shape)
+    """MeZO special case: theta' = theta - lr * mean_k(g0_k z_k)
+    (alpha = 1, no FO term; scalar g0 = the classic single direction)."""
+    return addax_update(theta, None, g0, seed, lr, leaf_id=leaf_id,
+                        alpha=1.0, block_r=block_r, block_c=block_c,
+                        interpret=interpret)

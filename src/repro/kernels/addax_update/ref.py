@@ -1,12 +1,19 @@
-"""Pure-jnp oracle for the fused Addax update (paper eq. 3):
+"""Pure-jnp oracle for the fused Addax update, generalized to the
+estimator bank (paper eq. 3 with the bank mean):
 
-    theta' = theta - lr * (alpha * g0 * z(seed) + (1 - alpha) * g1)
+    theta' = theta - lr * (alpha/n * sum_k g0[k] * z(seed_k) + (1-alpha) g1)
 
-z regenerated from ``repro.core.rng.leaf_z`` — identical bits to the
-kernel's per-tile threefry and to the perturbation passes.
+z regenerated from ``repro.core.rng.leaf_z`` with the per-direction seeds
+of ``repro.core.rng.dir_seeds`` — identical bits to the kernel's per-tile
+threefry and to the perturbation passes.  The accumulation mirrors the
+kernel's op order exactly (zeros init, per-direction ``(alpha/n * g0_k) *
+z_k`` FMAs in bank order, then the FO term), so interpret-mode kernel
+runs match this oracle bit for bit.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +21,25 @@ import jax.numpy as jnp
 from repro.core import rng
 
 
+@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha"))
 def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
                      leaf_id: int, lr, alpha: float) -> jax.Array:
-    z = rng.leaf_z(seed, leaf_id, theta.shape, jnp.float32)
-    upd = alpha * g0 * z
+    """``g0`` may be ``None`` (IP-SGD), a scalar (single direction), or an
+    ``(n_dirs,)`` vector (bank); ``g1`` may be ``None`` (MeZO).
+
+    Jitted on purpose: the kernel's interpret-mode body and this oracle
+    then see the same XLA simplifications (notably fma contraction), which
+    is what makes bit-for-bit comparison meaningful on CPU."""
+    upd = jnp.zeros(theta.shape, jnp.float32)
+    if g0 is not None:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        n_dirs = g0v.shape[0]
+        seeds = rng.dir_seeds(seed, n_dirs)
+        w_zo = alpha / n_dirs
+        for k in range(n_dirs):
+            z = rng.leaf_z(seeds[k], leaf_id, theta.shape, jnp.float32)
+            upd = upd + (w_zo * g0v[k]) * z
     if g1 is not None:
-        upd = upd + (1.0 - alpha) * g1.astype(jnp.float32)
+        w = (1.0 - alpha) if g0 is not None else 1.0
+        upd = upd + w * g1.astype(jnp.float32)
     return (theta.astype(jnp.float32) - lr * upd).astype(theta.dtype)

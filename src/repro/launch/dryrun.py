@@ -39,6 +39,9 @@ def _parse_opts(kvs):
         field = {f.name: f for f in dataclasses.fields(CellOptions)}[k]
         if field.type == "bool" or isinstance(field.default, bool):
             over[k] = v.lower() in ("1", "true", "yes")
+        elif isinstance(field.default, int) and \
+                not isinstance(field.default, bool):
+            over[k] = int(v)
         elif isinstance(field.default, float):
             over[k] = float(v)
         elif k == "param_dtype":

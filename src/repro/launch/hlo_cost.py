@@ -55,6 +55,9 @@ _ATTR_CALLS = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPERAND = re.compile(r"%?([\w.\-]+)")
+# newer XLA prints typed operands ("f32[8,8]{1,0} %name"): the %-prefixed
+# token is the instruction name, the bare-token fallback covers old dumps
+_OPERAND_PCT = re.compile(r"%([\w.\-]+)")
 _CONSTANT_VAL = re.compile(r"constant\((\d+)\)")
 
 
@@ -106,14 +109,18 @@ class Cost:
 
 
 def _split_operands(arg_str: str) -> list[str]:
-    """Operand names from the call-paren region of an instruction line."""
+    """Operand names from the call-paren region of an instruction line.
+    Commas inside nested (), [] (shape dims) and {} (layouts) do not
+    split — newer XLA prints typed operands like ``f32[8,8]{1,0} %x``."""
     depth, out, cur = 0, [], []
     for ch in arg_str:
-        if ch == "(":
+        if ch in "([{":
             depth += 1
         elif ch == ")":
             if depth == 0:
                 break
+            depth -= 1
+        elif ch in "]}":
             depth -= 1
         elif ch == "," and depth == 0:
             out.append("".join(cur))
@@ -124,7 +131,8 @@ def _split_operands(arg_str: str) -> list[str]:
         out.append("".join(cur))
     names = []
     for tok in out:
-        m = _OPERAND.search(tok.strip())
+        t = tok.strip()
+        m = _OPERAND_PCT.search(t) or _OPERAND.search(t)
         if m:
             names.append(m.group(1))
     return names

@@ -44,6 +44,7 @@ class CellOptions:
     alpha: float = 5e-4
     eps: float = 1e-3
     lr: float = 1e-4
+    n_dirs: int = 0                    # SPSA bank size; 0 = arch default
     replicate_small_kv: bool = True    # kv_heads unsharded when < TP degree
                                        # (Megatron GQA practice; False forces
                                        # GSPMD padding — §Perf ablation)
@@ -159,7 +160,9 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
     ctx = build_ctx(bundle, mesh, opts)
     data_axes = data_axes_of(mesh)
     loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
-    acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha)
+    n_dirs = opts.n_dirs or getattr(bundle.arch, "n_dirs", 1)
+    acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha,
+                       n_dirs=n_dirs)
     lr_fn = schedules.constant(opts.lr)
 
     cell = plan_train_cell(bundle.arch, shape)

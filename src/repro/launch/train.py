@@ -33,6 +33,8 @@ def main(argv=None):
     p.add_argument("--lr", type=float, default=1e-4)
     p.add_argument("--alpha", type=float, default=5e-4)
     p.add_argument("--eps", type=float, default=1e-3)
+    p.add_argument("--n-dirs", type=int, default=1,
+                   help="SPSA estimator-bank size (directions per step)")
     p.add_argument("--task", default="markov",
                    choices=("markov", "copy", "classify"))
     p.add_argument("--profile", default="multirc",
@@ -67,7 +69,8 @@ def main(argv=None):
           f"|D1|={pipe.assignment.d1.size}")
 
     acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
-                       k0=args.k0, k1=args.k1, l_t=args.l_t)
+                       k0=args.k0, k1=args.k1, l_t=args.l_t,
+                       n_dirs=args.n_dirs)
     opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
                           total_steps=args.steps)
     dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16

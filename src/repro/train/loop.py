@@ -41,8 +41,13 @@ class TrainLoopConfig:
     straggler_threshold: float = 2.5
 
 
-def _to_host_scalar(x) -> float:
-    return float(np.asarray(jax.device_get(x)))
+def _to_host_metric(x):
+    """Scalar metrics -> float; vector metrics (e.g. a per-direction g0
+    bank) -> list of floats, kept JSONL-serializable."""
+    arr = np.asarray(jax.device_get(x))
+    if arr.size == 1:
+        return float(arr.reshape(()))
+    return [float(v) for v in arr.ravel()]
 
 
 class MetricsLogger:
@@ -119,7 +124,7 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
 
         if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
             rec = {"step": step,
-                   **{k: _to_host_scalar(v) for k, v in metrics.items()}}
+                   **{k: _to_host_metric(v) for k, v in metrics.items()}}
             if ev:
                 rec["straggler"] = True
             logger.log(rec)

@@ -1,0 +1,104 @@
+"""Optional-hypothesis shim.
+
+When ``hypothesis`` is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies`` untouched.  When it is absent
+(bare CPU boxes, minimal CI images), it provides a tiny fallback that
+replays a handful of fixed, deterministic examples per test through
+``pytest.mark.parametrize`` — far weaker than real property testing, but
+it keeps the tier-1 suite collecting and the invariants exercised.
+
+Usage in test modules (instead of ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+
+Only the strategy combinators this repo actually uses are shimmed:
+``integers``, ``floats``, ``lists``, ``sampled_from``, ``one_of``,
+``none``.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import pytest
+
+    _MAX_EXAMPLES = 5      # fixed examples replayed per @given test
+
+    class _Samples:
+        """A 'strategy': just a deterministic list of example values."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            span = max_value - min_value
+            mid = min_value + span // 2
+            probe = min_value + (7919 % (span + 1) if span else 0)
+            return _Samples(dict.fromkeys(
+                [min_value, max_value, mid, probe]))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            mid = 0.5 * (min_value + max_value)
+            return _Samples([min_value, max_value, mid])
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Samples(seq)
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            vals = elem.values or [0]
+            cycled = list(itertools.islice(itertools.cycle(vals),
+                                           max(max_size, 1)))
+            out = [cycled[:max(min_size, 1)], cycled]
+            if min_size == 0:
+                out.insert(0, [])
+            return _Samples(out)
+
+        @staticmethod
+        def one_of(*strats):
+            return _Samples(v for s in strats for v in s.values)
+
+        @staticmethod
+        def none():
+            return _Samples([None])
+
+    st = _St()
+
+    def given(**kw):
+        names = sorted(kw)
+        n = min(_MAX_EXAMPLES, max(len(kw[k].values) for k in names))
+        examples = [
+            {k: kw[k].values[i % len(kw[k].values)] for k in names}
+            for i in range(n)
+        ]
+
+        def deco(fn):
+            # Plain positional wrapper (no functools.wraps: pytest must
+            # see *this* signature, not the wrapped one, when resolving
+            # fixtures).
+            def wrapper(_hc_example):
+                fn(**_hc_example)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            ids = [f"ex{i}" for i in range(len(examples))]
+            return pytest.mark.parametrize("_hc_example", examples,
+                                           ids=ids)(wrapper)
+
+        return deco
+
+    def settings(*args, **kw):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_arch
+
+pytestmark = pytest.mark.slow    # full model instantiation per arch
 from repro.core import schedules
 from repro.core.addax import AddaxConfig, make_addax_step
 from repro.models.registry import get_bundle

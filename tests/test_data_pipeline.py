@@ -4,7 +4,7 @@ replay, mask correctness."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import assignment as asg
 from repro.data.pipeline import AddaxPipeline, PipelineConfig, auto_plan

@@ -49,10 +49,10 @@ def test_dp_addax_step_matches_single_device():
         from repro.distributed.collectives import (batch_sharding,
                                                    make_dp_addax_step,
                                                    replicated)
+        from repro.launch.mesh import _mk
         from repro.models.registry import get_bundle
 
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _mk((8,), ("data",))
         b = get_bundle("tiny-100m", smoke=True)
         cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
         lr_fn = schedules.constant(cfg.lr)
@@ -89,6 +89,55 @@ def test_dp_addax_step_matches_single_device():
     assert res["max_param_diff"] < 1e-5
 
 
+def test_dp_addax_step_bank_matches_single_device():
+    """The n_dirs=2 estimator-bank walk under shard_map (per-direction
+    scalar pmean pairs, fused restore/perturb transition) matches the
+    single-device bank step."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import schedules
+        from repro.core.addax import AddaxConfig, make_addax_step
+        from repro.distributed.collectives import (batch_sharding,
+                                                   make_dp_addax_step,
+                                                   replicated)
+        from repro.launch.mesh import _mk
+        from repro.models.registry import get_bundle
+
+        mesh = _mk((8,), ("data",))
+        b = get_bundle("tiny-100m", smoke=True)
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=2)
+        lr_fn = schedules.constant(cfg.lr)
+        params = b.init_params(jax.random.key(0))
+        b0 = b.make_batch(0, 16, 64)
+        b1 = b.make_batch(1, 16, 32)
+
+        dp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh)
+        pd = jax.device_put(params, replicated(mesh))
+        bd0 = jax.device_put(b0, batch_sharding(mesh))
+        bd1 = jax.device_put(b1, batch_sharding(mesh))
+        p_dist, m_dist = jax.jit(dp)(pd, jnp.uint32(3), bd0, bd1)
+
+        ref_step = make_addax_step(b.loss_fn(), cfg, lr_fn)
+        p_ref, m_ref = ref_step(params, jnp.uint32(3), b0, b1)
+
+        diffs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                       - c.astype(jnp.float32))))
+                 for a, c in zip(jax.tree_util.tree_leaves(p_dist),
+                                 jax.tree_util.tree_leaves(p_ref))]
+        print(json.dumps({
+            "max_param_diff": max(diffs),
+            "g0_diff": abs(float(m_dist["g0"]) - float(m_ref["g0"])),
+            "g0_std_diff": abs(float(m_dist["g0_std"])
+                               - float(m_ref["g0_std"])),
+        }))
+    """)
+    res = _run_subprocess(code)
+    assert res["g0_diff"] < 1e-3
+    assert res["g0_std_diff"] < 1e-3
+    assert res["max_param_diff"] < 1e-5
+
+
 def test_dp_addax_step_compressed_fo():
     """int8-compressed FO all-reduce stays close to the exact one and
     still produces identical params on every shard."""
@@ -100,10 +149,10 @@ def test_dp_addax_step_compressed_fo():
         from repro.distributed.collectives import (batch_sharding,
                                                    make_dp_addax_step,
                                                    replicated)
+        from repro.launch.mesh import _mk
         from repro.models.registry import get_bundle
 
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _mk((8,), ("data",))
         b = get_bundle("tiny-100m", smoke=True)
         cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
         lr_fn = schedules.constant(cfg.lr)

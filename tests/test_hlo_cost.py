@@ -28,8 +28,8 @@ def test_matmul_flops_and_allreduce_bytes():
         import json, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_cost import analyze_text
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import _mk
+        mesh = _mk((2, 4), ("data", "model"))
         shA = NamedSharding(mesh, P("data", "model"))
         shB = NamedSharding(mesh, P("model", None))
         def f(a, b):
@@ -98,8 +98,8 @@ def test_all_gather_and_permute_counted():
         import json, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_cost import analyze_text
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import _mk
+        mesh = _mk((8,), ("data",))
         sh = NamedSharding(mesh, P("data"))
         repl = NamedSharding(mesh, P())
         def f(a):

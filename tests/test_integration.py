@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow    # multi-step training/serving loops
+
 from repro.core.addax import AddaxConfig
 from repro.data.pipeline import AddaxPipeline, PipelineConfig
 from repro.data.synthetic import SyntheticTaskConfig, make_corpus

@@ -10,7 +10,7 @@ import textwrap
 
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ALL_ARCHS, SHAPES, get_arch
 from repro.configs.base import ShapeCfg
@@ -65,6 +65,7 @@ def test_decode_inputs_shapes():
         assert 32768 in leaf.shape  # capacity present in cache dims
 
 
+@pytest.mark.slow
 def test_plan_cell_compiles_on_virtual_mesh():
     """plan_cell -> lower -> compile for train/prefill/decode on a tiny
     (2,4) mesh with a reduced shape — the dry-run path as a fast test."""

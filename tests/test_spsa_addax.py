@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import rng, schedules, spsa
 from repro.core.addax import AddaxConfig, fused_update, make_addax_step
@@ -50,6 +50,7 @@ def test_spsa_chain_equals_fresh():
                                atol=1e-6)
 
 
+@pytest.mark.slow
 def test_spsa_unbiased_for_smoothed_loss():
     """E_z[g0 z] approximates grad of the Gaussian-smoothed loss; for a
     quadratic, averaging over many seeds recovers grad L."""
@@ -134,6 +135,7 @@ def test_addax_step_decreases_quadratic(alpha, lr):
     assert float(l1) <= float(l0) + 1e-3 + 0.05 * alpha
 
 
+@pytest.mark.slow
 def test_addax_converges_on_quadratic():
     """1k steps of Addax solve a small least squares to near optimum —
     the CPU-scale analogue of paper Fig. 11."""
