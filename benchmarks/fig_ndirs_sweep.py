@@ -19,7 +19,7 @@ from benchmarks.common import (eval_accuracy, hlo_step_memory, save_result,
 
 def run(steps=80, n_dirs_list=(1, 2, 4, 8), seeds=(0, 1), quick=False):
     if quick:
-        steps, n_dirs_list, seeds = 60, (1, 4), (0,)
+        steps, n_dirs_list, seeds = min(steps, 60), (1, 4), (0,)
     rows = []
     for n in n_dirs_list:
         mem = hlo_step_memory("tiny-100m", "addax", batch=4, seq=128,

@@ -50,6 +50,11 @@ class ArchConfig:
     # SPSA estimator-bank size for train cells: directions averaged per ZO
     # step (1 = the paper's single probe; >1 = variance-reduced bank).
     n_dirs: int = 1
+    # Default update backend for train cells (overridable per cell via
+    # ``CellOptions.backend``): "jnp" = pure-JAX fused update, "pallas" =
+    # the in-place ``kernels/addax_update`` kernel driven tree-wide,
+    # "pallas_interpret" = same kernel, interpret mode (CPU validation).
+    backend: str = "jnp"
     notes: str = ""
 
     def shape_cells(self) -> list[str]:

@@ -1,8 +1,12 @@
-"""Core library: the paper's contribution (Addax) + optimizer baselines."""
+"""Core library: the paper's contribution (Addax) + optimizer baselines,
+all built as instantiations of the unified update engine
+(``repro.core.engine``, DESIGN.md §4)."""
 
 from repro.core.addax import AddaxConfig, fused_update, make_addax_step, \
     make_addax_wa_step
 from repro.core.adam import init_adam_state, make_adam_step
+from repro.core.engine import BACKENDS, STEP_SPECS, apply_adam_update, \
+    apply_update, make_step
 from repro.core.mezo import make_mezo_step
 from repro.core.sgd import make_ipsgd_step, make_sgd_step
 from repro.core.spsa import spsa_bank_grad, spsa_directional_grad, \
@@ -12,5 +16,6 @@ __all__ = [
     "AddaxConfig", "fused_update", "make_addax_step", "make_addax_wa_step",
     "make_mezo_step", "make_ipsgd_step", "make_sgd_step", "make_adam_step",
     "init_adam_state", "spsa_bank_grad", "spsa_directional_grad",
-    "zo_pseudo_gradient",
+    "zo_pseudo_gradient", "BACKENDS", "STEP_SPECS", "apply_update",
+    "apply_adam_update", "make_step",
 ]

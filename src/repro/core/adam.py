@@ -9,7 +9,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng, spsa
 from repro.core.addax import AddaxConfig
 
 
@@ -22,6 +21,10 @@ def init_adam_state(params: Any) -> dict:
 
 def _adam_update(params, grads, state, lr, step_idx, b1=0.9, b2=0.999,
                  eps=1e-8):
+    """Reference Adam update over a *materialized* gradient tree.  The
+    training path now folds the (m, v) update into the engine's streaming
+    per-leaf pass (``engine.apply_adam_update``) instead; this stays as
+    the oracle the engine tests compare against."""
     t = (step_idx + 1).astype(jnp.float32)
     bc1 = 1.0 - b1 ** t
     bc2 = 1.0 - b2 ** t
@@ -44,36 +47,23 @@ def _adam_update(params, grads, state, lr, step_idx, b1=0.9, b2=0.999,
 
 
 def make_adam_step(loss_fn: Callable[[Any, Any], jax.Array],
-                   cfg: AddaxConfig, lr_fn):
-    """step(params, adam_state, step_idx, batch) -> (params, state, metrics)."""
+                   cfg: AddaxConfig, lr_fn, backend: str = "jnp"):
+    """step(params, adam_state, step_idx, batch) -> (params, state, metrics).
 
-    def step(params, state, step_idx, batch):
-        lr = lr_fn(step_idx)
-        loss, g = jax.value_and_grad(loss_fn)(params, batch)
-        params, state = _adam_update(params, g, state, lr, step_idx)
-        return params, state, {"loss_fo": loss, "lr": lr}
-
-    return step
+    Engine instantiation with the moments-aware backend (DESIGN.md §4)."""
+    from repro.core import engine
+    return engine.make_step("adam", loss_fn, cfg, lr_fn, backend=backend)
 
 
 def make_addax_adam_step(loss_fn: Callable[[Any, Any], jax.Array],
-                         cfg: AddaxConfig, lr_fn):
+                         cfg: AddaxConfig, lr_fn, backend: str = "jnp"):
     """Beyond-paper: mixed ZO+FO gradient driving Adam moments (paper §5
-    'future works')."""
+    'future works').
 
-    def step(params, state, step_idx, batch0, batch1):
-        seed = rng.fold_seed(0xADA3, step_idx)
-        lr = lr_fn(step_idx)
-        g0, loss0, params = spsa.spsa_bank_grad(
-            loss_fn, params, batch0, seed, cfg.eps, cfg.n_dirs,
-            cfg.spsa_mode)
-        loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
-        zo = spsa.zo_pseudo_gradient(g0, seed, params)
-        mixed = jax.tree_util.tree_map(
-            lambda a, b: cfg.alpha * a + (1 - cfg.alpha) * b.astype(jnp.float32),
-            zo, g1)
-        params, state = _adam_update(params, mixed, state, lr, step_idx)
-        return params, state, {"loss_zo": loss0, "loss_fo": loss1,
-                               "g0": jnp.mean(g0), "lr": lr}
-
-    return step
+    Engine instantiation: the bank directions are regenerated leaf-by-leaf
+    inside the streaming (theta, m, v) pass — the ZO pseudo-gradient is
+    never materialized (restores the DESIGN.md §2 memory story that the
+    old ``zo_pseudo_gradient`` path broke)."""
+    from repro.core import engine
+    return engine.make_step("addax-adam", loss_fn, cfg, lr_fn,
+                            backend=backend)

@@ -31,7 +31,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng, spsa
+from repro.core import rng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,46 +97,26 @@ def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
 
 
 def make_addax_step(loss_fn: LossFn, cfg: AddaxConfig,
-                    lr_fn: Callable[[jax.Array], jax.Array]):
+                    lr_fn: Callable[[jax.Array], jax.Array],
+                    backend: str = "jnp"):
     """Build ``step(params, step_idx, batch0, batch1) -> (params, metrics)``.
 
     ``batch0`` feeds the ZO estimator (long sequences), ``batch1`` the FO
     estimator (short sequences).  Seeds derive from ``step_idx`` so restart
     from a checkpoint reproduces the exact same perturbation stream.
-    """
 
-    def step(params, step_idx, batch0, batch1):
-        seed = rng.fold_seed(0xADDA, step_idx)
-        lr = lr_fn(step_idx)
-
-        # --- zeroth-order half: 2*n_dirs forward passes, g0 vector -------
-        g0, loss0, params = spsa.spsa_bank_grad(
-            loss_fn, params, batch0, seed, cfg.eps, cfg.n_dirs,
-            cfg.spsa_mode)
-
-        # --- first-order half: backprop on the short batch ---------------
-        loss1, g1 = jax.value_and_grad(loss_fn)(params, batch1)
-        gnorm = jnp.sqrt(_tree_sq_norm(g1))
-        if cfg.grad_clip is not None:
-            scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
-            g1 = jax.tree_util.tree_map(lambda g: g * scale, g1)
-
-        # --- fused mixed update ------------------------------------------
-        params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
-
-        metrics = {"loss_zo": loss0, "loss_fo": loss1,
-                   "g0": jnp.mean(g0), "fo_grad_norm": gnorm, "lr": lr}
-        if cfg.n_dirs > 1:
-            metrics["g0_std"] = jnp.std(g0)
-        return params, metrics
-
-    return step
+    Thin wrapper over the unified update engine (DESIGN.md §4);
+    ``backend`` selects the fused-update implementation
+    (``jnp | pallas | pallas_interpret``)."""
+    from repro.core import engine
+    return engine.make_step("addax", loss_fn, cfg, lr_fn, backend=backend)
 
 
-def make_addax_wa_step(loss_fn: LossFn, cfg: AddaxConfig, lr_fn):
+def make_addax_wa_step(loss_fn: LossFn, cfg: AddaxConfig, lr_fn,
+                       backend: str = "jnp"):
     """Addax-WA: single data stream; B0 and B1 are two slices of one batch
     drawn from the full dataset (paper Algorithm 1, step 3)."""
-    inner = make_addax_step(loss_fn, cfg, lr_fn)
+    inner = make_addax_step(loss_fn, cfg, lr_fn, backend)
 
     def step(params, step_idx, batch):
         b0 = jax.tree_util.tree_map(lambda x: x[:cfg.k0], batch)

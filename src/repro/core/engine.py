@@ -1,0 +1,435 @@
+"""Unified update engine: one step factory for every optimizer in the repo
+(DESIGN.md §4).
+
+The six near-duplicate step builders (``make_addax_step``,
+``make_mezo_step``, ``make_ipsgd_step``, ``make_sgd_step``,
+``make_adam_step``, ``make_addax_adam_step``, plus the shard_map DP fork)
+are all instantiations of the same two-layer composition:
+
+* **gradient source** — which estimator halves run, parameterized by the
+  per-optimizer ``StepSpec`` (ZO estimator bank, FO backprop, or both)
+  and ``AddaxConfig`` (``n_dirs``, ``spsa_mode``, ``grad_clip``);
+* **update backend** — how ``theta' = theta - lr (alpha·zo + (1-alpha)·fo)``
+  (optionally through Adam moments) is applied:
+
+  - ``"jnp"``: the pure-JAX ``fused_update`` / streaming moments map
+    (paper-faithful default, bit-identical to the pre-engine steps at
+    ``n_dirs = 1``),
+  - ``"pallas"``: the ``kernels/addax_update`` TPU kernel driven tree-wide
+    (leaf-id iteration, tiling, scalar packing) — ``input_output_aliasing``
+    makes the update literally in-place in HBM,
+  - ``"pallas_interpret"``: the same kernel in interpret mode (CPU
+    validation; bit-for-bit against ``"jnp"`` at the full-step level,
+    enforced by ``tests/test_engine.py``).
+
+The moments-aware path (``adam`` / ``addax-adam``) regenerates every bank
+direction's z leaf-by-leaf inside the same streaming pass that folds
+(m, v) — it never materializes the ZO pseudo-gradient tree
+(``spsa.zo_pseudo_gradient`` is now a test/baseline utility only), so the
+single-live-buffer story of DESIGN.md §2 extends to the Adam-mixed step.
+
+``make_dp_local_step`` is the shard_map body used by
+``repro.distributed.collectives``: the same gradient source + backend with
+collectives spliced between the layers, including the **sharded direction
+bank** (ROADMAP): each data-parallel shard walks its own ``fold_dir``-offset
+slice of the bank and the ``g0`` vector is all-gathered, so ``n_dirs``
+effective directions cost the wall-clock of ``n_dirs / dp_shards``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng, spsa
+from repro.core.addax import AddaxConfig, _tree_sq_norm, fused_update
+
+LossFn = Callable[[Any, Any], jax.Array]
+
+BACKENDS = ("jnp", "pallas", "pallas_interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """Gradient-source layer of one optimizer: which halves run and how
+    they mix.  ``alpha = None`` defers to ``AddaxConfig.alpha``."""
+    name: str
+    zo: bool                    # run the SPSA estimator bank
+    fo: bool                    # run backprop
+    alpha: float | None         # fixed mixing constant (None -> cfg.alpha)
+    moments: bool               # Adam (m, v) carried through the update
+    normalize_fo: bool          # g1 <- g1 / ||g1|| (paper's "SGD")
+    seed_base: int              # per-step seed namespace (rng.fold_seed)
+    two_stream: bool            # consumes (batch0, batch1)?
+    stream: str = "fo"          # one-stream optimizers: which stream
+
+
+STEP_SPECS: dict[str, StepSpec] = {
+    "addax": StepSpec("addax", True, True, None, False, False,
+                      0xADDA, True),
+    # WA is a data-pipeline choice (B0/B1 same distribution) — same step.
+    "addax-wa": StepSpec("addax-wa", True, True, None, False, False,
+                         0xADDA, True),
+    "mezo": StepSpec("mezo", True, False, 1.0, False, False,
+                     0x3E20, False, stream="zo"),
+    "ipsgd": StepSpec("ipsgd", False, True, 0.0, False, False,
+                      0, False),
+    "sgd": StepSpec("sgd", False, True, 0.0, False, True,
+                    0, False),
+    "adam": StepSpec("adam", False, True, 0.0, True, False,
+                     0, False),
+    "addax-adam": StepSpec("addax-adam", True, True, None, True, False,
+                           0xADA3, True),
+}
+
+
+def _check_backend(backend: str):
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+
+
+# --------------------------------------------------------------------------
+# Update backends (stateless)
+# --------------------------------------------------------------------------
+
+def apply_update(params: Any, g1: Any | None, g0: jax.Array | None,
+                 seed: jax.Array, lr, alpha: float, *,
+                 backend: str = "jnp") -> Any:
+    """Backend-dispatched fused update
+    ``theta <- theta - lr (alpha/n Σ_k g0_k z_k + (1-alpha) g1)``.
+
+    ``"jnp"`` is ``repro.core.addax.fused_update`` verbatim; the pallas
+    backends drive ``kernels/addax_update`` across the tree — one kernel
+    launch per leaf, leaf ids and per-direction seeds identical to the jnp
+    path, so interpret mode reproduces it bit for bit."""
+    _check_backend(backend)
+    if backend == "jnp":
+        return fused_update(params, g1, g0, seed, lr, alpha)
+    from repro.kernels.addax_update import addax_update
+    interpret = backend == "pallas_interpret"
+    ids = rng.leaf_ids(params)
+
+    def one(leaf, lid, g):
+        return addax_update(leaf, g, g0, seed, lr, leaf_id=lid,
+                            alpha=alpha, interpret=interpret)
+
+    if g1 is None:
+        return jax.tree_util.tree_map(
+            lambda leaf, lid: one(leaf, lid, None), params, ids)
+    return jax.tree_util.tree_map(one, params, ids, g1)
+
+
+def apply_adam_update(params: Any, state: dict, g1: Any | None,
+                      g0: jax.Array | None, seed: jax.Array, lr,
+                      alpha: float, step_idx: jax.Array, *,
+                      backend: str = "jnp", b1: float = 0.9,
+                      b2: float = 0.999, adam_eps: float = 1e-8):
+    """Moments-aware fused update: the mixed gradient
+    ``g = alpha/n Σ_k g0_k z_k + (1-alpha) g1`` feeds Adam's (m, v) and the
+    bias-corrected step, all inside one streaming pass per leaf — z is
+    regenerated per (leaf, direction), never materialized tree-wide.
+
+    Backends mirror ``apply_update``: ``"jnp"`` is a single tree_map,
+    pallas drives the moments variant of the ``addax_update`` kernel with
+    (theta, m, v) all updated in place.
+
+    The inputs pass through an ``optimization_barrier`` so the moments
+    arithmetic compiles as a function of its inputs alone: without it,
+    XLA's fma contraction of ``b1·m + (1-b1)·g`` depends on what the
+    surrounding step graph fuses in, and the jnp and pallas-interpret
+    backends drift apart by 1 ulp (the backend parity contract in
+    tests/test_engine.py is bit-for-bit)."""
+    _check_backend(backend)
+    if g1 is not None:
+        params, state, g1, g0, lr = jax.lax.optimization_barrier(
+            (params, state, g1, g0, lr))
+    elif g0 is not None:
+        params, state, g0, lr = jax.lax.optimization_barrier(
+            (params, state, g0, lr))
+    else:
+        params, state, lr = jax.lax.optimization_barrier(
+            (params, state, lr))
+    t = (step_idx + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    ids = rng.leaf_ids(params)
+    with_zo = g0 is not None
+    if with_zo:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        n_dirs = g0v.shape[0]
+        seeds = rng.dir_seeds(seed, n_dirs)
+        w_zo = alpha / n_dirs
+    w_fo = (1.0 - alpha) if with_zo else 1.0
+
+    if backend == "jnp":
+        def one(leaf, lid, gfo, m, v):
+            g = jnp.zeros(leaf.shape, jnp.float32)
+            if with_zo:
+                for k in range(n_dirs):
+                    z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
+                    g = g + (w_zo * g0v[k]) * z
+            if gfo is not None:
+                g = g + w_fo * gfo.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + adam_eps)
+            return ((leaf.astype(jnp.float32) - step).astype(leaf.dtype),
+                    m, v)
+    else:
+        from repro.kernels.addax_update import addax_adam_update
+        interpret = backend == "pallas_interpret"
+
+        def one(leaf, lid, gfo, m, v):
+            return addax_adam_update(
+                leaf, gfo, m, v, g0, seed, lr, bc1, bc2, leaf_id=lid,
+                alpha=alpha, b1=b1, b2=b2, adam_eps=adam_eps,
+                interpret=interpret)
+
+    # unzip against the params treedef (a tree_map with
+    # is_leaf=isinstance(tuple) would misfire on pytrees that contain
+    # tuples as containers)
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    id_leaves = jax.tree_util.tree_leaves(ids)
+    g1_leaves = jax.tree_util.tree_leaves(g1) if g1 is not None \
+        else [None] * len(p_leaves)
+    m_leaves = jax.tree_util.tree_leaves(state["m"])
+    v_leaves = jax.tree_util.tree_leaves(state["v"])
+    out = [one(*leafs) for leafs in
+           zip(p_leaves, id_leaves, g1_leaves, m_leaves, v_leaves)]
+    unflat = lambda i: jax.tree_util.tree_unflatten(
+        treedef, [o[i] for o in out])
+    return unflat(0), {"m": unflat(1), "v": unflat(2)}
+
+
+# --------------------------------------------------------------------------
+# Gradient-source helpers
+# --------------------------------------------------------------------------
+
+def _postprocess_fo(g1: Any, cfg: AddaxConfig, spec: StepSpec,
+                    norm_metric: bool):
+    """Shared FO-gradient post-processing — normalization (sgd) or
+    global-norm clipping (cfg.grad_clip) — used by both the single-host
+    step and the DP shard body (one copy, so the two paths cannot drift).
+    ``norm_metric`` controls whether ``fo_grad_norm`` is emitted when no
+    normalization runs (the addax steps always report it; the DP body,
+    matching its pre-engine behavior, does not)."""
+    metrics = {}
+    if spec.normalize_fo:
+        gnorm = jnp.sqrt(_tree_sq_norm(g1))
+        g1 = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) / (gnorm + 1e-12)), g1)
+        metrics["fo_grad_norm"] = gnorm
+    elif norm_metric or cfg.grad_clip is not None:
+        gnorm = jnp.sqrt(_tree_sq_norm(g1))
+        if norm_metric:
+            metrics["fo_grad_norm"] = gnorm
+        if cfg.grad_clip is not None:
+            scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+            g1 = jax.tree_util.tree_map(lambda g: g * scale, g1)
+    return g1, metrics
+
+
+def _fo_half(loss_fn: LossFn, params: Any, batch: Any, cfg: AddaxConfig,
+             spec: StepSpec):
+    """Backprop half: returns (loss, g1, metrics)."""
+    loss, g1 = jax.value_and_grad(loss_fn)(params, batch)
+    g1, metrics = _postprocess_fo(
+        g1, cfg, spec, norm_metric=spec.name in ("addax", "addax-wa"))
+    return loss, g1, metrics
+
+
+def _bank_metrics(g0: jax.Array, n_dirs: int) -> dict:
+    m = {"g0": jnp.mean(g0)}
+    if n_dirs > 1:
+        m["g0_std"] = jnp.std(g0)
+        m["g0_bank"] = g0       # full per-direction vector (JSONL-able;
+                                # feeds variance-adaptive bank scheduling)
+    return m
+
+
+# --------------------------------------------------------------------------
+# Step factory (single-process / pjit path)
+# --------------------------------------------------------------------------
+
+def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
+              lr_fn: Callable[[jax.Array], jax.Array], *,
+              backend: str = "jnp"):
+    """Build one optimizer step.  Signatures (match ``train/state.py``):
+
+      stateless:  ``step(params, step_idx, *batches) -> (params, metrics)``
+      moments:    ``step(params, state, step_idx, *batches)
+                    -> (params, state, metrics)``
+
+    where ``*batches`` is ``(batch0, batch1)`` for two-stream specs and
+    ``(batch,)`` otherwise.  Meant to be jitted with the params (and
+    state) donated — see DESIGN.md §2."""
+    spec = STEP_SPECS.get(name)
+    if spec is None:
+        raise ValueError(f"unknown optimizer {name!r}; "
+                         f"one of {tuple(STEP_SPECS)}")
+    _check_backend(backend)
+    alpha = cfg.alpha if spec.alpha is None else spec.alpha
+
+    def gradient_source(params, step_idx, batches):
+        seed = rng.fold_seed(spec.seed_base, step_idx)
+        g0 = g1 = None
+        metrics = {}
+        if spec.zo:
+            g0, loss0, params = spsa.spsa_bank_grad(
+                loss_fn, params, batches[0], seed, cfg.eps, cfg.n_dirs,
+                cfg.spsa_mode)
+            metrics["loss_zo"] = loss0
+            metrics.update(_bank_metrics(g0, cfg.n_dirs))
+        if spec.fo:
+            loss1, g1, fo_m = _fo_half(loss_fn, params, batches[-1], cfg,
+                                       spec)
+            metrics["loss_fo"] = loss1
+            metrics.update(fo_m)
+        return params, g0, g1, seed, metrics
+
+    if spec.moments:
+        def step(params, state, step_idx, *batches):
+            lr = lr_fn(step_idx)
+            params, g0, g1, seed, metrics = gradient_source(
+                params, step_idx, batches)
+            params, state = apply_adam_update(
+                params, state, g1, g0, seed, lr, alpha, step_idx,
+                backend=backend)
+            metrics["lr"] = lr
+            return params, state, metrics
+    else:
+        def step(params, step_idx, *batches):
+            lr = lr_fn(step_idx)
+            params, g0, g1, seed, metrics = gradient_source(
+                params, step_idx, batches)
+            params = apply_update(params, g1, g0, seed, lr, alpha,
+                                  backend=backend)
+            metrics["lr"] = lr
+            return params, metrics
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# DP (shard_map body) factory
+# --------------------------------------------------------------------------
+
+def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
+                       lr_fn, axes, *, dp_size: int | None = None,
+                       compress_fo: bool = False,
+                       shard_bank: bool = False, backend: str = "jnp"):
+    """The per-shard body of the explicit-collective DP step (wrapped in
+    ``shard_map`` by ``repro.distributed.collectives.make_dp_step``).
+
+    ``axes`` is the shard_map axis name (or tuple).  With
+    ``shard_bank=False`` every shard walks the full bank over a pmean'd
+    loss (wire cost: ``2 n_dirs`` scalars).  With ``shard_bank=True`` the
+    bank is sliced across the data axis: shard ``s`` probes global
+    directions ``[s·n_local, (s+1)·n_local)`` via ``rng.fold_dir_dyn`` and
+    the ``g0`` slices are all-gathered in axis-index order — the gathered
+    vector (and therefore the fused update) is bit-identical to the local
+    ``n_dirs`` bank, at ``2 n_dirs / dp`` forward passes per shard.
+    Sharded banks require ``spsa_mode="fresh"``: the chain walk threads
+    one buffer through *all* directions sequentially, which is exactly the
+    dependency sharding removes (and fresh's bit-exact restore is what
+    keeps shards' parameters identical afterwards)."""
+    spec = STEP_SPECS.get(name)
+    if spec is None:
+        raise ValueError(f"unknown optimizer {name!r}")
+    if spec.moments:
+        raise NotImplementedError(
+            "DP moments optimizers not supported yet (replicated Adam "
+            "state would need its own psum contract)")
+    _check_backend(backend)
+    alpha = cfg.alpha if spec.alpha is None else spec.alpha
+
+    if shard_bank:
+        if not spec.zo:
+            raise ValueError(f"{name!r} has no ZO bank to shard")
+        if cfg.spsa_mode != "fresh":
+            raise ValueError(
+                "sharded direction banks require spsa_mode='fresh' "
+                "(chain mode serializes the bank on one buffer)")
+        if isinstance(axes, (tuple, list)) and len(axes) > 1:
+            raise NotImplementedError(
+                "sharded banks over multiple data axes")
+        if not dp_size or cfg.n_dirs % dp_size != 0:
+            raise ValueError(
+                f"n_dirs={cfg.n_dirs} must divide evenly over "
+                f"dp_size={dp_size} shards")
+        n_local = cfg.n_dirs // dp_size
+        gather_axis = axes[0] if isinstance(axes, (tuple, list)) else axes
+
+    def local_step(params, step_idx, *batches):
+        seed = rng.fold_seed(spec.seed_base, step_idx)
+        lr = lr_fn(step_idx)
+        g0 = g1 = None
+        metrics = {}
+
+        if spec.zo:
+            b0 = batches[0]
+            if shard_bank:
+                # each shard probes its own fold_dir-offset bank slice on
+                # its local batch; the g0 vector is reassembled in global
+                # direction order by the all_gather
+                base = jax.lax.axis_index(gather_axis) * n_local
+                seeds = [rng.fold_dir_dyn(seed, base + j)
+                         for j in range(n_local)]
+                g0_loc, loss0, params = spsa.spsa_bank_grad(
+                    loss_fn, params, b0, seed, cfg.eps, n_local,
+                    "fresh", seeds=seeds)
+                g0 = jax.lax.all_gather(g0_loc, gather_axis, tiled=True)
+                loss0 = jax.lax.pmean(loss0, axes)
+            else:
+                # shared bank: z replays bit-identically on every shard,
+                # so each direction synchronizes two scalar losses
+                def pmean_loss(p, b):
+                    return jax.lax.pmean(loss_fn(p, b), axes)
+
+                g0, loss0, params = spsa.spsa_bank_grad(
+                    pmean_loss, params, b0, seed, cfg.eps, cfg.n_dirs,
+                    cfg.spsa_mode)
+            metrics["loss_zo"] = loss0
+            metrics.update(_bank_metrics(g0, cfg.n_dirs))
+
+        if spec.fo:
+            from repro.core import compression
+            b1 = batches[-1]
+            # optimization_barriers isolate the backprop + update region
+            # from whatever ZO subgraph preceded it, so the sharded-bank
+            # and replicated-bank programs compile this region to
+            # identical bits (without them XLA's cross-region fusion
+            # makes the two variants drift by 1 ulp — the sharded-bank
+            # equivalence contract in tests/test_engine.py is bitwise)
+            if g0 is not None:
+                params, b1, g0, lr = jax.lax.optimization_barrier(
+                    (params, b1, g0, lr))
+            else:
+                params, b1, lr = jax.lax.optimization_barrier(
+                    (params, b1, lr))
+            loss1, g1 = jax.value_and_grad(loss_fn)(params, b1)
+            loss1 = jax.lax.pmean(loss1, axes)
+            if compress_fo:
+                g1 = compression.compress_tree(g1, axes)
+            else:
+                g1 = jax.tree_util.tree_map(
+                    lambda g: jax.lax.pmean(g, axes), g1)
+            metrics["loss_fo"] = loss1
+            g1, fo_m = _postprocess_fo(g1, cfg, spec, norm_metric=False)
+            metrics.update(fo_m)
+            if g0 is not None:
+                params, g1, g0, lr = jax.lax.optimization_barrier(
+                    (params, g1, g0, lr))
+            else:
+                params, g1, lr = jax.lax.optimization_barrier(
+                    (params, g1, lr))
+
+        params = apply_update(params, g1, g0, seed, lr, alpha,
+                              backend=backend)
+        metrics["lr"] = lr
+        return params, metrics
+
+    return local_step

@@ -6,26 +6,15 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import rng, spsa
-from repro.core.addax import AddaxConfig, fused_update
+from repro.core.addax import AddaxConfig
 
 
 def make_mezo_step(loss_fn: Callable[[Any, Any], jax.Array],
-                   cfg: AddaxConfig, lr_fn):
-    """step(params, step_idx, batch) -> (params, metrics)."""
+                   cfg: AddaxConfig, lr_fn, backend: str = "jnp"):
+    """step(params, step_idx, batch) -> (params, metrics).
 
-    def step(params, step_idx, batch):
-        seed = rng.fold_seed(0x3E20, step_idx)
-        lr = lr_fn(step_idx)
-        g0, loss, params = spsa.spsa_bank_grad(
-            loss_fn, params, batch, seed, cfg.eps, cfg.n_dirs,
-            cfg.spsa_mode)
-        params = fused_update(params, None, g0, seed, lr, alpha=1.0)
-        metrics = {"loss_zo": loss, "g0": jnp.mean(g0), "lr": lr}
-        if cfg.n_dirs > 1:
-            metrics["g0_std"] = jnp.std(g0)
-        return params, metrics
-
-    return step
+    Engine instantiation with ``alpha = 1`` and no FO half
+    (DESIGN.md §4)."""
+    from repro.core import engine
+    return engine.make_step("mezo", loss_fn, cfg, lr_fn, backend=backend)

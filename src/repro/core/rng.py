@@ -197,6 +197,20 @@ def fold_dir(seed: jax.Array, k: int) -> jax.Array:
     return b0
 
 
+def fold_dir_dyn(seed: jax.Array, k: jax.Array) -> jax.Array:
+    """``fold_dir`` for a *traced* direction index ``k`` — bit-identical to
+    the static version for every value of ``k``.
+
+    Needed by the DP-sharded estimator bank, where a shard's global
+    direction indices are ``axis_index * n_local + j`` (traced).  The
+    ``k == 0`` identity is expressed as a ``where`` select so both branches
+    stay inside one SPMD program."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    mixed, _ = threefry2x32(seed, jnp.uint32(0xD14),
+                            jnp.asarray(k, jnp.uint32), jnp.uint32(2))
+    return jnp.where(jnp.asarray(k, jnp.uint32) == 0, seed, mixed)
+
+
 def dir_seeds(seed: jax.Array, n_dirs: int) -> list[jax.Array]:
     """The bank's seed vector ``[fold_dir(seed, k) for k in range(n)]``.
 

@@ -19,35 +19,21 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.addax import AddaxConfig, _tree_sq_norm, fused_update
+from repro.core.addax import AddaxConfig
 
 
 def make_ipsgd_step(loss_fn: Callable[[Any, Any], jax.Array],
-                    cfg: AddaxConfig, lr_fn):
-    """In-place SGD: Addax with alpha = 0 (no ZO half)."""
-
-    def step(params, step_idx, batch):
-        lr = lr_fn(step_idx)
-        loss, g1 = jax.value_and_grad(loss_fn)(params, batch)
-        params = fused_update(params, g1, None, jnp.uint32(0), lr, alpha=0.0)
-        return params, {"loss_fo": loss, "lr": lr}
-
-    return step
+                    cfg: AddaxConfig, lr_fn, backend: str = "jnp"):
+    """In-place SGD: Addax with alpha = 0 (no ZO half).  Engine
+    instantiation (DESIGN.md §4)."""
+    from repro.core import engine
+    return engine.make_step("ipsgd", loss_fn, cfg, lr_fn, backend=backend)
 
 
 def make_sgd_step(loss_fn: Callable[[Any, Any], jax.Array],
-                  cfg: AddaxConfig, lr_fn):
-    """SGD with gradient normalization (g <- g / ||g||)."""
-
-    def step(params, step_idx, batch):
-        lr = lr_fn(step_idx)
-        loss, g1 = jax.value_and_grad(loss_fn)(params, batch)
-        gnorm = jnp.sqrt(_tree_sq_norm(g1))
-        g1 = jax.tree_util.tree_map(
-            lambda g: (g.astype(jnp.float32) / (gnorm + 1e-12)), g1)
-        params = fused_update(params, g1, None, jnp.uint32(0), lr, alpha=0.0)
-        return params, {"loss_fo": loss, "fo_grad_norm": gnorm, "lr": lr}
-
-    return step
+                  cfg: AddaxConfig, lr_fn, backend: str = "jnp"):
+    """SGD with gradient normalization (g <- g / ||g||).  Engine
+    instantiation (DESIGN.md §4)."""
+    from repro.core import engine
+    return engine.make_step("sgd", loss_fn, cfg, lr_fn, backend=backend)

@@ -58,7 +58,7 @@ def spsa_directional_grad(loss_fn: LossFn, params: Any, batch: Any,
 
 def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
                    seed: jax.Array, eps: float, n_dirs: int = 1,
-                   mode: str = "chain"):
+                   mode: str = "chain", seeds: list | None = None):
     """Multi-direction estimator bank: ``n_dirs`` independent SPSA probes
     per step (variance-reduced ZO a la Gautam et al.).  Returns
     ``(g0, loss_avg, params_restored)`` where ``g0`` has shape
@@ -81,8 +81,16 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
     ``spsa_directional_grad`` — same seeds, same arithmetic — so it is
     bit-identical to the single-direction path (``g0`` just gains a
     leading axis of size 1).
+
+    ``seeds`` overrides the default ``rng.dir_seeds(seed, n_dirs)``
+    derivation — the DP-sharded bank passes each shard's slice of
+    ``fold_dir`` seeds (possibly traced, via ``rng.fold_dir_dyn``) so the
+    shard walks only its own directions.
     """
-    seeds = rng.dir_seeds(seed, n_dirs)
+    if seeds is None:
+        seeds = rng.dir_seeds(seed, n_dirs)
+    if len(seeds) != n_dirs:
+        raise ValueError(f"got {len(seeds)} seeds for n_dirs={n_dirs}")
     g0s, loss_avgs = [], []
     if mode == "chain":
         p = rng.tree_perturb(params, seeds[0], eps)

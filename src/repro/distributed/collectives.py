@@ -1,18 +1,28 @@
-"""Explicit-collective (shard_map) data-parallel Addax step.
+"""Explicit-collective (shard_map) data-parallel steps, built on the
+unified update engine (DESIGN.md §4).
 
 The pjit path lets GSPMD insert collectives; this module is the
 *explicit* counterpart used (a) to demonstrate and test the paper
-technique's distributed signature — the ZO half synchronizes **one
-scalar** per step while plain DP-SGD all-reduces d floats — and (b) as the
-vehicle for the beyond-paper int8 FO-gradient compression (§Perf).
+technique's distributed signature — the ZO half synchronizes ``2 n_dirs``
+scalars per step (two pmean'd losses per bank direction; the paper's
+single-probe ``n_dirs = 1`` case is one scalar pair) while plain DP-SGD
+all-reduces d floats — and (b) as the vehicle for the beyond-paper int8
+FO-gradient compression (§Perf) and the DP-**sharded direction bank**.
 
 Under ``shard_map`` over the data axis/axes each shard:
 
   1. computes its local SPSA loss diffs (z is regenerated from the shared
      seed, bit-identical on every shard: ``repro.core.rng``),
-  2. ``psum``s the two scalar losses  -> global g0  (8 bytes on the wire),
+  2. ``psum``s the two scalar losses per direction -> global g0 vector
+     (``8 n_dirs`` bytes on the wire),
   3. computes its local FO gradient and ``psum``s it (optionally int8),
   4. applies the fused update — every shard writes identical parameters.
+
+With ``shard_bank=True`` the bank is *sliced* over the data axis instead:
+shard ``s`` walks directions ``[s·n/dp, (s+1)·n/dp)`` of the global bank
+(fresh mode) and the per-shard ``g0`` slices are all-gathered — ``n_dirs``
+effective directions at the forward-pass wall-clock of ``n_dirs / dp``,
+with ``4 n_dirs`` gather bytes replacing the ``8 n_dirs`` loss psums.
 
 Parameters are replicated across the DP axis (Addax holds no optimizer
 state, so this is the paper's memory model, scaled out).
@@ -20,74 +30,66 @@ state, so this is the paper's memory model, scaled out).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import compression, rng, spsa
-from repro.core.addax import AddaxConfig, fused_update
+from repro.core import engine
+from repro.core.addax import AddaxConfig
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    # older jax: experimental namespace, check_rep spelling
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def make_dp_step(loss_fn: Callable[[Any, Any], jax.Array],
+                 cfg: AddaxConfig, lr_fn, mesh: Mesh, *,
+                 name: str = "addax",
+                 data_axes: tuple[str, ...] = ("data",),
+                 compress_fo: bool = False, shard_bank: bool = False,
+                 backend: str = "jnp"):
+    """Build a shard_map DP step for any stateless engine optimizer
+    (``addax | addax-wa | mezo | ipsgd | sgd``).
+
+    Batches are globally-batched; their leading axis is sharded over
+    ``data_axes``.  Params are replicated.  Returns
+    ``step(params, step_idx, *batches) -> (params, metrics)`` with the
+    engine's batch arity for ``name`` (two streams for addax, one
+    otherwise)."""
+    axes = data_axes if len(data_axes) > 1 else data_axes[0]
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    spec = engine.STEP_SPECS[name]
+    local_step = engine.make_dp_local_step(
+        name, loss_fn, cfg, lr_fn, axes, dp_size=dp,
+        compress_fo=compress_fo, shard_bank=shard_bank, backend=backend)
+
+    batch_spec = P(axes)
+    n_batches = 2 if spec.two_stream else 1
+    return _shard_map(
+        local_step, mesh,
+        in_specs=(P(), P()) + (batch_spec,) * n_batches,
+        out_specs=(P(), P()))
 
 
 def make_dp_addax_step(loss_fn: Callable[[Any, Any], jax.Array],
                        cfg: AddaxConfig, lr_fn,
                        mesh: Mesh, data_axes: tuple[str, ...] = ("data",),
-                       compress_fo: bool = False):
-    """Build a shard_map DP Addax step.
-
-    ``batch0`` / ``batch1`` are globally-batched; their leading axis is
-    sharded over ``data_axes``.  Params are replicated.  Returns
-    ``step(params, step_idx, batch0, batch1) -> (params, metrics)``.
-    """
-    axes = data_axes if len(data_axes) > 1 else data_axes[0]
-
-    def local_step(params, step_idx, b0, b1):
-        seed = rng.fold_seed(0xADDA, step_idx)
-        lr = lr_fn(step_idx)
-
-        # --- ZO half: the shared bank walk over a pmean'd loss — each
-        # direction synchronizes two scalars (z replays bit-identically
-        # per shard, so the wire cost stays 2 * n_dirs floats, never d)
-        def pmean_loss(p, b):
-            return jax.lax.pmean(loss_fn(p, b), axes)
-
-        g0, loss0, params = spsa.spsa_bank_grad(
-            pmean_loss, params, b0, seed, cfg.eps, cfg.n_dirs,
-            cfg.spsa_mode)
-
-        # --- FO half: local grad, (compressed) psum ---------------------
-        loss1, g1 = jax.value_and_grad(loss_fn)(params, b1)
-        loss1 = jax.lax.pmean(loss1, axes)
-        if compress_fo:
-            g1 = compression.compress_tree(g1, axes)
-        else:
-            g1 = jax.tree_util.tree_map(
-                lambda g: jax.lax.pmean(g, axes), g1)
-
-        params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
-        metrics = {"loss_zo": loss0, "loss_fo": loss1,
-                   "g0": jnp.mean(g0), "lr": lr}
-        if cfg.n_dirs > 1:
-            metrics["g0_std"] = jnp.std(g0)
-        return params, metrics
-
-    batch_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-    if hasattr(jax, "shard_map"):
-        shmapped = jax.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(P(), P(), batch_spec, batch_spec),
-            out_specs=(P(), P()),
-            check_vma=False)
-    else:   # older jax: experimental namespace, check_rep spelling
-        from jax.experimental.shard_map import shard_map
-        shmapped = shard_map(
-            local_step, mesh=mesh,
-            in_specs=(P(), P(), batch_spec, batch_spec),
-            out_specs=(P(), P()),
-            check_rep=False)
-    return shmapped
+                       compress_fo: bool = False,
+                       shard_bank: bool = False, backend: str = "jnp"):
+    """Back-compat entry point: the Addax instantiation of
+    ``make_dp_step`` (a thin engine wrapper, no longer a fork)."""
+    return make_dp_step(loss_fn, cfg, lr_fn, mesh, name="addax",
+                        data_axes=data_axes, compress_fo=compress_fo,
+                        shard_bank=shard_bank, backend=backend)
 
 
 def replicated(mesh: Mesh):
@@ -103,13 +105,19 @@ def batch_sharding(mesh: Mesh, data_axes: tuple[str, ...] = ("data",)):
 
 
 def collective_bytes_of_dp_step(n_params: int, dp: int,
-                                compress: bool, n_dirs: int = 1) -> dict:
+                                compress: bool, n_dirs: int = 1,
+                                shard_bank: bool = False) -> dict:
     """Napkin model of per-step DP collective bytes (used by benchmarks):
-    ZO = two scalar ring all-reduces per bank direction; FO = ring
-    all-reduce of the gradient (2 (dp-1)/dp bytes-per-elem factor folded
-    out — we report payload)."""
+    ZO = two scalar ring all-reduces *per bank direction* (``2 n_dirs``
+    fp32 scalars = ``8 n_dirs`` bytes — one scalar pair in the paper's
+    ``n_dirs = 1`` case); with a sharded bank the loss psums become one
+    ``n_dirs``-float all-gather of the g0 slices (+ one pmean'd loss
+    metric scalar).  FO = ring all-reduce of the gradient (2 (dp-1)/dp
+    bytes-per-elem factor folded out — we report payload)."""
     fo_bytes = n_params * (1 if compress else 4)
-    zo_bytes = 8 * n_dirs
+    zo_bytes = (4 * n_dirs + 4) if shard_bank else 8 * n_dirs
     return {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
+            "zo_fwd_passes_per_shard":
+                (2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
             "sgd_bytes": n_params * 4,
             "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}

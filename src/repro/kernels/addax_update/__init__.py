@@ -1,4 +1,7 @@
-from repro.kernels.addax_update.ops import addax_update, mezo_update
-from repro.kernels.addax_update.ref import addax_update_ref
+from repro.kernels.addax_update.ops import (addax_adam_update,
+                                            addax_update, mezo_update)
+from repro.kernels.addax_update.ref import (addax_adam_update_ref,
+                                            addax_update_ref)
 
-__all__ = ["addax_update", "mezo_update", "addax_update_ref"]
+__all__ = ["addax_update", "addax_adam_update", "mezo_update",
+           "addax_update_ref", "addax_adam_update_ref"]

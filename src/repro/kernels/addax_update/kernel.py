@@ -78,6 +78,101 @@ def pack_scalars(seeds: jax.Array, g0: jax.Array, lr) -> jax.Array:
                             g0_bits.reshape(-1)])
 
 
+def _adam_update_kernel(scalars_ref, theta_ref, m_ref, v_ref, g1_ref,
+                        o_theta, o_m, o_v, *, leaf_id: int, alpha: float,
+                        n_dirs: int, block_r: int, block_c: int,
+                        with_fo: bool, with_zo: bool, b1: float,
+                        b2: float, adam_eps: float):
+    """Moments-aware variant: the mixed gradient
+    ``g = alpha/n Σ_k g0_k z_k + (1-alpha) g1`` is built per tile (z
+    regenerated in VMEM exactly like ``_update_kernel``), folded into
+    Adam's (m, v), and the bias-corrected step applied — theta, m, v all
+    streamed once and updated in place via ``input_output_aliases``.
+
+    Scalar layout: ``[lr, bc1, bc2, seed_0.., g0_0..]`` (fp32 bitcast;
+    bias corrections are computed host-side from ``step_idx`` so the
+    kernel stays stateless)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    theta = theta_ref[...].astype(jnp.float32)
+    g = jnp.zeros_like(theta)
+    if with_zo:
+        w_zo = alpha / n_dirs
+        for k in range(n_dirs):
+            seed_k = scalars_ref[3 + k]
+            g0_k = jax.lax.bitcast_convert_type(
+                scalars_ref[3 + n_dirs + k], jnp.float32)
+            z = tile_z(seed_k, leaf_id, jnp.uint32(i * block_r),
+                       jnp.uint32(j * block_c), block_r, block_c)
+            g = g + (w_zo * g0_k) * z
+    if with_fo:
+        w = (1.0 - alpha) if with_zo else 1.0
+        g = g + w * g1_ref[...].astype(jnp.float32)
+    lr = jax.lax.bitcast_convert_type(scalars_ref[0], jnp.float32)
+    bc1 = jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32)
+    bc2 = jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32)
+    m = b1 * m_ref[...] + (1 - b1) * g
+    v = b2 * v_ref[...] + (1 - b2) * jnp.square(g)
+    step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + adam_eps)
+    o_theta[...] = (theta - step).astype(o_theta.dtype)
+    o_m[...] = m
+    o_v[...] = v
+
+
+def pack_adam_scalars(seeds: jax.Array, g0: jax.Array, lr, bc1,
+                      bc2) -> jax.Array:
+    """uint32 scalar-prefetch vector ``[lr, bc1, bc2, seed_0.., g0_0..]``
+    for the moments kernel (length ``3 + 2 n_dirs``)."""
+    f32 = lambda x: jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.float32), jnp.uint32).reshape(1)
+    g0_bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(g0, jnp.float32), jnp.uint32)
+    return jnp.concatenate([f32(lr), f32(bc1), f32(bc2),
+                            jnp.asarray(seeds, jnp.uint32).reshape(-1),
+                            g0_bits.reshape(-1)])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leaf_id", "alpha", "n_dirs", "block_r", "block_c", "with_fo",
+    "with_zo", "b1", "b2", "adam_eps", "interpret"))
+def addax_adam_update_pallas(theta2d: jax.Array, m2d: jax.Array,
+                             v2d: jax.Array, g1_2d: jax.Array,
+                             scalars: jax.Array, *, leaf_id: int,
+                             alpha: float, n_dirs: int = 1,
+                             block_r: int = 256, block_c: int = 256,
+                             with_fo: bool = True, with_zo: bool = True,
+                             b1: float = 0.9, b2: float = 0.999,
+                             adam_eps: float = 1e-8,
+                             interpret: bool = False):
+    """(theta, m, v) -> (theta', m', v'), all (R, C) tile-aligned; m/v
+    fp32.  ``scalars`` from ``pack_adam_scalars``."""
+    r, c = theta2d.shape
+    assert r % block_r == 0 and c % block_c == 0, ((r, c),
+                                                   (block_r, block_c))
+    assert scalars.shape == (3 + 2 * n_dirs,), (scalars.shape, n_dirs)
+    kernel = functools.partial(
+        _adam_update_kernel, leaf_id=leaf_id, alpha=alpha, n_dirs=n_dirs,
+        block_r=block_r, block_c=block_c, with_fo=with_fo, with_zo=with_zo,
+        b1=b1, b2=b2, adam_eps=adam_eps)
+    bspec = lambda: pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r // block_r, c // block_c),
+        in_specs=[bspec(), bspec(), bspec(), bspec()],
+        out_specs=[bspec(), bspec(), bspec()],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, c), theta2d.dtype),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32),
+                   jax.ShapeDtypeStruct((r, c), jnp.float32)],
+        # theta/m/v updated in place (input indices count the scalar ref)
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(scalars, theta2d, m2d, v2d, g1_2d)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "leaf_id", "alpha", "n_dirs", "block_r", "block_c", "with_fo",
     "with_zo", "interpret"))

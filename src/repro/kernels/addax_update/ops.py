@@ -22,7 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rng
-from repro.kernels.addax_update.kernel import (addax_update_pallas,
+from repro.kernels.addax_update.kernel import (addax_adam_update_pallas,
+                                               addax_update_pallas,
+                                               pack_adam_scalars,
                                                pack_scalars)
 
 
@@ -72,6 +74,52 @@ def addax_update(theta: jax.Array, g1: jax.Array | None, g0, seed, lr, *,
                               block_c=bc, with_fo=with_fo, with_zo=with_zo,
                               interpret=interpret)
     return out[:t2.shape[0], :t2.shape[1]].reshape(shape)
+
+
+def _bank_scalars(g0, seed):
+    if g0 is not None:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        return g0v, g0v.shape[0], jnp.stack(
+            rng.dir_seeds(seed, g0v.shape[0])), True
+    return jnp.zeros((1,), jnp.float32), 1, jnp.zeros((1,), jnp.uint32), \
+        False
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "b1",
+                                             "b2", "adam_eps", "block_r",
+                                             "block_c", "interpret"))
+def addax_adam_update(theta: jax.Array, g1: jax.Array | None,
+                      m: jax.Array, v: jax.Array, g0, seed, lr, bc1,
+                      bc2, *, leaf_id: int, alpha: float, b1: float = 0.9,
+                      b2: float = 0.999, adam_eps: float = 1e-8,
+                      block_r: int = 256, block_c: int = 256,
+                      interpret: bool = False):
+    """Moments-aware leaf update: the mixed gradient
+    ``alpha/n Σ_k g0_k z_k + (1-alpha) g1`` drives Adam's (m, v) and the
+    bias-corrected step in one streaming pass.  Returns
+    ``(theta', m', v')``; any leaf rank, m/v fp32.  ``bc1``/``bc2`` are
+    the bias corrections ``1 - b^t`` (computed by the caller from
+    ``step_idx``)."""
+    shape = theta.shape
+    t2 = _as2d(theta)
+    with_fo = g1 is not None
+    g0v, n_dirs, seeds, with_zo = _bank_scalars(g0, seed)
+    scalars = pack_adam_scalars(seeds, g0v, lr, bc1, bc2)
+    br = min(block_r, max(8, t2.shape[0]))
+    bc = min(block_c, t2.shape[1])
+    tp = _pad_tiles(t2, br, bc)
+    mp = _pad_tiles(_as2d(m.astype(jnp.float32)), br, bc)
+    vp = _pad_tiles(_as2d(v.astype(jnp.float32)), br, bc)
+    g2 = _as2d(g1.astype(theta.dtype)) if with_fo else t2
+    gp = _pad_tiles(g2, br, bc)
+    ot, om, ov = addax_adam_update_pallas(
+        tp, mp, vp, gp, scalars, leaf_id=leaf_id, alpha=alpha,
+        n_dirs=n_dirs, block_r=br, block_c=bc, with_fo=with_fo,
+        with_zo=with_zo, b1=b1, b2=b2, adam_eps=adam_eps,
+        interpret=interpret)
+    r, c = t2.shape
+    return (ot[:r, :c].reshape(shape), om[:r, :c].reshape(shape),
+            ov[:r, :c].reshape(shape))
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_id", "block_r",

@@ -43,3 +43,32 @@ def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
         w = (1.0 - alpha) if g0 is not None else 1.0
         upd = upd + w * g1.astype(jnp.float32)
     return (theta.astype(jnp.float32) - lr * upd).astype(theta.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "b1",
+                                             "b2", "adam_eps"))
+def addax_adam_update_ref(theta: jax.Array, g1: jax.Array | None,
+                          m: jax.Array, v: jax.Array, g0, seed,
+                          leaf_id: int, lr, bc1, bc2, alpha: float,
+                          b1: float = 0.9, b2: float = 0.999,
+                          adam_eps: float = 1e-8):
+    """Oracle for the moments kernel: mixed gradient (bank mean + FO),
+    Adam (m, v) fold, bias-corrected step — op order mirrors
+    ``_adam_update_kernel`` exactly, so interpret-mode runs match bit for
+    bit.  Returns ``(theta', m', v')``."""
+    g = jnp.zeros(theta.shape, jnp.float32)
+    if g0 is not None:
+        g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
+        n_dirs = g0v.shape[0]
+        seeds = rng.dir_seeds(seed, n_dirs)
+        w_zo = alpha / n_dirs
+        for k in range(n_dirs):
+            z = rng.leaf_z(seeds[k], leaf_id, theta.shape, jnp.float32)
+            g = g + (w_zo * g0v[k]) * z
+    if g1 is not None:
+        w = (1.0 - alpha) if g0 is not None else 1.0
+        g = g + w * g1.astype(jnp.float32)
+    m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+    v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+    step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + adam_eps)
+    return (theta.astype(jnp.float32) - step).astype(theta.dtype), m, v

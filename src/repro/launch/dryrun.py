@@ -44,6 +44,8 @@ def _parse_opts(kvs):
             over[k] = int(v)
         elif isinstance(field.default, float):
             over[k] = float(v)
+        elif field.type == "float | None":   # e.g. grad_clip
+            over[k] = None if v.lower() in ("none", "") else float(v)
         elif k == "param_dtype":
             over[k] = {"bf16": jnp.bfloat16, "f32": jnp.float32}[v]
         else:

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCfg
-from repro.core import schedules
-from repro.core.addax import AddaxConfig, make_addax_step
+from repro.core import engine, schedules
+from repro.core.addax import AddaxConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import data_axes_of
 from repro.models.registry import Bundle, plan_train_cell
@@ -37,7 +37,7 @@ class CellOptions:
     seq_shard_residual: bool = False   # Megatron-SP residual stream
     train_impl: str = "dense"          # dense | chunked attention (train)
     prefill_impl: str = "chunked"
-    optimizer: str = "addax"           # addax | ipsgd | mezo (train cells)
+    optimizer: str = "addax"           # any engine optimizer (train cells)
     remat: str = ""                    # ""=arch default | none | full | dots
     scores_f32: bool = True            # False: bf16 softmax (16-bit paper
                                        # mode; halves S^2 chain traffic)
@@ -45,6 +45,11 @@ class CellOptions:
     eps: float = 1e-3
     lr: float = 1e-4
     n_dirs: int = 0                    # SPSA bank size; 0 = arch default
+    backend: str = ""                  # update backend: jnp | pallas |
+                                       # pallas_interpret; "" = arch default
+    grad_clip: float | None = None     # global-norm clip on the FO gradient
+    spsa_mode: str = "chain"           # chain (paper) | fresh (ablation;
+                                       # required by DP-sharded banks)
     replicate_small_kv: bool = True    # kv_heads unsharded when < TP degree
                                        # (Megatron GQA practice; False forces
                                        # GSPMD padding — §Perf ablation)
@@ -161,8 +166,10 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
     data_axes = data_axes_of(mesh)
     loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
     n_dirs = opts.n_dirs or getattr(bundle.arch, "n_dirs", 1)
+    backend = opts.backend or getattr(bundle.arch, "backend", "jnp")
     acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha,
-                       n_dirs=n_dirs)
+                       n_dirs=n_dirs, grad_clip=opts.grad_clip,
+                       spsa_mode=opts.spsa_mode)
     lr_fn = schedules.constant(opts.lr)
 
     cell = plan_train_cell(bundle.arch, shape)
@@ -173,26 +180,36 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
     b0_sh = _batch_shardings(b0, mesh, data_axes)
     b1_sh = _batch_shardings(b1, mesh, data_axes)
 
-    if opts.optimizer == "addax":
-        step = make_addax_step(loss_fn, acfg, lr_fn)
-        in_sh = (params_sh, _repl(mesh), b0_sh, b1_sh)
-        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32),
-                b0, b1)
-    elif opts.optimizer == "ipsgd":
-        from repro.core.sgd import make_ipsgd_step
-        step = make_ipsgd_step(loss_fn, acfg, lr_fn)
-        in_sh = (params_sh, _repl(mesh), b1_sh)
-        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32), b1)
-    elif opts.optimizer == "mezo":
-        from repro.core.mezo import make_mezo_step
-        step = make_mezo_step(loss_fn, acfg, lr_fn)
-        in_sh = (params_sh, _repl(mesh), b0_sh)
-        args = (abstract_params, jax.ShapeDtypeStruct((), jnp.uint32), b0)
-    else:
+    # every optimizer is one engine instantiation; only the arg plumbing
+    # (batch arity, moments state) differs per StepSpec
+    spec = engine.STEP_SPECS.get(opts.optimizer)
+    if spec is None:
         raise ValueError(opts.optimizer)
+    step = engine.make_step(opts.optimizer, loss_fn, acfg, lr_fn,
+                            backend=backend)
+    idx = jax.ShapeDtypeStruct((), jnp.uint32)
+    if spec.two_stream:
+        batch_args, batch_sh = (b0, b1), (b0_sh, b1_sh)
+    elif spec.stream == "zo":
+        batch_args, batch_sh = (b0,), (b0_sh,)
+    else:
+        batch_args, batch_sh = (b1,), (b1_sh,)
 
-    jitted = jax.jit(step, in_shardings=in_sh,
-                     out_shardings=(params_sh, None), donate_argnums=(0,))
+    if spec.moments:
+        from repro.core.adam import init_adam_state
+        state = jax.eval_shape(init_adam_state, abstract_params)
+        state_sh = {"m": params_sh, "v": params_sh}
+        in_sh = (params_sh, state_sh, _repl(mesh)) + batch_sh
+        args = (abstract_params, state, idx) + batch_args
+        jitted = jax.jit(step, in_shardings=in_sh,
+                         out_shardings=(params_sh, state_sh, None),
+                         donate_argnums=(0, 1))
+    else:
+        in_sh = (params_sh, _repl(mesh)) + batch_sh
+        args = (abstract_params, idx) + batch_args
+        jitted = jax.jit(step, in_shardings=in_sh,
+                         out_shardings=(params_sh, None),
+                         donate_argnums=(0,))
     return CellPlan(bundle.arch.arch_id, shape, "train", jitted, args,
                     notes={"cell": dataclasses.asdict(cell)})
 

@@ -35,6 +35,16 @@ def main(argv=None):
     p.add_argument("--eps", type=float, default=1e-3)
     p.add_argument("--n-dirs", type=int, default=1,
                    help="SPSA estimator-bank size (directions per step)")
+    p.add_argument("--backend", default="jnp",
+                   choices=("jnp", "pallas", "pallas_interpret"),
+                   help="update-engine backend (pallas = fused in-place "
+                        "kernel; pallas_interpret = CPU validation mode)")
+    p.add_argument("--grad-clip", type=float, default=None,
+                   help="global-norm clip on the FO gradient")
+    p.add_argument("--spsa-mode", default="chain",
+                   choices=("chain", "fresh"),
+                   help="SPSA walk: chain (paper, single live buffer) | "
+                        "fresh (bit-exact restore; ablation)")
     p.add_argument("--task", default="markov",
                    choices=("markov", "copy", "classify"))
     p.add_argument("--profile", default="multirc",
@@ -70,9 +80,10 @@ def main(argv=None):
 
     acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
                        k0=args.k0, k1=args.k1, l_t=args.l_t,
-                       n_dirs=args.n_dirs)
+                       n_dirs=args.n_dirs, grad_clip=args.grad_clip,
+                       spsa_mode=args.spsa_mode)
     opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
-                          total_steps=args.steps)
+                          total_steps=args.steps, backend=args.backend)
     dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16
     params = bundle.init_params(jax.random.key(args.seed), dtype)
     opt_state = opt.init_state(params) if opt.has_state else None

@@ -83,6 +83,12 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
     store = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
         if cfg.ckpt_dir else None
     ckpt = AsyncCheckpointer(store) if store else None
+    # opt moments live in a sibling store, saved/restored in lockstep with
+    # params (same steps, same retention) so a resume can never pair
+    # params@N with stale opt@M<N.
+    opt_store = CheckpointStore(os.path.join(cfg.ckpt_dir, "opt"),
+                                keep=cfg.keep_ckpts) \
+        if (store and opt.has_state) else None
     guard = guard or PreemptionGuard(install_signal=False)
     watchdog = StragglerWatchdog(threshold=cfg.straggler_threshold)
     logger = MetricsLogger(cfg.metrics_path)
@@ -91,9 +97,11 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
     if store and store.latest_step() is not None:
         params, meta = store.restore(params)
         start_step = meta["step"] + 1
-        if opt.has_state and opt_state is not None:
-            opt_state, _ = CheckpointStore(
-                os.path.join(cfg.ckpt_dir, "opt")).restore(opt_state)
+        if opt_store and opt_state is not None:
+            # restore at exactly the params' step — a missing pair is a
+            # hard error, not a silent stale-moments resume
+            opt_state, _ = opt_store.restore(opt_state,
+                                             step=meta["step"])
 
     step_fn = opt.step_fn
     if jit:
@@ -132,13 +140,16 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
                 step % cfg.eval_every == 0:
             logger.log({"step": step, **eval_fn(params)})
         if ckpt and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+            # opt first: params' DONE marker is what restore scans for, so
+            # a crash between the two leaves no params@N without opt@N
+            if opt_store:
+                opt_store.save(step, opt_state)
             ckpt.save(step, params)
-            if opt.has_state:
-                CheckpointStore(os.path.join(cfg.ckpt_dir, "opt"),
-                                keep=cfg.keep_ckpts).save(step, opt_state)
 
     if ckpt:
         if completed >= start_step:     # never re-stamp a stale step
+            if opt_store:               # atomic (params, opt) pair
+                opt_store.save(completed, opt_state)
             ckpt.save(completed, params)  # final / preemption checkpoint
         ckpt.close()
     logger.close()

@@ -1,5 +1,6 @@
 """Optimizer setup: binds ``--optimizer <name>`` to a step function and its
-state layout.
+state layout — all seven names route through the unified update engine
+(``repro.core.engine``, DESIGN.md §4).
 
 Addax/MeZO/IP-SGD carry **no optimizer state** (that is the point of the
 paper); Adam and Addax+Adam (paper §5 "future work", implemented here as a
@@ -13,6 +14,11 @@ Step-function signatures (uniform across optimizers):
 ``OptimizerSetup.two_stream`` tells the caller which to feed; for
 one-stream optimizers the loop feeds the FO batch (short stream) except
 MeZO, which trains on the ZO batch (long stream) exactly as in the paper.
+
+``backend`` selects the engine's update implementation: ``"jnp"`` (pure
+JAX, default), ``"pallas"`` (the fused in-place ``kernels/addax_update``
+kernel driven tree-wide), or ``"pallas_interpret"`` (same kernel,
+interpret mode — CPU validation).
 """
 
 from __future__ import annotations
@@ -20,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-from repro.core import adam, addax, mezo, schedules, sgd
+from repro.core import adam, addax, engine, schedules
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,43 +41,17 @@ class OptimizerSetup:
 
 
 def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
-                    total_steps: int = 1000) -> OptimizerSetup:
+                    total_steps: int = 1000,
+                    backend: str = "jnp") -> OptimizerSetup:
+    spec = engine.STEP_SPECS.get(name)
+    if spec is None:
+        raise ValueError(f"unknown optimizer {name!r}")
     lr_fn = schedules.by_name(cfg.schedule, cfg.lr, total_steps)
-    if name == "addax":
-        return OptimizerSetup(
-            name, addax.make_addax_step(loss_fn, cfg, lr_fn),
-            two_stream=True, has_state=False, init_state=None)
-    if name == "addax-wa":
-        # WA consumes one batch internally split into (B0, B1); the loop
-        # still feeds two streams drawn from the same distribution, so we
-        # reuse the two-stream step (identical semantics, static shapes).
-        return OptimizerSetup(
-            name, addax.make_addax_step(loss_fn, cfg, lr_fn),
-            two_stream=True, has_state=False, init_state=None)
-    if name == "mezo":
-        return OptimizerSetup(
-            name, mezo.make_mezo_step(loss_fn, cfg, lr_fn),
-            two_stream=False, has_state=False, init_state=None, stream="zo")
-    if name == "ipsgd":
-        return OptimizerSetup(
-            name, sgd.make_ipsgd_step(loss_fn, cfg, lr_fn),
-            two_stream=False, has_state=False, init_state=None)
-    if name == "sgd":
-        return OptimizerSetup(
-            name, sgd.make_sgd_step(loss_fn, cfg, lr_fn),
-            two_stream=False, has_state=False, init_state=None)
-    if name == "adam":
-        return OptimizerSetup(
-            name, adam.make_adam_step(loss_fn, cfg, lr_fn),
-            two_stream=False, has_state=True,
-            init_state=adam.init_adam_state)
-    if name == "addax-adam":
-        return OptimizerSetup(
-            name, adam.make_addax_adam_step(loss_fn, cfg, lr_fn),
-            two_stream=True, has_state=True,
-            init_state=adam.init_adam_state)
-    raise ValueError(f"unknown optimizer {name!r}")
+    step = engine.make_step(name, loss_fn, cfg, lr_fn, backend=backend)
+    return OptimizerSetup(
+        name, step, two_stream=spec.two_stream, has_state=spec.moments,
+        init_state=adam.init_adam_state if spec.moments else None,
+        stream=spec.stream)
 
 
-OPTIMIZERS = ("addax", "addax-wa", "mezo", "ipsgd", "sgd", "adam",
-              "addax-adam")
+OPTIMIZERS = tuple(engine.STEP_SPECS)

@@ -40,7 +40,8 @@ def test_int8_quantization_roundtrip():
 def test_dp_addax_step_matches_single_device():
     """shard_map DP Addax over 8 shards == the single-process step on the
     concatenated batch (pmean == global mean), and the ZO sync is one
-    scalar: parameters must come back identical across shards."""
+    scalar pair (2 n_dirs scalars in general): parameters must come back
+    identical across shards."""
     code = textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
@@ -179,7 +180,10 @@ def test_dp_addax_step_compressed_fo():
 
 
 def test_collective_bytes_model():
-    """The ZO term's wire cost is a scalar regardless of model size."""
+    """The ZO term's wire cost is 2 n_dirs scalars regardless of model
+    size (one scalar pair in the paper's n_dirs=1 case); the sharded bank
+    swaps the loss psums for an n_dirs-float gather and divides the
+    per-shard forward-pass count by dp."""
     from repro.distributed.collectives import collective_bytes_of_dp_step
     small = collective_bytes_of_dp_step(int(1e8), dp=16, compress=False)
     big = collective_bytes_of_dp_step(int(7e10), dp=16, compress=False)
@@ -187,3 +191,11 @@ def test_collective_bytes_model():
     assert big["fo_bytes"] == 7e10 * 4
     cbig = collective_bytes_of_dp_step(int(7e10), dp=16, compress=True)
     assert cbig["fo_bytes"] == 7e10  # 4x cut
+    bank = collective_bytes_of_dp_step(int(1e8), dp=16, compress=False,
+                                       n_dirs=8)
+    assert bank["zo_bytes"] == 8 * 8
+    assert bank["zo_fwd_passes_per_shard"] == 16
+    shb = collective_bytes_of_dp_step(int(1e8), dp=16, compress=False,
+                                      n_dirs=16, shard_bank=True)
+    assert shb["zo_fwd_passes_per_shard"] == 2
+    assert shb["zo_bytes"] == 4 * 16 + 4

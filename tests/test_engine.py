@@ -1,0 +1,365 @@
+"""Unified update engine tests (DESIGN.md §4):
+
+* **backend parity matrix** — full jitted steps with
+  ``backend="pallas_interpret"`` reproduce ``backend="jnp"`` bit for bit
+  across addax / mezo / ipsgd / addax-adam x ``n_dirs in {1, 2, 4}``
+  (the Pallas kernel tree-driver — leaf ids, tiling, scalar packing —
+  against the pure-JAX fused update);
+* **moments kernel** — the new adam-variant kernel matches its jitted
+  oracle bitwise, and the engine's addax-adam stays numerically on the
+  old ``zo_pseudo_gradient``-materializing implementation;
+* **sharded direction banks** — dp=2 shards x 2-dir slices reproduce the
+  single-host ``n_dirs=4`` bank bit for bit on ``g0`` (and on the updated
+  params for the pure-ZO step), at equal data;
+* the engine registry backs ``build_optimizer`` for all seven names.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, rng, schedules, spsa
+from repro.core.adam import _adam_update, init_adam_state
+from repro.core.addax import AddaxConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def quad_loss(params, batch):
+    p = params["w"]
+    return 0.5 * jnp.sum((batch["A"] @ p - batch["b"]) ** 2) + \
+        0.1 * jnp.sum(params["a"] ** 2)
+
+
+def _batch(n=12, d=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"A": jax.random.normal(k1, (n, d)),
+            "b": jax.random.normal(k2, (n,))}
+
+
+def _params(d=8):
+    # two leaves, one 2-D, so the kernel path exercises leaf-id iteration
+    # and (rows, cols) tiling
+    return {"a": jnp.linspace(-0.5, 0.5, 96).reshape(8, 12),
+            "w": jnp.linspace(-1, 1, d)}
+
+
+def _tree_bitwise(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# --------------------------------------------------------------------------
+# jnp vs pallas-interpret backend parity (full jitted steps, bitwise)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["addax", "mezo", "ipsgd", "addax-adam"])
+@pytest.mark.parametrize("n_dirs", [1, 2, 4])
+def test_step_backend_parity_bitwise(name, n_dirs):
+    if name == "ipsgd" and n_dirs > 1:
+        pytest.skip("no ZO bank in ipsgd")
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=n_dirs)
+    lr_fn = schedules.constant(cfg.lr)
+    params, batch = _params(), _batch()
+    spec = engine.STEP_SPECS[name]
+    batches = (batch, batch) if spec.two_stream else (batch,)
+
+    steps = {b: jax.jit(engine.make_step(name, quad_loss, cfg, lr_fn,
+                                         backend=b))
+             for b in ("jnp", "pallas_interpret")}
+    if spec.moments:
+        state = init_adam_state(params)
+        outs = {b: s(params, state, jnp.uint32(3), *batches)
+                for b, s in steps.items()}
+        pj, stj, mj = outs["jnp"]
+        pp, stp, mp = outs["pallas_interpret"]
+        assert _tree_bitwise(stj, stp)
+    else:
+        outs = {b: s(params, jnp.uint32(3), *batches)
+                for b, s in steps.items()}
+        pj, mj = outs["jnp"]
+        pp, mp = outs["pallas_interpret"]
+    assert _tree_bitwise(pj, pp)
+    for k in mj:
+        np.testing.assert_array_equal(np.asarray(mj[k]), np.asarray(mp[k]))
+
+
+def test_every_optimizer_routes_through_engine():
+    """All seven build_optimizer names resolve to engine specs and their
+    steps run (including the moments family) on both streams."""
+    from repro.train.state import OPTIMIZERS, build_optimizer
+    assert set(OPTIMIZERS) == set(engine.STEP_SPECS)
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2)
+    params, batch = _params(), _batch()
+    for name in OPTIMIZERS:
+        opt = build_optimizer(name, quad_loss, cfg)
+        args = (batch, batch) if opt.two_stream else (batch,)
+        if opt.has_state:
+            p, st, m = opt.step_fn(params, opt.init_state(params),
+                                   jnp.uint32(0), *args)
+        else:
+            p, m = opt.step_fn(params, jnp.uint32(0), *args)
+        assert np.isfinite(float(m["lr"]))
+        assert all(bool(jnp.all(jnp.isfinite(l)))
+                   for l in jax.tree_util.tree_leaves(p))
+
+
+# --------------------------------------------------------------------------
+# moments path: kernel oracle parity + no pseudo-gradient materialization
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_dirs", [1, 3])
+@pytest.mark.parametrize("shape", [(64, 48), (7,), (3, 5, 16)])
+def test_adam_kernel_matches_oracle_bitwise(n_dirs, shape):
+    from repro.kernels.addax_update import (addax_adam_update,
+                                            addax_adam_update_ref)
+    kt, kg, km, kv = jax.random.split(jax.random.key(1), 4)
+    th = jax.random.normal(kt, shape)
+    g1 = jax.random.normal(kg, shape)
+    m = 0.1 * jax.random.normal(km, shape)
+    v = jnp.abs(0.01 * jax.random.normal(kv, shape))
+    g0 = jnp.linspace(-1.0, 1.0, n_dirs).astype(jnp.float32)
+    seed, lr = jnp.uint32(7), jnp.float32(1e-3)
+    bc1, bc2 = jnp.float32(0.1), jnp.float32(0.001)
+    out = addax_adam_update(th, g1, m, v, g0, seed, lr, bc1, bc2,
+                            leaf_id=4, alpha=0.2, interpret=True)
+    ref = addax_adam_update_ref(th, g1, m, v, g0, seed, 4, lr, bc1, bc2,
+                                alpha=0.2)
+    for o, r in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+
+
+def test_addax_adam_matches_materialized_reference():
+    """The streaming moments path tracks the old implementation (mixed
+    pseudo-gradient materialized via zo_pseudo_gradient, then
+    _adam_update) to fp32 roundoff, without ever building the ZO tree."""
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2)
+    lr_fn = schedules.constant(cfg.lr)
+    params, batch = _params(), _batch()
+    state = init_adam_state(params)
+
+    step = jax.jit(engine.make_step("addax-adam", quad_loss, cfg, lr_fn))
+    p_new, st_new, m_new = step(params, state, jnp.uint32(5), batch, batch)
+
+    # old implementation, verbatim
+    seed = rng.fold_seed(0xADA3, jnp.uint32(5))
+    g0, _, p = spsa.spsa_bank_grad(quad_loss, params, batch, seed,
+                                   cfg.eps, cfg.n_dirs, cfg.spsa_mode)
+    _, g1 = jax.value_and_grad(quad_loss)(p, batch)
+    zo = spsa.zo_pseudo_gradient(g0, seed, p)
+    mixed = jax.tree_util.tree_map(
+        lambda a, b: cfg.alpha * a + (1 - cfg.alpha) * b.astype(jnp.float32),
+        zo, g1)
+    p_old, st_old = _adam_update(p, mixed, state, jnp.float32(cfg.lr),
+                                 jnp.uint32(5))
+    for key in params:
+        np.testing.assert_allclose(np.asarray(p_new[key]),
+                                   np.asarray(p_old[key]), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_new["m"][key]),
+                                   np.asarray(st_old["m"][key]), atol=1e-6)
+
+
+def test_addax_adam_hot_path_has_no_pseudo_gradient(monkeypatch):
+    """Tracing the engine's addax-adam step never calls
+    spsa.zo_pseudo_gradient (acceptance criterion: the streaming pass
+    replaced the materialized tree)."""
+    called = {"n": 0}
+    orig = spsa.zo_pseudo_gradient
+
+    def spy(*a, **k):
+        called["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(spsa, "zo_pseudo_gradient", spy)
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2)
+    step = engine.make_step("addax-adam", quad_loss, cfg,
+                            schedules.constant(cfg.lr))
+    params, batch = _params(), _batch()
+    step(params, init_adam_state(params), jnp.uint32(0), batch, batch)
+    assert called["n"] == 0
+
+
+# --------------------------------------------------------------------------
+# n_dirs=1 jnp backend: unchanged vs the PR-1 step implementation
+# --------------------------------------------------------------------------
+
+def test_engine_addax_n1_bitwise_vs_pre_engine_step():
+    """The engine's jnp addax step at n_dirs=1 reproduces the pre-engine
+    (PR 1) hand-rolled step bit for bit (same spsa walk, same
+    fused_update, same seeds and metric arithmetic)."""
+    from repro.core.addax import _tree_sq_norm, fused_update
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=1)
+    lr_fn = schedules.constant(cfg.lr)
+    params, batch = _params(), _batch()
+
+    def pre_engine_step(params, step_idx, batch0, batch1):
+        seed = rng.fold_seed(0xADDA, step_idx)
+        lr = lr_fn(step_idx)
+        g0, loss0, params = spsa.spsa_bank_grad(
+            quad_loss, params, batch0, seed, cfg.eps, cfg.n_dirs,
+            cfg.spsa_mode)
+        loss1, g1 = jax.value_and_grad(quad_loss)(params, batch1)
+        gnorm = jnp.sqrt(_tree_sq_norm(g1))
+        params = fused_update(params, g1, g0, seed, lr, cfg.alpha)
+        return params, {"loss_zo": loss0, "loss_fo": loss1,
+                        "g0": jnp.mean(g0), "fo_grad_norm": gnorm,
+                        "lr": lr}
+
+    step = engine.make_step("addax", quad_loss, cfg, lr_fn)
+    for t in (0, 7, 123):
+        p_new, m_new = step(params, jnp.uint32(t), batch, batch)
+        p_old, m_old = pre_engine_step(params, jnp.uint32(t), batch, batch)
+        assert _tree_bitwise(p_new, p_old)
+        assert set(m_new) == set(m_old)
+        for k in m_old:
+            np.testing.assert_array_equal(np.asarray(m_new[k]),
+                                          np.asarray(m_old[k]))
+
+
+def test_grad_clip_threads_through_engine():
+    """cfg.grad_clip caps the FO gradient norm used in the update (the
+    clipped step differs from the unclipped one and matches a manual
+    clip)."""
+    cfg = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3, grad_clip=0.5)
+    step = engine.make_step("ipsgd", quad_loss, cfg,
+                            schedules.constant(cfg.lr))
+    params, batch = _params(), _batch()
+    p_clip, _ = step(params, jnp.uint32(0), batch)
+    cfg_no = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3)
+    p_no, _ = engine.make_step("ipsgd", quad_loss, cfg_no,
+                               schedules.constant(cfg.lr))(
+        params, jnp.uint32(0), batch)
+    assert not _tree_bitwise(p_clip, p_no)
+    # manual: delta scales by clip/||g||
+    d_clip = np.asarray(p_clip["w"] - params["w"])
+    d_no = np.asarray(p_no["w"] - params["w"])
+    gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in
+                               jax.tree_util.tree_leaves(
+                                   jax.grad(quad_loss)(params, batch)))))
+    # atol: the deltas are params_new - params differences of ~0.5-sized
+    # fp32 values, so each carries ~ulp(0.5) = 6e-8 of cancellation noise
+    np.testing.assert_allclose(d_clip, d_no * (0.5 / gnorm), rtol=1e-3,
+                               atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# sharded direction banks (subprocess: forced 8-device CPU)
+# --------------------------------------------------------------------------
+
+def _run_subprocess(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_bank_matches_single_host_bitwise():
+    """dp=2 shards x 2-dir slices == single-host n_dirs=4 fresh bank at
+    equal data (batch replicated into both shards): the gathered g0 bank
+    is bit-for-bit, and for the pure-ZO step (mezo: no backprop in the
+    graph) the updated params are bit-for-bit too.  The mixed addax step
+    additionally matches its own local-bank shard_map variant bit-for-bit
+    on g0 AND params (the engine's optimization_barriers isolate the
+    backprop+update region so both variants compile it identically)."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import schedules
+        from repro.core.addax import AddaxConfig, make_addax_step
+        from repro.core.mezo import make_mezo_step
+        from repro.distributed.collectives import (batch_sharding,
+                                                   make_dp_step,
+                                                   replicated)
+        from repro.launch.mesh import _mk
+        from repro.models.registry import get_bundle
+
+        mesh = _mk((2,), ("data",))
+        b = get_bundle("tiny-100m", smoke=True)
+        lr_fn = schedules.constant(1e-3)
+        params = b.init_params(jax.random.key(0))
+        b0 = b.make_batch(0, 4, 64)
+        b1 = b.make_batch(1, 4, 32)
+        rep = lambda bb: jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x, x]), bb)
+        pd = jax.device_put(params, replicated(mesh))
+        bd0 = jax.device_put(rep(b0), batch_sharding(mesh))
+        bd1 = jax.device_put(rep(b1), batch_sharding(mesh))
+        bit = lambda a, c: all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(c)))
+
+        # pure-ZO: sharded dp step vs single-host step, fully bitwise
+        mcfg = AddaxConfig(lr=1e-3, alpha=1.0, eps=1e-3, n_dirs=4,
+                           spsa_mode="fresh")
+        dp_mezo = make_dp_step(b.loss_fn(), mcfg, lr_fn, mesh,
+                               name="mezo", shard_bank=True)
+        pm, mm = jax.jit(dp_mezo)(pd, jnp.uint32(3), bd0)
+        pr, mr = jax.jit(make_mezo_step(b.loss_fn(), mcfg, lr_fn))(
+            params, jnp.uint32(3), b0)
+
+        # mixed: sharded vs local bank under the same shard_map
+        acfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=4,
+                           spsa_mode="fresh")
+        dp_s = make_dp_step(b.loss_fn(), acfg, lr_fn, mesh,
+                            name="addax", shard_bank=True)
+        dp_l = make_dp_step(b.loss_fn(), acfg, lr_fn, mesh,
+                            name="addax", shard_bank=False)
+        ps, ms = jax.jit(dp_s)(pd, jnp.uint32(3), bd0, bd1)
+        pl, ml = jax.jit(dp_l)(pd, jnp.uint32(3), bd0, bd1)
+        ph, mh = jax.jit(make_addax_step(b.loss_fn(), acfg, lr_fn))(
+            params, jnp.uint32(3), b0, b1)
+        print(json.dumps({
+            "mezo_params_bitwise": bit(pm, pr),
+            "mezo_g0_bank_bitwise": bool(np.array_equal(
+                np.asarray(mm["g0_bank"]), np.asarray(mr["g0_bank"]))),
+            "addax_g0_bank_vs_single_host": bool(np.array_equal(
+                np.asarray(ms["g0_bank"]), np.asarray(mh["g0_bank"]))),
+            "addax_g0_bank_vs_local_bank": bool(np.array_equal(
+                np.asarray(ms["g0_bank"]), np.asarray(ml["g0_bank"]))),
+            "addax_params_vs_local_bank_bitwise": bit(ps, pl),
+        }))
+    """)
+    res = _run_subprocess(code)
+    assert res["mezo_params_bitwise"]
+    assert res["mezo_g0_bank_bitwise"]
+    assert res["addax_g0_bank_vs_single_host"]
+    assert res["addax_g0_bank_vs_local_bank"]
+    assert res["addax_params_vs_local_bank_bitwise"]
+
+
+def test_sharded_bank_rejects_bad_configs():
+    cfg = AddaxConfig(n_dirs=3, spsa_mode="fresh")
+    with pytest.raises(ValueError, match="divide evenly"):
+        engine.make_dp_local_step("addax", quad_loss, cfg,
+                                  schedules.constant(1e-3), "data",
+                                  dp_size=2, shard_bank=True)
+    cfg = AddaxConfig(n_dirs=4, spsa_mode="chain")
+    with pytest.raises(ValueError, match="fresh"):
+        engine.make_dp_local_step("addax", quad_loss, cfg,
+                                  schedules.constant(1e-3), "data",
+                                  dp_size=2, shard_bank=True)
+    with pytest.raises(ValueError, match="no ZO bank"):
+        engine.make_dp_local_step(
+            "ipsgd", quad_loss, AddaxConfig(n_dirs=4, spsa_mode="fresh"),
+            schedules.constant(1e-3), "data", dp_size=2, shard_bank=True)
+
+
+def test_fold_dir_dyn_matches_static_bitwise():
+    for seed in (0, 42, 0xFFFF_FFFF):
+        for k in range(8):
+            a = rng.fold_dir(jnp.uint32(seed), k)
+            b = rng.fold_dir_dyn(jnp.uint32(seed), jnp.uint32(k))
+            assert int(a) == int(b), (seed, k)

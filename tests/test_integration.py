@@ -93,6 +93,48 @@ def test_training_reduces_loss_on_learnable_task():
     assert last < 0.5 * first, (first, last)
 
 
+def test_adam_restart_pairs_opt_state(tmp_path):
+    """Preemption at a non-ckpt_every step must save (params, opt_state)
+    atomically: the resume replays with the *matching* Adam moments, so
+    interrupted + resumed == uninterrupted bit for bit — params AND
+    (m, v).  (Regression: the final checkpoint used to save params only,
+    pairing params@N with stale opt@M<N on resume.)"""
+    cfg = TrainLoopConfig(total_steps=8, ckpt_dir=str(tmp_path / "a"),
+                          ckpt_every=3)
+    _, _, pipe, opt, params0 = _setup(optimizer="adam")
+    ref = run_training(opt, params0, pipe, cfg,
+                       opt_state=opt.init_state(params0))
+
+    _, _, pipe2, opt2, params1 = _setup(optimizer="adam")
+    guard = PreemptionGuard(install_signal=False)
+    orig = pipe2.step_batches
+
+    def counting(step):
+        # last completed step will be 4: (4+1) % ckpt_every != 0, so the
+        # periodic save does NOT fire for it — only the final/preemption
+        # save pairs the stores (the old bug saved params there, opt not)
+        if step >= 4:
+            guard.request()
+        return orig(step)
+    pipe2.step_batches = counting
+    cfgB = TrainLoopConfig(total_steps=8, ckpt_dir=str(tmp_path / "b"),
+                           ckpt_every=3)
+    mid = run_training(opt2, params1, pipe2, cfgB, guard=guard,
+                       opt_state=opt2.init_state(params1))
+    assert mid["preempted"] and mid["step"] == 4
+    # the preemption step landed in BOTH stores
+    import os
+    assert "step_4" in os.listdir(tmp_path / "b")
+    assert "step_4" in os.listdir(tmp_path / "b" / "opt")
+
+    _, _, pipe3, opt3, params2 = _setup(optimizer="adam")
+    fin = run_training(opt3, params2, pipe3, cfgB,
+                       opt_state=opt3.init_state(params2))
+    assert fin["step"] == 7
+    assert _tree_equal(ref["params"], fin["params"])
+    assert _tree_equal(ref["opt_state"], fin["opt_state"])
+
+
 @pytest.mark.parametrize("optimizer", ["mezo", "ipsgd", "sgd", "adam",
                                        "addax-adam"])
 def test_all_baseline_optimizers_step(optimizer):
