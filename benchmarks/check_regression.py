@@ -1,0 +1,266 @@
+"""Benchmark-regression gate: fresh ``--quick`` runs vs committed JSONs.
+
+``python -m benchmarks.check_regression`` (the CI entry point):
+
+  1. snapshots the committed ``benchmarks/results/*.json`` for the gated
+     figures,
+  2. re-runs each figure's ``--quick`` configuration in a subprocess
+     (own env: ``fig_sharded_bank`` forces host devices at import),
+  3. compares fresh vs committed:
+
+     * **structure** — every gated key must exist in both files
+       (hard-fail on missing: a renamed metric must update the committed
+       artifact, not silently drop out of the gate);
+     * **model numbers** (wire bytes, forward-pass counts, HLO temp
+       bytes) — exact equality: these are deterministic outputs of the
+       cost model / compiler, not timings;
+     * **step-time ratios** — tolerance band ``[c/tol, c*tol]`` around
+       the committed ratio ``c``: ratios are hardware-normalized, so the
+       band absorbs runner variance while catching order-of-magnitude
+       regressions;
+     * **directional gates** (``fig_bank_exec``) — vmap fresh-mode step
+       time and scan chain-mode compile time must stay below the
+       unrolled path at ``n_dirs >= 4`` (with a small noise slack):
+       the PR-committed speedup claim, re-proven on every run.
+
+The fresh JSONs overwrite ``benchmarks/results/`` in place — CI uploads
+them as workflow artifacts so a failed gate ships its evidence.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import subprocess
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+#: figure -> subprocess argv suffix for the quick re-run
+FIGURES = {
+    "fig_ndirs_sweep": ["--quick", "--steps", "6"],
+    "fig_sharded_bank": ["--quick", "--steps", "4"],
+    "fig_bank_exec": ["--quick"],
+}
+
+
+class GateFailure(Exception):
+    pass
+
+
+def _load(name: str) -> dict:
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        raise GateFailure(f"{name}: missing results JSON {path}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _need(d: dict, key: str, ctx: str):
+    if key not in d:
+        raise GateFailure(f"{ctx}: missing key {key!r}")
+    return d[key]
+
+
+def _band(name: str, fresh: float, committed: float, tol: float,
+          failures: list):
+    lo, hi = committed / tol, committed * tol
+    ok = lo <= fresh <= hi
+    print(f"  [{'ok' if ok else 'FAIL'}] {name}: fresh={fresh:.4f} "
+          f"committed={committed:.4f} band=[{lo:.4f}, {hi:.4f}]")
+    if not ok:
+        failures.append(f"{name}: {fresh:.4f} outside [{lo:.4f}, {hi:.4f}]")
+
+
+def _exact(name: str, fresh, committed, failures: list):
+    ok = fresh == committed
+    print(f"  [{'ok' if ok else 'FAIL'}] {name}: fresh={fresh} "
+          f"committed={committed} (exact)")
+    if not ok:
+        failures.append(f"{name}: {fresh} != committed {committed}")
+
+
+# --------------------------------------------------------------------------
+# per-figure comparisons
+# --------------------------------------------------------------------------
+
+def _wall_by_ndirs(summary: dict) -> dict:
+    out = {}
+    for row in _need(summary, "rows", "fig_ndirs_sweep"):
+        n = _need(row, "n_dirs", "fig_ndirs_sweep row")
+        out.setdefault(n, []).append(_need(row, "wall_s",
+                                           "fig_ndirs_sweep row"))
+    return {n: sum(v) / len(v) for n, v in out.items()}
+
+
+def check_ndirs(fresh: dict, committed: dict, tol: float, slack: float,
+                failures: list):
+    fw, cw = _wall_by_ndirs(fresh), _wall_by_ndirs(committed)
+    base = min(cw)
+    for n in sorted(cw):
+        if n == base:
+            continue
+        if n not in fw or base not in fw:
+            raise GateFailure(f"fig_ndirs_sweep: fresh run lost n_dirs="
+                              f"{n}/{base} rows")
+        _band(f"ndirs wall({n})/wall({base})", fw[n] / fw[base],
+              cw[n] / cw[base], tol, failures)
+    # the memory-flat claim: HLO temp bytes are compiler-deterministic
+    def temp_by_ndirs(summary):
+        return {_need(r, "n_dirs", "fig_ndirs_sweep row"):
+                _need(r, "temp_bytes", "fig_ndirs_sweep row")
+                for r in summary["rows"]}
+    ftemp, ctemp = temp_by_ndirs(fresh), temp_by_ndirs(committed)
+    for n in sorted(ctemp):
+        if n not in ftemp:
+            raise GateFailure(f"fig_ndirs_sweep: missing temp_bytes n={n}")
+        _exact(f"ndirs temp_bytes(n={n})", ftemp[n], ctemp[n], failures)
+
+
+def check_sharded(fresh: dict, committed: dict, tol: float, slack: float,
+                  failures: list):
+    def rows_by_variant(s):
+        return {_need(r, "variant", "fig_sharded_bank row"): r
+                for r in _need(s, "rows", "fig_sharded_bank")}
+    fr, cr = rows_by_variant(fresh), rows_by_variant(committed)
+    for variant in cr:
+        if variant not in fr:
+            raise GateFailure(f"fig_sharded_bank: fresh run lost variant "
+                              f"{variant!r}")
+        for key in ("zo_fwd_passes_per_shard", "zo_wire_bytes"):
+            _exact(f"sharded {variant}.{key}",
+                   _need(fr[variant], key, variant),
+                   _need(cr[variant], key, variant), failures)
+    ratio_keys = ("sharded_bank", "replicated_bank")
+    if all(v in cr for v in ratio_keys):
+        def wall_ratio(rows):
+            return _need(rows["sharded_bank"], "step_wall_s",
+                         "sharded_bank") / \
+                max(_need(rows["replicated_bank"], "step_wall_s",
+                          "replicated_bank"), 1e-9)
+        _band("sharded/replicated step_wall", wall_ratio(fr),
+              wall_ratio(cr), tol, failures)
+    _need(fresh, "g0_stats", "fig_sharded_bank")
+
+
+def check_bank_exec(fresh: dict, committed: dict, tol: float, slack: float,
+                    failures: list):
+    fr = _need(fresh, "ratios", "fig_bank_exec")
+    cr = _need(committed, "ratios", "fig_bank_exec")
+    for key, cvals in cr.items():
+        if key not in fr:
+            raise GateFailure(f"fig_bank_exec: fresh run lost ratio "
+                              f"{key!r}")
+        for metric in ("step_ratio", "compile_ratio"):
+            _band(f"bank_exec {key}.{metric}",
+                  _need(fr[key], metric, key),
+                  _need(cvals, metric, key), tol, failures)
+    # directional gates — the committed speedup claim (DESIGN.md §5):
+    # vmap fresh step time and scan chain compile time improve on the
+    # unrolled path at n_dirs >= 4 (slack absorbs 2-core runner noise)
+    n_dirs = [n for n in _need(fresh, "n_dirs_list", "fig_bank_exec")
+              if n >= 4]
+    if not n_dirs:
+        raise GateFailure("fig_bank_exec: no n_dirs >= 4 in fresh run")
+    for n in n_dirs:
+        vm = _need(fr, f"fresh_vmap_n{n}", "fig_bank_exec ratios")
+        sc = _need(fr, f"chain_scan_n{n}", "fig_bank_exec ratios")
+        for name, val in ((f"vmap step speedup (n={n})",
+                           vm["step_ratio"]),
+                          (f"scan compile speedup (n={n})",
+                           sc["compile_ratio"])):
+            ok = val <= slack
+            print(f"  [{'ok' if ok else 'FAIL'}] {name}: x{val:.3f} "
+                  f"(must be <= {slack})")
+            if not ok:
+                failures.append(f"{name}: x{val:.3f} > {slack} — the "
+                                "vectorized executor no longer beats the "
+                                "unrolled path")
+
+
+CHECKS = {"fig_ndirs_sweep": check_ndirs,
+          "fig_sharded_bank": check_sharded,
+          "fig_bank_exec": check_bank_exec}
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def _run_quick(name: str) -> None:
+    argv = [sys.executable, "-m", f"benchmarks.{name}"] + FIGURES[name]
+    print(f"[run ] {' '.join(argv[1:])}", flush=True)
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    subprocess.run(argv, check=True, env=env, cwd=repo)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", action="append", choices=tuple(FIGURES),
+                   help="gate a subset of figures")
+    p.add_argument("--no-run", action="store_true",
+                   help="compare the JSONs already on disk against the "
+                        "committed ones (requires a prior snapshot via "
+                        "--committed-dir)")
+    p.add_argument("--committed-dir", default=None,
+                   help="directory holding the committed JSONs (default: "
+                        "snapshot results/ in memory before re-running)")
+    p.add_argument("--tol", type=float, default=2.5,
+                   help="multiplicative band around committed ratios")
+    p.add_argument("--slack", type=float, default=1.1,
+                   help="upper bound for the directional speedup gates")
+    args = p.parse_args(argv)
+
+    figures = args.only or list(FIGURES)
+    if args.no_run and not args.committed_dir:
+        # comparing results/ to an in-memory copy of itself is vacuously
+        # green — refuse instead of passing silently
+        p.error("--no-run requires --committed-dir (otherwise the fresh "
+                "JSONs would be compared against themselves)")
+    try:
+        if args.committed_dir:
+            committed = {}
+            for name in figures:
+                path = os.path.join(args.committed_dir, f"{name}.json")
+                if not os.path.exists(path):
+                    raise GateFailure(f"{name}: missing committed JSON "
+                                      f"{path}")
+                with open(path) as f:
+                    committed[name] = json.load(f)
+        else:
+            committed = {name: copy.deepcopy(_load(name))
+                         for name in figures}
+
+        if not args.no_run:
+            for name in figures:
+                _run_quick(name)
+
+        failures: list[str] = []
+        for name in figures:
+            print(f"\n== {name} ==")
+            CHECKS[name](_load(name), committed[name], args.tol,
+                         args.slack, failures)
+    except GateFailure as e:
+        print(f"\nREGRESSION GATE HARD FAILURE: {e}")
+        return 2
+    except subprocess.CalledProcessError as e:
+        print(f"\nREGRESSION GATE: benchmark run failed: {e}")
+        return 2
+
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)}):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nregression gate passed for {', '.join(figures)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -79,7 +79,7 @@ def hlo_step_memory(arch: str, optimizer: str, batch: int, seq: int,
         lowered = jax.jit(step, donate_argnums=(0,)).lower(
             params, idx, bundle._batch_struct(batch, seq, dtype))
     elif optimizer == "adam":
-        from repro.core.adam import init_adam_state, make_adam_step
+        from repro.core.adam import make_adam_step
         step = make_adam_step(loss_fn, acfg, lr_fn)
         state = jax.tree_util.tree_map(
             lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)

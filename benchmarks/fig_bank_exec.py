@@ -1,0 +1,179 @@
+"""Bank-executor benchmark (DESIGN.md §5): unrolled vs scan vs vmap/map.
+
+Measures, for the same estimator bank on a small MLP loss:
+
+  * **step time** — the vectorized fresh-mode executors batch all
+    ``2 n_dirs`` probes into one forward (``vmap``) or one O(1)-compile
+    sequential map, vs the unrolled Python-loop trace;
+  * **trace+compile time** — the unrolled executors trace ``2 n_dirs``
+    forward passes through Python, so compile cost grows linearly in the
+    bank size; ``scan``/``vmap``/``map`` keep it O(1).
+
+The committed ``results/fig_bank_exec.json`` is a CI-gated artifact
+(``benchmarks/check_regression.py``): vmap fresh-mode step time and scan
+chain-mode compile time must keep improving on the unrolled path at
+``n_dirs >= 4``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result
+
+#: (mode, executor) pairs benchmarked against each mode's unrolled
+#: reference.
+EXECUTORS = (("chain", "unroll"), ("chain", "scan"),
+             ("fresh", "unroll"), ("fresh", "vmap"), ("fresh", "map"))
+
+
+def _make_problem(d_in: int, hidden: int, batch: int, layers: int):
+    """A deep, narrow MLP: many small ops, so per-op dispatch overhead is
+    a visible fraction of the forward — the regime where batching the
+    ``2 n_dirs`` probes (one op stream instead of ``2 n_dirs``) pays even
+    on CPU.  On accelerators the same executors additionally recover the
+    idle-lane FLOPs."""
+    import jax
+    import jax.numpy as jnp
+
+    def loss_fn(params, b):
+        h = b["x"]
+        for i in range(layers):
+            h = jnp.tanh(h @ params[f"w{i}"])
+        return jnp.mean(jnp.square(h @ params["wo"] - b["y"]))
+
+    ks = jax.random.split(jax.random.key(0), layers + 3)
+    params = {f"w{i}": 0.3 * jax.random.normal(
+        ks[i], (d_in if i == 0 else hidden, hidden))
+        for i in range(layers)}
+    params["wo"] = 0.3 * jax.random.normal(ks[layers], (hidden, d_in))
+    b = {"x": jax.random.normal(ks[layers + 1], (batch, d_in)),
+         "y": jax.random.normal(ks[layers + 2], (batch, d_in))}
+    return loss_fn, params, b
+
+
+def _compile_one(loss_fn, params, batch, mode, exec_, n_dirs):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import spsa
+
+    def bank(p, b, seed):
+        return spsa.spsa_bank_grad(loss_fn, p, b, seed, 1e-3, n_dirs,
+                                   mode, vectorize=exec_)
+
+    jitted = jax.jit(bank, donate_argnums=(0,))
+    seed = jnp.uint32(7)
+
+    t0 = time.perf_counter()
+    lowered = jitted.lower(params, batch, seed)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    row = {"mode": mode, "exec": exec_, "n_dirs": n_dirs,
+           "trace_s": round(t1 - t0, 4), "compile_s": round(t2 - t1, 4),
+           "trace_compile_s": round(t2 - t0, 4)}
+    return compiled, row
+
+
+def _bench_group(loss_fn, params, batch, n_dirs, reps, rounds=3):
+    """Compile every executor for one bank size, then time them in
+    interleaved rounds (min over rounds).  Interleaving matters on a
+    shared 2-core container: the gated numbers are cross-executor step
+    ratios, and consecutive timing windows would let one burst of
+    background load masquerade as one executor's regression."""
+    import jax
+    import jax.numpy as jnp
+
+    entries = []
+    for mode, exec_ in EXECUTORS:
+        compiled, row = _compile_one(loss_fn, params, batch, mode, exec_,
+                                     n_dirs)
+        # params are donated: thread the restored tree through the loop
+        p = jax.tree_util.tree_map(jnp.array, params)
+        g0, _, p = compiled(p, batch, jnp.uint32(7))    # warm
+        jax.block_until_ready(g0)
+        entries.append({"row": row, "compiled": compiled, "p": p,
+                        "g0": g0, "step_s": float("inf")})
+
+    seed = jnp.uint32(7)
+    for _ in range(rounds):
+        for e in entries:
+            compiled, p = e["compiled"], e["p"]
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                g0, _, p = compiled(p, batch, seed)
+            jax.block_until_ready(g0)
+            e["step_s"] = min(e["step_s"],
+                              (time.perf_counter() - t0) / reps)
+            e["p"], e["g0"] = p, g0
+
+    rows = []
+    for e in entries:
+        r = dict(e["row"], step_s=round(e["step_s"], 6),
+                 g0_mean=float(np.mean(np.asarray(e["g0"]))))
+        rows.append(r)
+        print(f"[bank_exec] {r['mode']:5s}/{r['exec']:6s} n={n_dirs} "
+              f"trace+compile={r['trace_compile_s']:.3f}s "
+              f"step={r['step_s'] * 1e3:.3f}ms", flush=True)
+    return rows
+
+
+def run(n_dirs_list=(1, 2, 4, 8), reps=None, d_in=64, hidden=128,
+        batch=8, layers=8, quick=False):
+    if quick:
+        n_dirs_list = (1, 4, 8)
+        d_in, hidden, batch, layers = 24, 48, 2, 10
+    if reps is None:
+        reps = 40 if quick else 30
+    loss_fn, params, b = _make_problem(d_in, hidden, batch, layers)
+
+    rows = []
+    for n in n_dirs_list:
+        rows.extend(_bench_group(loss_fn, params, b, n, reps))
+
+    # ratios vs each mode's unrolled reference — the regression-gated
+    # numbers (hardware-normalized, unlike raw seconds).  n_dirs=1 emits
+    # no ratios: every vectorized executor falls back to the unrolled
+    # trace there, so a "ratio" would be two timings of the same
+    # executable — pure noise, poison for the regression bands.
+    by_key = {(r["mode"], r["exec"], r["n_dirs"]): r for r in rows}
+    ratios = {}
+    for n in n_dirs_list:
+        if n == 1:
+            continue
+        for mode, exec_ in EXECUTORS:
+            if exec_ == "unroll":
+                continue
+            ref = by_key[(mode, "unroll", n)]
+            r = by_key[(mode, exec_, n)]
+            ratios[f"{mode}_{exec_}_n{n}"] = {
+                "step_ratio": round(r["step_s"] / ref["step_s"], 4),
+                "compile_ratio": round(
+                    r["trace_compile_s"] / ref["trace_compile_s"], 4)}
+
+    summary = {"n_dirs_list": list(n_dirs_list), "reps": reps,
+               "d_in": d_in, "hidden": hidden, "batch": batch,
+               "layers": layers, "rows": rows, "ratios": ratios}
+    save_result("fig_bank_exec", summary)
+    for key, v in ratios.items():
+        print(f"[bank_exec] {key}: step x{v['step_ratio']} "
+              f"compile x{v['compile_ratio']}")
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--reps", type=int, default=None,
+                   help="timed calls per round (default: 30, or 40 with "
+                        "--quick)")
+    a = p.parse_args(argv)
+    run(reps=a.reps, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,7 +36,7 @@ def run(steps=20, n_dirs=4, dp=2, quick=False):
     import jax
     import jax.numpy as jnp
     from repro.core import schedules
-    from repro.core.addax import AddaxConfig, make_addax_step
+    from repro.core.addax import AddaxConfig
     from repro.distributed.collectives import (
         batch_sharding, collective_bytes_of_dp_step, make_dp_step,
         replicated)

@@ -10,8 +10,6 @@ IP-SGD baseline (the paper's central comparison).
 """
 
 import argparse
-import os
-import tempfile
 
 import numpy as np
 

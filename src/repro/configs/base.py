@@ -55,6 +55,10 @@ class ArchConfig:
     # the in-place ``kernels/addax_update`` kernel driven tree-wide,
     # "pallas_interpret" = same kernel, interpret mode (CPU validation).
     backend: str = "jnp"
+    # Default estimator-bank executor for train cells (DESIGN.md §5;
+    # overridable per cell via ``CellOptions.bank_exec``): "unroll" |
+    # "scan" | "vmap" | "map" | "auto".
+    bank_exec: str = "unroll"
     notes: str = ""
 
     def shape_cells(self) -> list[str]:

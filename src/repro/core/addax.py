@@ -47,6 +47,19 @@ class AddaxConfig:
     spsa_mode: str = "chain"    # "chain" (paper-faithful) | "fresh"
     grad_clip: float | None = None   # optional global-norm clip on g1
     n_dirs: int = 1             # SPSA estimator-bank size (1 = paper alg.)
+    # Bank executor (DESIGN.md §5): "unroll" (reference Python-loop
+    # trace) | "scan" (chain: O(1)-compile lax.scan walk) | "vmap"
+    # (fresh: one batched forward for all 2 n_dirs probes) | "map"
+    # (fresh: sequential/microbatched lax.map) | "auto" (scan / vmap by
+    # mode; falls back to unroll at n_dirs=1).
+    bank_exec: str = "unroll"
+    # Probes per lax.map microbatch for bank_exec="map" (0 = fully
+    # sequential); ignored by the other executors.
+    bank_microbatch: int = 0
+    # Variance-adaptive bank sizing: "" = fixed n_dirs; otherwise a
+    # schedules.BankSchedule spec "min[:low[:high[:ema]]]" with
+    # max_dirs = n_dirs (the step then takes a traced n_active scalar).
+    bank_schedule: str = ""
 
 
 LossFn = Callable[[Any, Any], jax.Array]

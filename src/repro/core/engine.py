@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core import rng, spsa
 from repro.core.addax import AddaxConfig, _tree_sq_norm, fused_update
+from repro.core.schedules import BankSchedule
 
 LossFn = Callable[[Any, Any], jax.Array]
 
@@ -250,6 +251,50 @@ def _bank_metrics(g0: jax.Array, n_dirs: int) -> dict:
     return m
 
 
+def bank_schedule_of(cfg: AddaxConfig, spec: StepSpec) -> BankSchedule | None:
+    """Parse ``cfg.bank_schedule`` for one optimizer spec (the single
+    place config spec strings become BankSchedule objects — the step
+    factories and the train loop must agree on it)."""
+    if not cfg.bank_schedule:
+        return None
+    if not spec.zo:
+        raise ValueError(
+            f"{spec.name!r} has no ZO bank to schedule "
+            f"(bank_schedule={cfg.bank_schedule!r})")
+    if cfg.n_dirs < 2:
+        raise ValueError(
+            "bank_schedule needs n_dirs > 1: the schedule's signal is "
+            "the per-direction g0 spread, which a 1-probe bank cannot "
+            "measure")
+    return BankSchedule.parse(cfg.bank_schedule, max_dirs=cfg.n_dirs)
+
+
+def _mask_bank(g0: jax.Array, n_active: jax.Array, n_dirs: int):
+    """Active-prefix reweighting for a scheduled bank (DESIGN.md §5).
+
+    All ``n_dirs`` probes ran (static shapes); only directions
+    ``k < n_active`` contribute.  Instead of teaching every backend about
+    masks, the masked entries are zeroed and the active ones rescaled by
+    ``n_dirs / n_active`` — the backends' fixed ``alpha / n_dirs`` weight
+    then equals ``alpha / n_active`` on the active prefix, for the jnp
+    and Pallas update paths alike.  At ``n_active == n_dirs`` the
+    rescale is ``* 1.0``: bit-identical to the unscheduled bank.
+
+    Returns ``(g0_eff, metrics)``; ``g0_std`` stays the spread over the
+    *full* probed bank — that is the scheduler's signal."""
+    n_act = jnp.clip(jnp.asarray(n_active, jnp.int32), 1, n_dirs)
+    mask = jnp.arange(n_dirs) < n_act
+    na = n_act.astype(jnp.float32)
+    g0_masked = jnp.where(mask, g0, 0.0)
+    g0_eff = g0_masked * (jnp.float32(n_dirs) / na)
+    metrics = {"g0": jnp.sum(g0_masked) / na,
+               "n_active": n_act}
+    if n_dirs > 1:
+        metrics["g0_std"] = jnp.std(g0)
+        metrics["g0_bank"] = g0
+    return g0_eff, metrics
+
+
 # --------------------------------------------------------------------------
 # Step factory (single-process / pjit path)
 # --------------------------------------------------------------------------
@@ -265,24 +310,39 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
 
     where ``*batches`` is ``(batch0, batch1)`` for two-stream specs and
     ``(batch,)`` otherwise.  Meant to be jitted with the params (and
-    state) donated — see DESIGN.md §2."""
+    state) donated — see DESIGN.md §2.
+
+    ``cfg.bank_exec`` selects the estimator-bank executor
+    (unroll | scan | vmap | map | auto — DESIGN.md §5).  A non-empty
+    ``cfg.bank_schedule`` makes the bank variance-adaptive: the step
+    gains a traced ``n_active`` scalar argument right after ``step_idx``
+    (``step(params[, state], step_idx, n_active, *batches)``) and only
+    the first ``n_active`` of the ``cfg.n_dirs`` probed directions feed
+    the update (active-prefix masking — changing ``n_active`` never
+    recompiles)."""
     spec = STEP_SPECS.get(name)
     if spec is None:
         raise ValueError(f"unknown optimizer {name!r}; "
                          f"one of {tuple(STEP_SPECS)}")
     _check_backend(backend)
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
+    sched = bank_schedule_of(cfg, spec)
 
-    def gradient_source(params, step_idx, batches):
+    def gradient_source(params, step_idx, batches, n_active=None):
         seed = rng.fold_seed(spec.seed_base, step_idx)
         g0 = g1 = None
         metrics = {}
         if spec.zo:
             g0, loss0, params = spsa.spsa_bank_grad(
                 loss_fn, params, batches[0], seed, cfg.eps, cfg.n_dirs,
-                cfg.spsa_mode)
+                cfg.spsa_mode, vectorize=cfg.bank_exec,
+                microbatch=cfg.bank_microbatch or None)
             metrics["loss_zo"] = loss0
-            metrics.update(_bank_metrics(g0, cfg.n_dirs))
+            if n_active is None:
+                metrics.update(_bank_metrics(g0, cfg.n_dirs))
+            else:
+                g0, bank_m = _mask_bank(g0, n_active, cfg.n_dirs)
+                metrics.update(bank_m)
         if spec.fo:
             loss1, g1, fo_m = _fo_half(loss_fn, params, batches[-1], cfg,
                                        spec)
@@ -291,20 +351,24 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
         return params, g0, g1, seed, metrics
 
     if spec.moments:
-        def step(params, state, step_idx, *batches):
+        def step(params, state, step_idx, *rest):
+            n_active, batches = (rest[0], rest[1:]) if sched \
+                else (None, rest)
             lr = lr_fn(step_idx)
             params, g0, g1, seed, metrics = gradient_source(
-                params, step_idx, batches)
+                params, step_idx, batches, n_active)
             params, state = apply_adam_update(
                 params, state, g1, g0, seed, lr, alpha, step_idx,
                 backend=backend)
             metrics["lr"] = lr
             return params, state, metrics
     else:
-        def step(params, step_idx, *batches):
+        def step(params, step_idx, *rest):
+            n_active, batches = (rest[0], rest[1:]) if sched \
+                else (None, rest)
             lr = lr_fn(step_idx)
             params, g0, g1, seed, metrics = gradient_source(
-                params, step_idx, batches)
+                params, step_idx, batches, n_active)
             params = apply_update(params, g1, g0, seed, lr, alpha,
                                   backend=backend)
             metrics["lr"] = lr
@@ -335,7 +399,13 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     Sharded banks require ``spsa_mode="fresh"``: the chain walk threads
     one buffer through *all* directions sequentially, which is exactly the
     dependency sharding removes (and fresh's bit-exact restore is what
-    keeps shards' parameters identical afterwards)."""
+    keeps shards' parameters identical afterwards).
+
+    ``cfg.bank_exec`` selects the per-shard bank executor (each shard
+    vmaps/maps its own slice of the bank); ``cfg.bank_schedule`` adds the
+    traced ``n_active`` argument exactly as in ``make_step`` — every
+    shard still probes its full slice, and the *gathered* bank is masked
+    to the active global prefix, so shards stay bit-identical."""
     spec = STEP_SPECS.get(name)
     if spec is None:
         raise ValueError(f"unknown optimizer {name!r}")
@@ -345,6 +415,7 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
             "state would need its own psum contract)")
     _check_backend(backend)
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
+    sched = bank_schedule_of(cfg, spec)
 
     if shard_bank:
         if not spec.zo:
@@ -363,7 +434,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
         n_local = cfg.n_dirs // dp_size
         gather_axis = axes[0] if isinstance(axes, (tuple, list)) else axes
 
-    def local_step(params, step_idx, *batches):
+    def local_step(params, step_idx, *rest):
+        n_active, batches = (rest[0], rest[1:]) if sched else (None, rest)
         seed = rng.fold_seed(spec.seed_base, step_idx)
         lr = lr_fn(step_idx)
         g0 = g1 = None
@@ -380,7 +452,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                          for j in range(n_local)]
                 g0_loc, loss0, params = spsa.spsa_bank_grad(
                     loss_fn, params, b0, seed, cfg.eps, n_local,
-                    "fresh", seeds=seeds)
+                    "fresh", seeds=seeds, vectorize=cfg.bank_exec,
+                    microbatch=cfg.bank_microbatch or None)
                 g0 = jax.lax.all_gather(g0_loc, gather_axis, tiled=True)
                 loss0 = jax.lax.pmean(loss0, axes)
             else:
@@ -391,9 +464,16 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
 
                 g0, loss0, params = spsa.spsa_bank_grad(
                     pmean_loss, params, b0, seed, cfg.eps, cfg.n_dirs,
-                    cfg.spsa_mode)
+                    cfg.spsa_mode, vectorize=cfg.bank_exec,
+                    microbatch=cfg.bank_microbatch or None)
             metrics["loss_zo"] = loss0
-            metrics.update(_bank_metrics(g0, cfg.n_dirs))
+            if n_active is None:
+                metrics.update(_bank_metrics(g0, cfg.n_dirs))
+            else:
+                # scheduled bank: mask the gathered global vector to the
+                # active prefix — identical arithmetic on every shard
+                g0, bank_m = _mask_bank(g0, n_active, cfg.n_dirs)
+                metrics.update(bank_m)
 
         if spec.fo:
             from repro.core import compression

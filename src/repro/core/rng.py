@@ -211,13 +211,66 @@ def fold_dir_dyn(seed: jax.Array, k: jax.Array) -> jax.Array:
     return jnp.where(jnp.asarray(k, jnp.uint32) == 0, seed, mixed)
 
 
-def dir_seeds(seed: jax.Array, n_dirs: int) -> list[jax.Array]:
+def dir_seeds(seed: jax.Array, n_dirs: int,
+              seeds: Any = None) -> list[jax.Array]:
     """The bank's seed vector ``[fold_dir(seed, k) for k in range(n)]``.
 
     Every consumer of the bank (the SPSA walk, the fused jnp update, the
     Pallas kernel's scalar-prefetch vector, and the kernel's oracle) derives
     direction seeds through this one function — that is what keeps the
-    checkpoint-replay story intact: state is still ``(base seed, step)``."""
+    checkpoint-replay story intact: state is still ``(base seed, step)``.
+
+    A caller-supplied ``seeds`` (the DP-sharded bank's ``fold_dir_dyn``
+    slice) bypasses the derivation but still flows through
+    ``normalize_seeds`` — length, rank, and dtype are validated here, in
+    the one place every bank consumer already goes through, instead of
+    silently feeding mis-typed values into threefry."""
     if n_dirs < 1:
         raise ValueError(f"n_dirs must be >= 1, got {n_dirs}")
+    if seeds is not None:
+        return normalize_seeds(seeds, n_dirs)
     return [fold_dir(seed, k) for k in range(n_dirs)]
+
+
+def normalize_seeds(seeds: Any, n_dirs: int) -> list[jax.Array]:
+    """Validate and normalize an explicit per-direction seed vector.
+
+    Accepts a list/tuple of scalars (python ints or traced integer
+    scalars) or a 1-D integer array; returns a list of ``n_dirs`` uint32
+    scalars.  Float dtypes are rejected loudly — ``threefry2x32`` would
+    otherwise truncate them to ints and derive a *valid-looking but
+    wrong* perturbation stream."""
+    if isinstance(seeds, (jax.Array, np.ndarray)):
+        if seeds.ndim != 1:
+            raise ValueError(
+                f"seeds array must be 1-D, got shape {seeds.shape}")
+        if not jnp.issubdtype(seeds.dtype, jnp.integer):
+            raise TypeError(
+                f"seeds must have an integer dtype, got {seeds.dtype}")
+        seeds = [seeds[k] for k in range(seeds.shape[0])]
+    elif isinstance(seeds, (list, tuple)):
+        seeds = list(seeds)
+    else:
+        raise TypeError(
+            f"seeds must be a list/tuple or 1-D array, got "
+            f"{type(seeds).__name__}")
+    if len(seeds) != n_dirs:
+        raise ValueError(f"got {len(seeds)} seeds for n_dirs={n_dirs}")
+
+    out = []
+    for k, s in enumerate(seeds):
+        if isinstance(s, (jax.Array, np.ndarray, np.generic)):
+            if s.ndim != 0:
+                raise ValueError(
+                    f"seed {k} must be a scalar, got shape {s.shape}")
+            if not jnp.issubdtype(s.dtype, jnp.integer):
+                raise TypeError(
+                    f"seed {k} must be an integer, got dtype {s.dtype}")
+            out.append(jnp.asarray(s, jnp.uint32))
+        elif isinstance(s, int) and not isinstance(s, bool):
+            out.append(jnp.uint32(s & 0xFFFF_FFFF))
+        else:
+            raise TypeError(
+                f"seed {k} must be an int or integer scalar array, got "
+                f"{type(s).__name__}")
+    return out

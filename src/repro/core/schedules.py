@@ -1,8 +1,14 @@
-"""Learning-rate schedules. The paper uses constant schedules for Addax /
-MeZO / (IP-)SGD and linear decay for Adam; both are provided, plus cosine
-and linear-warmup variants for the beyond-paper runs."""
+"""Learning-rate schedules and the variance-adaptive SPSA bank schedule.
+
+The paper uses constant LR schedules for Addax / MeZO / (IP-)SGD and
+linear decay for Adam; both are provided, plus cosine and linear-warmup
+variants for the beyond-paper runs.  ``BankSchedule`` (DESIGN.md §5)
+sizes the estimator bank from the measured per-direction ``g0`` spread
+instead of a fixed config value."""
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
@@ -30,6 +36,83 @@ def warmup_cosine(lr: float, total_steps: int, warmup: int = 0,
         cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
         return jnp.float32(lr) * jnp.where(step < warmup, warm, cos)
     return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSchedule:
+    """Variance-adaptive SPSA bank sizing (DESIGN.md §5).
+
+    The bank always *probes* the compile-time ``max_dirs`` directions
+    (static shapes under jit), but only the first ``n_active`` contribute
+    to the update — the engine masks the inactive suffix and reweights
+    the active prefix mean, so ``n_active`` is a cheap traced scalar and
+    changing it never recompiles.
+
+    ``n_active`` is driven host-side by the training loop from the
+    logged per-direction spread: the relative spread
+    ``g0_std / (|g0_mean| + tiny)`` is EMA-smoothed; above ``high`` the
+    estimator is noisy and the active bank doubles, below ``low`` it has
+    converged and the bank halves (low < high gives hysteresis).  Scale
+    is relative so the thresholds transfer across losses.  Variance is
+    the lever that decides how many probes are worth paying for (Gautam
+    et al.; MeZO) — this schedules bank *size* from measured variance
+    instead of fixing it in config.
+
+    Scheduler state is deliberately NOT checkpointed: it re-adapts
+    within ~1/(1-ema) steps of a restart, and keeping it out preserves
+    the tiny-checkpoint story (restart state stays ``(params, step)``).
+    """
+    max_dirs: int
+    min_dirs: int = 1
+    low: float = 0.5
+    high: float = 2.0
+    ema: float = 0.8
+
+    def __post_init__(self):
+        if not 1 <= self.min_dirs <= self.max_dirs:
+            raise ValueError(
+                f"need 1 <= min_dirs <= max_dirs, got "
+                f"{self.min_dirs}..{self.max_dirs}")
+        if not self.low < self.high:
+            raise ValueError(f"need low < high, got {self.low} >= "
+                             f"{self.high}")
+        if not 0.0 <= self.ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+
+    @classmethod
+    def parse(cls, spec: str, max_dirs: int) -> "BankSchedule":
+        """``"min[:low[:high[:ema]]]"`` — e.g. ``"1"``, ``"2:0.25:1.5"``.
+        ``max_dirs`` comes from the config's ``n_dirs`` (the static bank
+        size)."""
+        parts = spec.split(":")
+        if len(parts) > 4 or not parts[0]:
+            raise ValueError(f"bad bank-schedule spec {spec!r}; expected "
+                             "'min[:low[:high[:ema]]]'")
+        kw = {"max_dirs": max_dirs, "min_dirs": int(parts[0])}
+        for key, raw in zip(("low", "high", "ema"), parts[1:]):
+            kw[key] = float(raw)
+        return cls(**kw)
+
+    def init(self) -> dict:
+        """Host-side scheduler state: start at the full bank (safe until
+        the spread has been measured)."""
+        return {"rel_ema": None, "n_active": self.max_dirs}
+
+    def update(self, state: dict, g0_mean: float, g0_std: float) -> dict:
+        """One host-side transition from this step's bank statistics.
+        ``g0_std`` must be the spread over the *full* probed bank (all
+        ``max_dirs`` directions ran; more signal than the active
+        prefix)."""
+        rel = abs(g0_std) / (abs(g0_mean) + 1e-12)
+        prev = state["rel_ema"]
+        rel_ema = rel if prev is None else \
+            self.ema * prev + (1.0 - self.ema) * rel
+        n = state["n_active"]
+        if rel_ema > self.high:
+            n = min(self.max_dirs, 2 * n)
+        elif rel_ema < self.low:
+            n = max(self.min_dirs, n // 2)
+        return {"rel_ema": rel_ema, "n_active": n}
 
 
 def by_name(name: str, lr: float, total_steps: int):

@@ -18,6 +18,7 @@ Two execution modes:
 
 from __future__ import annotations
 
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -26,6 +27,49 @@ import jax.numpy as jnp
 from repro.core import rng
 
 LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
+
+#: Bank execution strategies (DESIGN.md §5).  ``unroll`` is the reference
+#: Python-loop trace; ``scan`` (chain only) folds the walk into one
+#: ``lax.scan`` body so trace/compile cost is O(1) in ``n_dirs``;
+#: ``vmap`` (fresh only) evaluates all ``2 n_dirs`` probes in one batched
+#: forward; ``map`` (fresh only) is the microbatched ``lax.map`` fallback
+#: for memory-bound configs; ``auto`` picks scan/vmap by mode.
+VECTORIZE = ("unroll", "scan", "vmap", "map", "auto")
+
+# lax.map grew ``batch_size`` (scan-of-vmap microbatching) in jax 0.4.32;
+# probe the signature once so older pins degrade to the sequential map
+# instead of a TypeError (exercised by the CI jax version matrix).
+_LAX_MAP_HAS_BATCH_SIZE = "batch_size" in inspect.signature(
+    jax.lax.map).parameters
+
+
+def _lax_map(fn, xs, batch_size: int | None = None):
+    if batch_size and _LAX_MAP_HAS_BATCH_SIZE:
+        return jax.lax.map(fn, xs, batch_size=batch_size)
+    return jax.lax.map(fn, xs)
+
+
+def _resolve_vectorize(vectorize: str, mode: str, n_dirs: int) -> str:
+    if vectorize not in VECTORIZE:
+        raise ValueError(
+            f"unknown vectorize {vectorize!r}; one of {VECTORIZE}")
+    if vectorize == "auto":
+        # n_dirs=1 has nothing to amortize: the unrolled trace IS the
+        # single-direction algorithm (and stays bit-identical to it)
+        if n_dirs == 1:
+            return "unroll"
+        return "scan" if mode == "chain" else "vmap"
+    if vectorize == "scan" and mode != "chain":
+        raise ValueError(
+            "vectorize='scan' scans the chain walk; fresh mode has no "
+            "sequential dependency — use 'vmap' or 'map'")
+    if vectorize in ("vmap", "map") and mode != "fresh":
+        raise ValueError(
+            f"vectorize={vectorize!r} needs independent probes "
+            "(mode='fresh'); the chain walk is sequential — use 'scan'")
+    if vectorize != "unroll" and n_dirs == 1:
+        return "unroll"          # bit-compat: nothing to vectorize
+    return vectorize
 
 
 def spsa_directional_grad(loss_fn: LossFn, params: Any, batch: Any,
@@ -58,7 +102,9 @@ def spsa_directional_grad(loss_fn: LossFn, params: Any, batch: Any,
 
 def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
                    seed: jax.Array, eps: float, n_dirs: int = 1,
-                   mode: str = "chain", seeds: list | None = None):
+                   mode: str = "chain", seeds: list | None = None,
+                   vectorize: str = "unroll",
+                   microbatch: int | None = None):
     """Multi-direction estimator bank: ``n_dirs`` independent SPSA probes
     per step (variance-reduced ZO a la Gautam et al.).  Returns
     ``(g0, loss_avg, params_restored)`` where ``g0`` has shape
@@ -85,12 +131,37 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
     ``seeds`` overrides the default ``rng.dir_seeds(seed, n_dirs)``
     derivation — the DP-sharded bank passes each shard's slice of
     ``fold_dir`` seeds (possibly traced, via ``rng.fold_dir_dyn``) so the
-    shard walks only its own directions.
+    shard walks only its own directions.  Explicit seeds are normalized
+    and validated by ``rng.dir_seeds`` (length, rank, integer dtype).
+
+    ``vectorize`` selects the bank executor (DESIGN.md §5):
+
+    * ``"unroll"`` (default, reference): the Python-loop trace above —
+      trace/compile cost grows linearly in ``n_dirs``;
+    * ``"scan"`` (chain): one ``lax.scan`` over ``(seed_k, seed_{k+1})``
+      pairs — O(1) trace/compile cost, same single-live-buffer walk;
+    * ``"vmap"`` (fresh): all ``2 n_dirs`` probes in one batched forward
+      — fastest per step, costs ``2 n_dirs`` batched activations;
+    * ``"map"`` (fresh): ``lax.map`` over the stacked probes, optionally
+      microbatched (``microbatch``) — O(1) compile at unrolled-like
+      memory, for memory-bound configs;
+    * ``"auto"``: ``scan`` for chain, ``vmap`` for fresh.
+
+    Every vectorized executor falls back to the unrolled trace at
+    ``n_dirs=1`` (nothing to amortize), so n_dirs=1 outputs stay
+    bit-identical to the single-direction path under every setting.
     """
-    if seeds is None:
-        seeds = rng.dir_seeds(seed, n_dirs)
-    if len(seeds) != n_dirs:
-        raise ValueError(f"got {len(seeds)} seeds for n_dirs={n_dirs}")
+    if mode not in ("chain", "fresh"):
+        raise ValueError(f"unknown spsa mode: {mode!r}")
+    seeds = rng.dir_seeds(seed, n_dirs, seeds)
+    vectorize = _resolve_vectorize(vectorize, mode, n_dirs)
+
+    if vectorize == "scan":
+        return _bank_chain_scan(loss_fn, params, batch, seeds, eps, n_dirs)
+    if vectorize in ("vmap", "map"):
+        return _bank_fresh_batched(loss_fn, params, batch, seeds, eps,
+                                   n_dirs, vectorize, microbatch)
+
     g0s, loss_avgs = [], []
     if mode == "chain":
         p = rng.tree_perturb(params, seeds[0], eps)
@@ -105,7 +176,7 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
             g0s.append((l_plus - l_minus) / (2.0 * eps))
             loss_avgs.append(0.5 * (l_plus + l_minus))
         restored = p
-    elif mode == "fresh":
+    else:
         for k in range(n_dirs):
             l_plus = loss_fn(rng.tree_perturb(params, seeds[k], eps), batch)
             l_minus = loss_fn(rng.tree_perturb(params, seeds[k], -eps),
@@ -113,12 +184,71 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
             g0s.append((l_plus - l_minus) / (2.0 * eps))
             loss_avgs.append(0.5 * (l_plus + l_minus))
         restored = params
-    else:
-        raise ValueError(f"unknown spsa mode: {mode!r}")
 
     g0 = jnp.stack(g0s).astype(jnp.float32)
     loss_avg = jnp.mean(jnp.stack(loss_avgs)).astype(jnp.float32)
     return g0, loss_avg, restored
+
+
+def _bank_chain_scan(loss_fn: LossFn, params: Any, batch: Any,
+                     seeds: list, eps: float, n_dirs: int):
+    """The chain walk as one ``lax.scan`` over direction-seed pairs.
+
+    The body is the unrolled loop's iteration verbatim, made uniform: the
+    transition is always the fused ``tree_perturb2(p, s_k, +eps, s_next,
+    w)`` with ``w = +eps`` mid-walk and ``w = 0`` on the last step (a
+    ``0 * z`` add instead of the unrolled path's single-seed restore —
+    identical to fp32 roundoff).  Trace and compile cost are O(1) in
+    ``n_dirs``; the carry is the single live parameter buffer."""
+    seeds_arr = jnp.stack(seeds)
+    next_seeds = jnp.concatenate([seeds_arr[1:], seeds_arr[-1:]])
+    last = jnp.arange(n_dirs) == n_dirs - 1
+
+    def body(p, xs):
+        s_k, s_next, is_last = xs
+        l_plus = loss_fn(p, batch)
+        p = rng.tree_perturb(p, s_k, -2.0 * eps)
+        l_minus = loss_fn(p, batch)
+        w_next = jnp.where(is_last, 0.0, eps)
+        p = rng.tree_perturb2(p, s_k, eps, s_next, w_next)
+        return p, ((l_plus - l_minus) / (2.0 * eps),
+                   0.5 * (l_plus + l_minus))
+
+    p0 = rng.tree_perturb(params, seeds_arr[0], eps)
+    restored, (g0s, loss_avgs) = jax.lax.scan(
+        body, p0, (seeds_arr, next_seeds, last))
+    g0 = g0s.astype(jnp.float32)
+    loss_avg = jnp.mean(loss_avgs).astype(jnp.float32)
+    return g0, loss_avg, restored
+
+
+def _bank_fresh_batched(loss_fn: LossFn, params: Any, batch: Any,
+                        seeds: list, eps: float, n_dirs: int,
+                        vectorize: str, microbatch: int | None):
+    """Fresh-mode probes, batched: the ``2 n_dirs`` (seed, ±eps) probes
+    are independent given theta, so they evaluate as one ``vmap``'d
+    forward (or a ``lax.map`` — sequential / microbatched — when the
+    stacked activations don't fit).  Restore is the original ``params``
+    object, bit-exact as in the unrolled fresh path."""
+    seeds_arr = jnp.stack(seeds)
+    probe_seeds = jnp.concatenate([seeds_arr, seeds_arr])
+    probe_scales = jnp.concatenate(
+        [jnp.full((n_dirs,), eps, jnp.float32),
+         jnp.full((n_dirs,), -eps, jnp.float32)])
+
+    def probe(s, scale):
+        return loss_fn(rng.tree_perturb(params, s, scale), batch)
+
+    if vectorize == "vmap":
+        losses = jax.vmap(probe)(probe_seeds, probe_scales)
+    else:
+        losses = _lax_map(lambda xs: probe(*xs),
+                          (probe_seeds, probe_scales),
+                          batch_size=microbatch)
+    l_plus, l_minus = losses[:n_dirs], losses[n_dirs:]
+    g0 = ((l_plus - l_minus) / (2.0 * eps)).astype(jnp.float32)
+    loss_avg = jnp.mean(0.5 * (l_plus + l_minus)).astype(jnp.float32)
+    return g0, loss_avg, params
 
 
 def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any) -> Any:

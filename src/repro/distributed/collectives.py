@@ -74,9 +74,12 @@ def make_dp_step(loss_fn: Callable[[Any, Any], jax.Array],
 
     batch_spec = P(axes)
     n_batches = 2 if spec.two_stream else 1
+    # a variance-adaptive bank adds the replicated n_active scalar right
+    # after step_idx (see engine.make_step / BankSchedule)
+    sched_specs = (P(),) if engine.bank_schedule_of(cfg, spec) else ()
     return _shard_map(
         local_step, mesh,
-        in_specs=(P(), P()) + (batch_spec,) * n_batches,
+        in_specs=(P(), P()) + sched_specs + (batch_spec,) * n_batches,
         out_specs=(P(), P()))
 
 
@@ -106,18 +109,33 @@ def batch_sharding(mesh: Mesh, data_axes: tuple[str, ...] = ("data",)):
 
 def collective_bytes_of_dp_step(n_params: int, dp: int,
                                 compress: bool, n_dirs: int = 1,
-                                shard_bank: bool = False) -> dict:
+                                shard_bank: bool = False,
+                                n_active: int | None = None) -> dict:
     """Napkin model of per-step DP collective bytes (used by benchmarks):
     ZO = two scalar ring all-reduces *per bank direction* (``2 n_dirs``
     fp32 scalars = ``8 n_dirs`` bytes — one scalar pair in the paper's
     ``n_dirs = 1`` case); with a sharded bank the loss psums become one
     ``n_dirs``-float all-gather of the g0 slices (+ one pmean'd loss
     metric scalar).  FO = ring all-reduce of the gradient (2 (dp-1)/dp
-    bytes-per-elem factor folded out — we report payload)."""
+    bytes-per-elem factor folded out — we report payload).
+
+    ``n_active`` models a variance-adaptive bank (BankSchedule): the
+    compiled program still moves the full static-``n_dirs`` payload —
+    masked probes run and sync like live ones — so the headline keys are
+    unchanged; the extra ``zo_bytes_active`` / ``zo_fwd_passes_active``
+    keys report the *useful* fraction of that wire/compute cost at the
+    given active count."""
     fo_bytes = n_params * (1 if compress else 4)
     zo_bytes = (4 * n_dirs + 4) if shard_bank else 8 * n_dirs
-    return {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
-            "zo_fwd_passes_per_shard":
-                (2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
-            "sgd_bytes": n_params * 4,
-            "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}
+    out = {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
+           "zo_fwd_passes_per_shard":
+               (2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
+           "sgd_bytes": n_params * 4,
+           "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}
+    if n_active is not None:
+        na = max(1, min(int(n_active), n_dirs))
+        out["n_active"] = na
+        out["zo_bytes_active"] = (4 * na + 4) if shard_bank else 8 * na
+        out["zo_fwd_passes_active"] = \
+            -(-2 * na // dp) if shard_bank else 2 * na
+    return out

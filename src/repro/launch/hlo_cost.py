@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

@@ -20,8 +20,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import re
-from typing import Any
 
 # ---- TPU v5e hardware constants (per chip) --------------------------------
 PEAK_FLOPS = 197e12          # bf16

@@ -12,14 +12,13 @@ iterations are config diffs, not code forks.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeCfg
+from repro.configs.base import ShapeCfg
 from repro.core import engine, schedules
 from repro.core.addax import AddaxConfig
 from repro.distributed import sharding as shd
@@ -47,6 +46,12 @@ class CellOptions:
     n_dirs: int = 0                    # SPSA bank size; 0 = arch default
     backend: str = ""                  # update backend: jnp | pallas |
                                        # pallas_interpret; "" = arch default
+    bank_exec: str = ""                # bank executor: unroll | scan |
+                                       # vmap | map | auto; "" = arch default
+    bank_microbatch: int = 0           # probes per lax.map microbatch
+                                       # (bank_exec="map"; 0 = sequential)
+    bank_schedule: str = ""            # variance-adaptive bank spec
+                                       # "min[:low[:high[:ema]]]"; "" = fixed
     grad_clip: float | None = None     # global-norm clip on the FO gradient
     spsa_mode: str = "chain"           # chain (paper) | fresh (ablation;
                                        # required by DP-sharded banks)
@@ -167,9 +172,13 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
     loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
     n_dirs = opts.n_dirs or getattr(bundle.arch, "n_dirs", 1)
     backend = opts.backend or getattr(bundle.arch, "backend", "jnp")
+    bank_exec = opts.bank_exec or getattr(bundle.arch, "bank_exec",
+                                          "unroll")
     acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha,
                        n_dirs=n_dirs, grad_clip=opts.grad_clip,
-                       spsa_mode=opts.spsa_mode)
+                       spsa_mode=opts.spsa_mode, bank_exec=bank_exec,
+                       bank_microbatch=opts.bank_microbatch,
+                       bank_schedule=opts.bank_schedule)
     lr_fn = schedules.constant(opts.lr)
 
     cell = plan_train_cell(bundle.arch, shape)
@@ -194,6 +203,11 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
         batch_args, batch_sh = (b0,), (b0_sh,)
     else:
         batch_args, batch_sh = (b1,), (b1_sh,)
+    # a variance-adaptive bank adds the replicated traced n_active scalar
+    # right after step_idx (engine.make_step signature contract)
+    if engine.bank_schedule_of(acfg, spec):
+        batch_args = (jax.ShapeDtypeStruct((), jnp.int32),) + batch_args
+        batch_sh = (_repl(mesh),) + batch_sh
 
     if spec.moments:
         from repro.core.adam import init_adam_state

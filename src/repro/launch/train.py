@@ -10,7 +10,6 @@ sharded step from ``repro.launch.steps``.
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ import numpy as np
 
 
 def main(argv=None):
+    from repro.core.spsa import VECTORIZE
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="tiny-100m")
     p.add_argument("--smoke", action="store_true",
@@ -35,6 +35,17 @@ def main(argv=None):
     p.add_argument("--eps", type=float, default=1e-3)
     p.add_argument("--n-dirs", type=int, default=1,
                    help="SPSA estimator-bank size (directions per step)")
+    p.add_argument("--bank-exec", default="unroll", choices=VECTORIZE,
+                   help="bank executor: unroll (reference) | scan (chain, "
+                        "O(1) compile) | vmap (fresh, one batched fwd) | "
+                        "map (fresh, sequential lax.map) | auto")
+    p.add_argument("--bank-microbatch", type=int, default=0,
+                   help="probes per lax.map microbatch for "
+                        "--bank-exec map (0 = fully sequential)")
+    p.add_argument("--bank-schedule", default="",
+                   help="variance-adaptive bank spec "
+                        "'min[:low[:high[:ema]]]' (e.g. '1:0.5:2.0'); "
+                        "max_dirs = --n-dirs; empty = fixed bank")
     p.add_argument("--backend", default="jnp",
                    choices=("jnp", "pallas", "pallas_interpret"),
                    help="update-engine backend (pallas = fused in-place "
@@ -81,7 +92,9 @@ def main(argv=None):
     acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
                        k0=args.k0, k1=args.k1, l_t=args.l_t,
                        n_dirs=args.n_dirs, grad_clip=args.grad_clip,
-                       spsa_mode=args.spsa_mode)
+                       spsa_mode=args.spsa_mode, bank_exec=args.bank_exec,
+                       bank_microbatch=args.bank_microbatch,
+                       bank_schedule=args.bank_schedule)
     opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
                           total_steps=args.steps, backend=args.backend)
     dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16

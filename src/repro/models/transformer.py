@@ -16,8 +16,6 @@ Covers the dense (granite/qwen/gemma2/deepseek/internvl2-LM), MoE
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ shardings at jit time, on the production mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Sequence
 
 import jax

@@ -14,7 +14,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any, Callable
 
 import jax
@@ -108,6 +107,12 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
         donate = (0, 1) if opt.has_state else (0,)
         step_fn = jax.jit(step_fn, donate_argnums=donate)
 
+    # variance-adaptive bank: host-side scheduler state feeding the traced
+    # n_active argument; deliberately not checkpointed (re-adapts within
+    # ~1/(1-ema) steps of a restart, keeps restart state (params, step))
+    sched = getattr(opt, "bank_schedule", None)
+    sched_state = sched.init() if sched else None
+
     preempted = False
     completed = start_step - 1          # last fully-executed step
     for step in range(start_step, cfg.total_steps):
@@ -121,6 +126,8 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
             args = (place(b0), place(b1))
         else:
             args = (place(b0 if opt.stream == "zo" else b1),)
+        if sched:
+            args = (jnp.int32(sched_state["n_active"]),) + args
         if opt.has_state:
             params, opt_state, metrics = step_fn(params, opt_state, idx,
                                                  *args)
@@ -129,6 +136,11 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
         jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
         ev = watchdog.stop(step)
         completed = step
+        if sched:
+            g0_mean, g0_std = jax.device_get(
+                (metrics["g0"], metrics["g0_std"]))
+            sched_state = sched.update(sched_state, float(g0_mean),
+                                       float(g0_std))
 
         if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
             rec = {"step": step,

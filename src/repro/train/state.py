@@ -38,6 +38,9 @@ class OptimizerSetup:
     init_state: Callable[[Any], Any] | None
     stream: str = "fo"          # one-stream optimizers: which stream
     donate: tuple[int, ...] = (0,)
+    # variance-adaptive bank (cfg.bank_schedule): the step takes a traced
+    # n_active scalar after step_idx, driven host-side by the train loop
+    bank_schedule: schedules.BankSchedule | None = None
 
 
 def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
@@ -51,7 +54,8 @@ def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
     return OptimizerSetup(
         name, step, two_stream=spec.two_stream, has_state=spec.moments,
         init_state=adam.init_adam_state if spec.moments else None,
-        stream=spec.stream)
+        stream=spec.stream,
+        bank_schedule=engine.bank_schedule_of(cfg, spec))
 
 
 OPTIMIZERS = tuple(engine.STEP_SPECS)

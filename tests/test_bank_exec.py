@@ -1,0 +1,401 @@
+"""Vectorized direction-bank execution + variance-adaptive scheduling
+(DESIGN.md §5):
+
+* **executor equivalence** — the ``scan`` (chain) and ``vmap``/``map``
+  (fresh) executors reproduce the unrolled reference: bit-exact at
+  ``n_dirs=1`` (every vectorized executor falls back to the unrolled
+  trace there), allclose at fp32/central-difference tolerances for
+  ``n_dirs>1``;
+* **chain-scan restore drift** — property test: the scanned walk's
+  arithmetic restore stays within a few ulps of theta across
+  ``n_dirs``/dtype combinations, mirroring the unrolled-path guarantee;
+* **seed normalization** — explicit seed vectors are validated in one
+  place (``rng.dir_seeds``/``normalize_seeds``): wrong length, wrong
+  rank, and float dtypes all fail loudly instead of silently truncating
+  into threefry;
+* **BankSchedule** — host-side grow/shrink dynamics, spec parsing, and
+  the engine's active-prefix masking: ``n_active == n_dirs`` is
+  bit-identical to the unscheduled step, ``n_active = m < n_dirs``
+  matches a plain ``n_dirs = m`` bank.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import engine, rng, schedules, spsa
+from repro.core.addax import AddaxConfig
+
+
+def quad_loss(params, batch):
+    p = params["w"]
+    return 0.5 * jnp.sum((batch["A"] @ p - batch["b"]) ** 2) + \
+        0.1 * jnp.sum(params["a"] ** 2)
+
+
+def _batch(n=12, d=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"A": jax.random.normal(k1, (n, d)),
+            "b": jax.random.normal(k2, (n,))}
+
+
+def _params(d=8):
+    return {"a": jnp.linspace(-0.5, 0.5, 96).reshape(8, 12),
+            "w": jnp.linspace(-1, 1, d)}
+
+
+def _tree_bitwise(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# --------------------------------------------------------------------------
+# executor equivalence vs the unrolled reference
+# --------------------------------------------------------------------------
+
+# |g0| is O(10) here and the central difference amplifies loss roundoff
+# by 1/(2 eps) = 500x, so a handful of loss ulps (~1e-6) appear as ~1e-3
+# absolute on g0 — rtol 1e-3 is the estimator's intrinsic fp32 agreement
+# (same tolerance the chain-vs-fresh drift test uses).
+G0_RTOL = 1e-3
+
+
+@pytest.mark.parametrize("n_dirs", [1, 2, 4, 8])
+def test_chain_scan_matches_unrolled(n_dirs):
+    params, batch, seed = _params(), _batch(), jnp.uint32(5)
+    gu, lu, pu = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                     n_dirs, "chain", vectorize="unroll")
+    gs, ls, ps = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                     n_dirs, "chain", vectorize="scan")
+    if n_dirs == 1:
+        # scan falls back to the unrolled trace: bit-exact
+        np.testing.assert_array_equal(np.asarray(gu), np.asarray(gs))
+        assert _tree_bitwise(pu, ps)
+        return
+    np.testing.assert_allclose(np.asarray(gu), np.asarray(gs),
+                               rtol=G0_RTOL, atol=1e-5)
+    np.testing.assert_allclose(float(lu), float(ls), rtol=1e-6)
+    for key in params:
+        np.testing.assert_allclose(np.asarray(pu[key]), np.asarray(ps[key]),
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("vectorize", ["vmap", "map"])
+@pytest.mark.parametrize("n_dirs", [1, 2, 4, 8])
+def test_fresh_batched_matches_unrolled(vectorize, n_dirs):
+    params, batch, seed = _params(), _batch(), jnp.uint32(5)
+    gu, lu, pu = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                     n_dirs, "fresh", vectorize="unroll")
+    gv, lv, pv = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                     n_dirs, "fresh", vectorize=vectorize,
+                                     microbatch=2)
+    assert pv is params          # fresh restore stays bit-exact (theta)
+    if n_dirs == 1:
+        np.testing.assert_array_equal(np.asarray(gu), np.asarray(gv))
+        return
+    np.testing.assert_allclose(np.asarray(gu), np.asarray(gv),
+                               rtol=G0_RTOL, atol=1e-5)
+    np.testing.assert_allclose(float(lu), float(lv), rtol=1e-6)
+
+
+def test_executors_jit_and_replay():
+    """Jitted vectorized banks replay bit-for-bit from (seed, step) —
+    the checkpoint/restart story is executor-independent."""
+    params, batch = _params(), _batch()
+    for mode, vec in (("chain", "scan"), ("fresh", "vmap"),
+                      ("fresh", "map")):
+        fn = jax.jit(lambda p, b, s, _v=vec, _m=mode: spsa.spsa_bank_grad(
+            quad_loss, p, b, s, 1e-3, 4, _m, vectorize=_v)[0])
+        a = fn(params, batch, rng.fold_seed(0xADDA, jnp.uint32(9)))
+        b2 = fn(params, batch, rng.fold_seed(0xADDA, jnp.uint32(9)))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b2))
+
+
+def test_auto_resolution_and_invalid_combos():
+    params, batch, seed = _params(), _batch(), jnp.uint32(5)
+    # auto == scan for chain, vmap for fresh (n_dirs > 1)
+    ga, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                   2, "chain", vectorize="auto")
+    gs, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                   2, "chain", vectorize="scan")
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(gs))
+    # auto at n_dirs=1 falls back to the unrolled single-direction path
+    g1, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                   1, "chain", vectorize="auto")
+    gu, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3,
+                                   1, "chain", vectorize="unroll")
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(gu))
+    with pytest.raises(ValueError, match="scan"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "fresh", vectorize="scan")
+    with pytest.raises(ValueError, match="fresh"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "chain", vectorize="vmap")
+    with pytest.raises(ValueError, match="fresh"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "chain", vectorize="map")
+    with pytest.raises(ValueError, match="unknown vectorize"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "chain", vectorize="pmap")
+
+
+def test_engine_threads_bank_exec():
+    """cfg.bank_exec reaches the estimator: the scan/vmap engine steps
+    track the unrolled engine step within update-level tolerance, and
+    identical cfgs replay bitwise."""
+    batch = _batch()
+    params = _params()
+    lr_fn = schedules.constant(1e-2)
+    for mode, vec in (("chain", "scan"), ("fresh", "vmap")):
+        cfg_u = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                            spsa_mode=mode, bank_exec="unroll")
+        cfg_v = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                            spsa_mode=mode, bank_exec=vec)
+        su = engine.make_step("addax", quad_loss, cfg_u, lr_fn)
+        sv = engine.make_step("addax", quad_loss, cfg_v, lr_fn)
+        pu, mu = su(params, jnp.uint32(3), batch, batch)
+        pv, mv = sv(params, jnp.uint32(3), batch, batch)
+        np.testing.assert_allclose(np.asarray(mu["g0_bank"]),
+                                   np.asarray(mv["g0_bank"]),
+                                   rtol=G0_RTOL, atol=1e-5)
+        for key in params:
+            np.testing.assert_allclose(np.asarray(pu[key]),
+                                       np.asarray(pv[key]), atol=1e-5)
+
+
+def test_engine_threads_bank_microbatch():
+    """cfg.bank_microbatch reaches the lax.map executor (the memory-bound
+    fallback's knob is drivable from config, not just the spsa API)."""
+    batch, params = _batch(), _params()
+    lr_fn = schedules.constant(1e-2)
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                      spsa_mode="fresh", bank_exec="map",
+                      bank_microbatch=2)
+    pm, mm = engine.make_step("addax", quad_loss, cfg, lr_fn)(
+        params, jnp.uint32(3), batch, batch)
+    g_ref, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch,
+                                      rng.fold_seed(0xADDA, jnp.uint32(3)),
+                                      cfg.eps, 4, "fresh",
+                                      vectorize="map", microbatch=2)
+    np.testing.assert_array_equal(np.asarray(mm["g0_bank"]),
+                                  np.asarray(g_ref))
+
+
+# --------------------------------------------------------------------------
+# chain-scan restore drift: property test across n_dirs x dtype
+# --------------------------------------------------------------------------
+
+@given(n_dirs=st.sampled_from([2, 3, 4, 8]),
+       dtype=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_chain_scan_restore_drift_ulps(n_dirs, dtype, seed):
+    """The scanned chain walk's arithmetic restore drifts from theta by
+    at most a few ulps per direction pass — the same guarantee the
+    unrolled walk carries (each of the 2 n_dirs + 1 streaming passes
+    contributes at most ~1 ulp of fp32 perturb/restore cancellation,
+    re-quantized to the leaf dtype)."""
+    dt = jnp.dtype(dtype)
+    params = {"w": jnp.linspace(-1.0, 1.0, 32).astype(dt),
+              "m": (0.1 * jnp.arange(24.0).reshape(4, 6) - 1.0).astype(dt)}
+    batch = _batch(d=32)
+
+    def loss(p, b):
+        return jnp.sum(p["w"].astype(jnp.float32) ** 2) + \
+            jnp.sum(p["m"].astype(jnp.float32) ** 2)
+
+    _, _, restored = spsa.spsa_bank_grad(
+        loss, params, batch, jnp.uint32(seed), 1e-3, n_dirs, "chain",
+        vectorize="scan")
+    budget = 4 * (n_dirs + 1)        # ulps: generous but meaningful
+    for key in params:
+        theta = np.asarray(params[key], np.float32)
+        back = np.asarray(restored[key], np.float32)
+        assert restored[key].dtype == params[key].dtype
+        # drift is perturb/restore cancellation, so its scale is the ulp
+        # of the perturbed *intermediates* (|theta| + O(eps |z|)) — at
+        # theta == 0 exactly, the relative ulp alone would be denormal
+        ulp = np.spacing(np.abs(theta) + 4 * 1e-3)
+        if dtype == "bfloat16":
+            # bf16 keeps 7 mantissa bits vs fp32's 23: ulp is 2^16 wider
+            ulp = ulp * 65536.0
+        assert np.all(np.abs(back - theta) <= budget * ulp + 1e-12), \
+            (key, np.max(np.abs(back - theta) / np.maximum(ulp, 1e-30)))
+
+
+# --------------------------------------------------------------------------
+# seed normalization (rng.dir_seeds / normalize_seeds)
+# --------------------------------------------------------------------------
+
+def test_explicit_seeds_normalized_and_equal():
+    params, batch, seed = _params(), _batch(), jnp.uint32(7)
+    derived = rng.dir_seeds(seed, 3)
+    as_ints = [int(s) for s in derived]
+    for given_seeds in (as_ints,                      # python ints
+                        tuple(as_ints),               # tuple
+                        np.asarray(as_ints, np.int64),    # wide np array
+                        jnp.asarray(as_ints, jnp.uint32)):  # device array
+        g, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed,
+                                      1e-3, 3, "fresh", seeds=given_seeds)
+        g_ref, _, _ = spsa.spsa_bank_grad(quad_loss, params, batch, seed,
+                                          1e-3, 3, "fresh")
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_ref))
+
+
+def test_seed_validation_rejects_bad_inputs():
+    params, batch, seed = _params(), _batch(), jnp.uint32(7)
+    with pytest.raises(ValueError, match="2 seeds for n_dirs=3"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 3,
+                            "fresh", seeds=[1, 2])
+    with pytest.raises(TypeError, match="integer dtype"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "fresh", seeds=np.array([1.0, 2.0]))
+    with pytest.raises(TypeError, match="integer"):
+        spsa.spsa_bank_grad(quad_loss, params, batch, seed, 1e-3, 2,
+                            "fresh", seeds=[1.5, 2.5])
+    with pytest.raises(ValueError, match="1-D"):
+        rng.normalize_seeds(np.zeros((2, 2), np.int32), 4)
+    with pytest.raises(TypeError, match="list/tuple or 1-D array"):
+        rng.normalize_seeds(7, 1)
+    with pytest.raises(ValueError, match="scalar"):
+        rng.normalize_seeds([np.zeros((3,), np.int32)], 1)
+    # a traced scalar passes through untouched (the fold_dir_dyn path)
+    out = rng.dir_seeds(jnp.uint32(1), 2,
+                        seeds=[rng.fold_dir_dyn(jnp.uint32(1), jnp.uint32(k))
+                               for k in range(2)])
+    assert all(o.dtype == jnp.uint32 for o in out)
+
+
+# --------------------------------------------------------------------------
+# BankSchedule: host dynamics + engine masking
+# --------------------------------------------------------------------------
+
+def test_bank_schedule_parse_and_validate():
+    bs = schedules.BankSchedule.parse("2:0.25:1.5:0.9", max_dirs=8)
+    assert (bs.min_dirs, bs.low, bs.high, bs.ema) == (2, 0.25, 1.5, 0.9)
+    assert schedules.BankSchedule.parse("1", max_dirs=4).high == 2.0
+    with pytest.raises(ValueError, match="min_dirs"):
+        schedules.BankSchedule(max_dirs=4, min_dirs=8)
+    with pytest.raises(ValueError, match="low < high"):
+        schedules.BankSchedule(max_dirs=4, low=2.0, high=1.0)
+    with pytest.raises(ValueError, match="bad bank-schedule"):
+        schedules.BankSchedule.parse("", max_dirs=4)
+    with pytest.raises(ValueError, match="bad bank-schedule"):
+        schedules.BankSchedule.parse("1:2:3:4:5", max_dirs=4)
+
+
+def test_bank_schedule_grow_shrink_clamp():
+    bs = schedules.BankSchedule(max_dirs=8, min_dirs=2, low=0.5, high=2.0,
+                                ema=0.0)      # ema=0: react immediately
+    st_ = bs.init()
+    assert st_["n_active"] == 8               # full bank until measured
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=0.01)
+    assert st_["n_active"] == 4               # quiet -> halve
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=0.01)
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=0.01)
+    assert st_["n_active"] == 2               # clamped at min_dirs
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["n_active"] == 4               # noisy -> double
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["n_active"] == 8               # clamped at max_dirs
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=1.0)
+    assert st_["n_active"] == 8               # hysteresis band: hold
+
+
+def test_scheduled_step_full_mask_bitwise():
+    """n_active == n_dirs reproduces the unscheduled step bit for bit
+    (the active-prefix rescale is exactly *1.0)."""
+    params, batch = _params(), _batch()
+    lr_fn = schedules.constant(1e-2)
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4)
+    cfg_s = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                        bank_schedule="1:0.5:2.0")
+    p0, m0 = engine.make_step("addax", quad_loss, cfg, lr_fn)(
+        params, jnp.uint32(3), batch, batch)
+    p1, m1 = engine.make_step("addax", quad_loss, cfg_s, lr_fn)(
+        params, jnp.uint32(3), jnp.int32(4), batch, batch)
+    assert _tree_bitwise(p0, p1)
+    np.testing.assert_array_equal(np.asarray(m0["g0_bank"]),
+                                  np.asarray(m1["g0_bank"]))
+    assert int(m1["n_active"]) == 4
+
+
+def test_scheduled_step_prefix_matches_smaller_bank():
+    """n_active = m < n_dirs equals a plain n_dirs = m bank (fresh mode:
+    probe k is independent, and the prefix seeds coincide by fold_dir's
+    construction) — masking + rescale is the same arithmetic as the
+    smaller bank's alpha/m weighting."""
+    params, batch = _params(), _batch()
+    lr_fn = schedules.constant(1e-2)
+    cfg_small = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2,
+                            spsa_mode="fresh")
+    cfg_sched = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                            spsa_mode="fresh", bank_schedule="1")
+    p_small, m_small = engine.make_step("addax", quad_loss, cfg_small,
+                                        lr_fn)(
+        params, jnp.uint32(3), batch, batch)
+    p_sched, m_sched = engine.make_step("addax", quad_loss, cfg_sched,
+                                        lr_fn)(
+        params, jnp.uint32(3), jnp.int32(2), batch, batch)
+    np.testing.assert_array_equal(
+        np.asarray(m_small["g0_bank"]),
+        np.asarray(m_sched["g0_bank"])[:2])
+    np.testing.assert_array_equal(np.asarray(m_small["g0"]),
+                                  np.asarray(m_sched["g0"]))
+    for key in params:
+        np.testing.assert_allclose(np.asarray(p_small[key]),
+                                   np.asarray(p_sched[key]),
+                                   rtol=1e-7, atol=1e-8)
+
+
+def test_scheduled_step_jits_without_recompile():
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                      bank_schedule="1:0.5:2.0")
+    step = jax.jit(engine.make_step("addax", quad_loss, cfg,
+                                    schedules.constant(1e-2)))
+    params, batch = _params(), _batch()
+    outs = {}
+    for na in (4, 2, 1, 3):
+        _, m = step(params, jnp.uint32(0), jnp.int32(na), batch, batch)
+        outs[na] = int(m["n_active"])
+    assert outs == {4: 4, 2: 2, 1: 1, 3: 3}
+    # one executable serves every n_active (traced scalar, no recompile)
+    sizes = getattr(step, "_cache_size", None)
+    if sizes is not None:
+        assert step._cache_size() == 1
+
+
+def test_schedule_drives_n_active_through_train_loop():
+    """End-to-end: build_optimizer + run_training with a bank_schedule —
+    n_active lands in the metrics history and stays within bounds."""
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    params, batch = _params(), _batch()
+
+    class Pipe:
+        def step_batches(self, step):
+            return batch, batch
+
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                      bank_schedule="1:0.05:20.0:0.5")
+    opt = build_optimizer("addax", quad_loss, cfg, total_steps=8)
+    assert opt.bank_schedule is not None
+    out = run_training(opt, params, Pipe(),
+                       TrainLoopConfig(total_steps=8, log_every=1))
+    nas = [h["n_active"] for h in out["history"] if "n_active" in h]
+    assert nas and all(1 <= na <= 4 for na in nas)
+
+
+def test_schedule_rejects_invalid_configs():
+    lr_fn = schedules.constant(1e-2)
+    with pytest.raises(ValueError, match="no ZO bank"):
+        engine.make_step("ipsgd", quad_loss,
+                         AddaxConfig(n_dirs=4, bank_schedule="1"), lr_fn)
+    with pytest.raises(ValueError, match="n_dirs > 1"):
+        engine.make_step("mezo", quad_loss,
+                         AddaxConfig(n_dirs=1, bank_schedule="1"), lr_fn)

@@ -2,8 +2,6 @@
 preemption, straggler watchdog with a fake clock."""
 
 import os
-import threading
-import time
 
 import jax
 import jax.numpy as jnp
