@@ -1,0 +1,142 @@
+"""DP moments-optimizer benchmark: the replicated-(m, v) contract's cost
+profile (DESIGN.md §6, docs/engine.md).
+
+Measures, at toy sizes on forced host devices:
+
+  * per-step wall time of the DP adam / addax-adam steps (shared bank,
+    and the sharded bank for addax-adam) against the single-host moments
+    step — CPU "devices" share cores, so the wall numbers are sanity
+    bands, not speedups; the wire/compute model columns are the
+    hardware-honest part;
+  * the wire model (``collective_bytes_of_dp_step(moments=True)``):
+    **zero** moments bytes per step — the contract recomputes (m, v)
+    identically on every shard instead of an ``8 n_params``-byte naive
+    state all-reduce — plus the ``4 dp``-byte optional checksum;
+  * the checksum tripwire live: every step's all-gathered per-shard
+    moments checksums must be uniform (a correctness gate the regression
+    runner hard-fails on).
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result
+
+
+def run(steps=10, n_dirs=4, dp=2, quick=False):
+    if quick:
+        steps, n_dirs, dp = min(steps, 4), 4, 2
+    import jax
+    import jax.numpy as jnp
+    from repro.core import engine, schedules
+    from repro.core.adam import init_adam_state
+    from repro.core.addax import AddaxConfig
+    from repro.distributed.collectives import (
+        batch_sharding, collective_bytes_of_dp_step, make_dp_step,
+        replicated)
+    from repro.launch.mesh import _mk
+    from repro.models.registry import get_bundle
+
+    mesh = _mk((dp,), ("data",))
+    bundle = get_bundle("tiny-100m", smoke=True)
+    lr_fn = schedules.constant(1e-3)
+    params = bundle.init_params(jax.random.key(0))
+    state = init_adam_state(params)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+    b0 = bundle.make_batch(0, 2 * dp, 64)
+    b1 = bundle.make_batch(1, 2 * dp, 32)
+
+    cfg_adam = AddaxConfig(lr=1e-3, alpha=0.0, eps=1e-3)
+    cfg_aa = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=n_dirs,
+                         spsa_mode="fresh")
+    variants = {
+        "adam_dp": (cfg_adam, dict(name="adam"), (b1,)),
+        "addax_adam_dp": (cfg_aa, dict(name="addax-adam"), (b0, b1)),
+        "addax_adam_dp_shard": (cfg_aa, dict(name="addax-adam",
+                                             shard_bank=True), (b0, b1)),
+    }
+
+    pd = jax.device_put(params, replicated(mesh))
+    std = jax.device_put(state, replicated(mesh))
+
+    def time_step(jstep, p, st, batches):
+        p2, st2, m = jstep(p, st, jnp.uint32(0), *batches)   # compile
+        jax.block_until_ready(jax.tree_util.tree_leaves(p2)[0])
+        t0 = time.time()
+        ck_uniform = True
+        for t in range(1, steps + 1):
+            # carry (p, st) forward: the checksum gate must hold on an
+            # evolving nonzero (m, v) trajectory, not on repeated
+            # single updates from the zero-initialized state
+            p, st, m = jstep(p, st, jnp.uint32(t), *batches)
+            jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+            if "moments_checksum" in m:
+                ck = np.asarray(m["moments_checksum"])
+                ck_uniform &= bool(np.unique(ck).size == 1)
+        return (time.time() - t0) / steps, ck_uniform
+
+    # single-host reference (the contract's other side)
+    host = jax.jit(engine.make_step("addax-adam", bundle.loss_fn(),
+                                    cfg_aa, lr_fn))
+    host_wall, _ = time_step(host, params, state, (b0, b1))
+    print(f"[dp_moments] single_host addax-adam: wall={host_wall:.4f}s",
+          flush=True)
+
+    rows = []
+    for tag, (cfg, kw, batches) in variants.items():
+        jstep = jax.jit(make_dp_step(bundle.loss_fn(), cfg, lr_fn, mesh,
+                                     check_moments=True, **kw))
+        bd = tuple(jax.device_put(bb, batch_sharding(mesh))
+                   for bb in batches)
+        wall, ck_uniform = time_step(jstep, pd, std, bd)
+        model = collective_bytes_of_dp_step(
+            n_params, dp=dp, compress=False,
+            n_dirs=(n_dirs if "addax" in tag else 1),
+            shard_bank=kw.get("shard_bank", False), moments=True,
+            check_moments=True)
+        rows.append({
+            "variant": tag, "dp": dp, "n_dirs": n_dirs,
+            "step_wall_s": round(wall, 4),
+            "wall_vs_single_host": round(wall / max(host_wall, 1e-9), 3),
+            "checksum_uniform": ck_uniform,
+            "moments_bytes": model["moments_bytes"],
+            "moments_check_bytes": model["moments_check_bytes"],
+            "moments_state_bytes_naive_allreduce":
+                model["moments_state_bytes_naive_allreduce"],
+            # adam has no ZO half — its zo columns would be meaningless
+            "zo_fwd_passes_per_shard":
+                model["zo_fwd_passes_per_shard"] if "addax" in tag else 0,
+        })
+        print(f"[dp_moments] {tag}: wall={wall:.4f}s/step "
+              f"(x{rows[-1]['wall_vs_single_host']} vs single-host) "
+              f"ck_uniform={ck_uniform} "
+              f"moments_bytes={model['moments_bytes']}", flush=True)
+
+    summary = {"dp": dp, "n_dirs": n_dirs, "steps": steps,
+               "n_params": n_params,
+               "single_host_wall_s": round(host_wall, 4), "rows": rows}
+    save_result("fig_dp_moments", summary)
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=10)
+    p.add_argument("--n-dirs", type=int, default=4)
+    p.add_argument("--dp", type=int, default=2)
+    p.add_argument("--quick", action="store_true")
+    a = p.parse_args(argv)
+    run(steps=a.steps, n_dirs=a.n_dirs, dp=a.dp, quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ import numpy as np
 from benchmarks.common import save_result
 
 
-def run(steps=20, n_dirs=4, dp=2, quick=False):
+def run(steps=20, n_dirs=4, dp=2, quick=False, optimizer="addax"):
     if quick:
         steps, n_dirs, dp = min(steps, 8), 4, 2
     import jax
@@ -52,37 +52,54 @@ def run(steps=20, n_dirs=4, dp=2, quick=False):
     b0 = bundle.make_batch(0, 2 * dp, 64)
     b1 = bundle.make_batch(1, 2 * dp, 32)
 
+    # --optimizer addax-adam exercises the sharded bank composed with
+    # the replicated-(m, v) moments contract (DESIGN.md §6): same wire
+    # model for the bank, zero extra bytes for the moments
+    moments = optimizer == "addax-adam"
     variants = {
         "replicated_bank": make_dp_step(bundle.loss_fn(), cfg, lr_fn, mesh,
-                                        name="addax", shard_bank=False),
+                                        name=optimizer, shard_bank=False),
         "sharded_bank": make_dp_step(bundle.loss_fn(), cfg, lr_fn, mesh,
-                                     name="addax", shard_bank=True),
+                                     name=optimizer, shard_bank=True),
     }
     pd = jax.device_put(params, replicated(mesh))
     bd0 = jax.device_put(b0, batch_sharding(mesh))
     bd1 = jax.device_put(b1, batch_sharding(mesh))
+    if moments:
+        from repro.core.adam import init_adam_state
+        std = jax.device_put(init_adam_state(params), replicated(mesh))
 
     rows = []
     banks = {}
     for tag, step in variants.items():
         jstep = jax.jit(step)
-        p, m = jstep(pd, jnp.uint32(0), bd0, bd1)     # compile + warm
+
+        def one(t):
+            if moments:
+                p, st, m = jstep(pd, std, jnp.uint32(t), bd0, bd1)
+            else:
+                p, m = jstep(pd, jnp.uint32(t), bd0, bd1)
+            return p, m
+
+        p, m = one(0)                                 # compile + warm
         jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
         t0 = time.time()
         for t in range(1, steps + 1):
-            p, m = jstep(pd, jnp.uint32(t), bd0, bd1)
+            p, m = one(t)
             jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
         wall = (time.time() - t0) / steps
         # n_dirs=1 emits only the scalar g0 (no g0_bank vector)
         banks[tag] = np.atleast_1d(np.asarray(m.get("g0_bank", m["g0"])))
         model = collective_bytes_of_dp_step(
             int(1e8), dp=dp, compress=False, n_dirs=n_dirs,
-            shard_bank=(tag == "sharded_bank"))
+            shard_bank=(tag == "sharded_bank"), moments=moments)
         rows.append({"variant": tag, "dp": dp, "n_dirs": n_dirs,
                      "step_wall_s": round(wall, 4),
                      "zo_fwd_passes_per_shard":
                          model["zo_fwd_passes_per_shard"],
-                     "zo_wire_bytes": model["zo_bytes"]})
+                     "zo_wire_bytes": model["zo_bytes"],
+                     **({"moments_bytes": model["moments_bytes"]}
+                        if moments else {})})
         print(f"[sharded_bank] {tag}: wall={wall:.4f}s/step "
               f"fwd/shard={model['zo_fwd_passes_per_shard']} "
               f"zo_bytes={model['zo_bytes']}", flush=True)
@@ -96,9 +113,12 @@ def run(steps=20, n_dirs=4, dp=2, quick=False):
     stats = {tag: {"g0_mean": float(np.mean(v)),
                    "g0_std": float(np.std(v))}
              for tag, v in banks.items()}
-    summary = {"dp": dp, "n_dirs": n_dirs, "steps": steps, "rows": rows,
-               "g0_stats": stats}
-    save_result("fig_sharded_bank", summary)
+    summary = {"dp": dp, "n_dirs": n_dirs, "steps": steps,
+               "optimizer": optimizer, "rows": rows, "g0_stats": stats}
+    # the committed/gated artifact is the default (addax) run — a
+    # moments run would otherwise overwrite it with different walls
+    save_result("fig_sharded_bank" if optimizer == "addax"
+                else f"fig_sharded_bank_{optimizer}", summary)
     print(f"[sharded_bank] g0 stats: {stats}")
     return summary
 
@@ -108,9 +128,14 @@ def main(argv=None):
     p.add_argument("--steps", type=int, default=20)
     p.add_argument("--n-dirs", type=int, default=4)
     p.add_argument("--dp", type=int, default=2)
+    p.add_argument("--optimizer", default="addax",
+                   choices=("addax", "addax-adam"),
+                   help="addax-adam: sharded bank + replicated-(m, v) "
+                        "moments (docs/engine.md)")
     p.add_argument("--quick", action="store_true")
     a = p.parse_args(argv)
-    run(steps=a.steps, n_dirs=a.n_dirs, dp=a.dp, quick=a.quick)
+    run(steps=a.steps, n_dirs=a.n_dirs, dp=a.dp, quick=a.quick,
+        optimizer=a.optimizer)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,16 @@ collectives spliced between the layers, including the **sharded direction
 bank** (ROADMAP): each data-parallel shard walks its own ``fold_dir``-offset
 slice of the bank and the ``g0`` vector is all-gathered, so ``n_dirs``
 effective directions cost the wall-clock of ``n_dirs / dp_shards``.
+
+The moments optimizers (``adam`` / ``addax-adam``) run under DP via the
+**replicated-(m, v) psum contract** (DESIGN.md §6, docs/engine.md): the
+combined update direction is synchronized *before* the moments update —
+``g1`` is pmean'd, the bank's ``g0`` is either pmean'd per direction
+(shared bank) or all-gathered (sharded bank) — so every shard feeds
+``apply_adam_update`` identical inputs and the deterministic, fenced
+moments arithmetic keeps (m, v, step) bitwise-replicated without ever
+being communicated.  ``check_moments=True`` all-gathers a per-shard
+moments checksum each step as a divergence tripwire.
 """
 
 from __future__ import annotations
@@ -89,7 +99,29 @@ STEP_SPECS: dict[str, StepSpec] = {
 
 def _check_backend(backend: str):
     if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS} "
+                         "(docs/engine.md lists the backend matrix)")
+
+
+def moments_checksum(state: Any) -> jax.Array:
+    """Order-independent uint32 checksum of a moments tree (fp32 leaves).
+
+    Every element of every leaf is bitcast to uint32 and summed mod 2^32,
+    so *any* single-bit divergence between two replicas changes the value
+    (collisions need bit flips that cancel mod 2^32 — vanishingly unlikely
+    for drift, which is what this guards).  Integer arithmetic: exact and
+    deterministic, unlike a float sum.  Used by the DP moments steps'
+    ``check_moments`` tripwire (DESIGN.md §6) and by the replication
+    tests."""
+    tot = jnp.uint32(0)
+    for leaf in jax.tree_util.tree_leaves(state):
+        if leaf.dtype.itemsize != 4:
+            raise ValueError(
+                f"moments_checksum expects 32-bit leaves, got {leaf.dtype} "
+                "(adam state is fp32 by construction)")
+        words = jax.lax.bitcast_convert_type(leaf, jnp.uint32)
+        tot = tot + jnp.sum(words, dtype=jnp.uint32)
+    return tot
 
 
 # --------------------------------------------------------------------------
@@ -105,7 +137,9 @@ def apply_update(params: Any, g1: Any | None, g0: jax.Array | None,
     ``"jnp"`` is ``repro.core.addax.fused_update`` verbatim; the pallas
     backends drive ``kernels/addax_update`` across the tree — one kernel
     launch per leaf, leaf ids and per-direction seeds identical to the jnp
-    path, so interpret mode reproduces it bit for bit."""
+    path, so interpret mode reproduces it bit for bit.
+
+    Raises ``ValueError`` for an unknown ``backend`` (docs/engine.md)."""
     _check_backend(backend)
     if backend == "jnp":
         return fused_update(params, g1, g0, seed, lr, alpha)
@@ -137,25 +171,41 @@ def apply_adam_update(params: Any, state: dict, g1: Any | None,
     pallas drives the moments variant of the ``addax_update`` kernel with
     (theta, m, v) all updated in place.
 
-    The inputs pass through an ``optimization_barrier`` so the moments
-    arithmetic compiles as a function of its inputs alone: without it,
-    XLA's fma contraction of ``b1·m + (1-b1)·g`` depends on what the
-    surrounding step graph fuses in, and the jnp and pallas-interpret
-    backends drift apart by 1 ulp (the backend parity contract in
-    tests/test_engine.py is bit-for-bit)."""
+    The inputs pass through an ``optimization_barrier`` AND every
+    intermediate product/sum of the jnp moments arithmetic is pinned with
+    its own barrier, so the update compiles to the same bits in any
+    surrounding program: XLA's fusion choices (fma contraction of
+    ``b1·m + (1-b1)·g``, cluster boundaries around the bias-corrected
+    step) otherwise depend on the graph around the update, and the jnp
+    backend drifts by 1 ulp between e.g. a plain ``jit`` and a
+    ``shard_map`` body.  Context-independence is what both backend
+    parity (jnp vs pallas-interpret, tests/test_engine.py) and the DP
+    replicated-(m, v) contract (single-host == shard_map at equal data,
+    DESIGN.md §6 / tests/test_dp_moments.py) are built on.
+
+    Raises ``ValueError`` for an unknown ``backend`` (docs/engine.md has
+    the full matrix)."""
     _check_backend(backend)
+    # ``seed`` is fenced with the rest: the z chains regenerated below
+    # hang off it, and an unfenced seed lets XLA CSE them with the SPSA
+    # walk's z subtrees — whose shape differs between programs (sharded
+    # vs full bank, shard_map vs jit), dragging the update's
+    # transcendental clusters into context-dependent codegen.
     if g1 is not None:
-        params, state, g1, g0, lr = jax.lax.optimization_barrier(
-            (params, state, g1, g0, lr))
+        params, state, g1, g0, seed, lr = jax.lax.optimization_barrier(
+            (params, state, g1, g0, seed, lr))
     elif g0 is not None:
-        params, state, g0, lr = jax.lax.optimization_barrier(
-            (params, state, g0, lr))
+        params, state, g0, seed, lr = jax.lax.optimization_barrier(
+            (params, state, g0, seed, lr))
     else:
         params, state, lr = jax.lax.optimization_barrier(
             (params, state, lr))
     t = (step_idx + 1).astype(jnp.float32)
-    bc1 = 1.0 - b1 ** t
-    bc2 = 1.0 - b2 ** t
+    # pinned like the per-leaf arithmetic below: the bias corrections are
+    # computed once per step, outside the per-leaf fence, and must not be
+    # refolded into whatever cluster the surrounding program builds
+    bc1, bc2 = jax.lax.optimization_barrier(
+        (1.0 - b1 ** t, 1.0 - b2 ** t))
     ids = rng.leaf_ids(params)
     with_zo = g0 is not None
     if with_zo:
@@ -166,18 +216,28 @@ def apply_adam_update(params: Any, state: dict, g1: Any | None,
     w_fo = (1.0 - alpha) if with_zo else 1.0
 
     if backend == "jnp":
+        # ``pin`` forces each product/sum to compile as a standalone op:
+        # without it XLA contracts mul+add chains into fmas (and regroups
+        # fusion clusters) differently depending on the surrounding
+        # program, so the same update would produce different bits under
+        # jit vs shard_map — breaking both backend parity and the DP
+        # replicated-(m, v) contract.  The pinned sequence matches the
+        # pallas kernel's op-for-op arithmetic.
+        pin = jax.lax.optimization_barrier
+
         def one(leaf, lid, gfo, m, v):
             g = jnp.zeros(leaf.shape, jnp.float32)
             if with_zo:
                 for k in range(n_dirs):
                     z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
-                    g = g + (w_zo * g0v[k]) * z
+                    g = pin(g + pin((w_zo * g0v[k]) * z))
             if gfo is not None:
-                g = g + w_fo * gfo.astype(jnp.float32)
-            m = b1 * m + (1 - b1) * g
-            v = b2 * v + (1 - b2) * jnp.square(g)
-            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + adam_eps)
-            return ((leaf.astype(jnp.float32) - step).astype(leaf.dtype),
+                g = pin(g + pin(w_fo * gfo.astype(jnp.float32)))
+            m = pin(pin(b1 * m) + pin((1 - b1) * g))
+            v = pin(pin(b2 * v) + pin((1 - b2) * jnp.square(g)))
+            den = pin(jnp.sqrt(pin(v / bc2)) + adam_eps)
+            step = pin(pin(lr * pin(m / bc1)) / den)
+            return (pin(leaf.astype(jnp.float32) - step).astype(leaf.dtype),
                     m, v)
     else:
         from repro.kernels.addax_update import addax_adam_update
@@ -240,6 +300,48 @@ def _fo_half(loss_fn: LossFn, params: Any, batch: Any, cfg: AddaxConfig,
     g1, metrics = _postprocess_fo(
         g1, cfg, spec, norm_metric=spec.name in ("addax", "addax-wa"))
     return loss, g1, metrics
+
+
+def _moments_fo_half(loss_fn: LossFn, params: Any, b_fo: Any,
+                     g0: jax.Array | None, lr, cfg: AddaxConfig,
+                     spec: StepSpec, axes=None, compress_fo: bool = False):
+    """Fenced backprop half shared *verbatim* by the single-host and DP
+    moments paths (``axes=None`` -> no collectives) — the load-bearing
+    piece of the replicated-(m, v) contract's single-host equivalence
+    (DESIGN.md §6).
+
+    Three ``optimization_barrier`` fences pin the region so the
+    value_and_grad cluster compiles to identical bits in a plain jit and
+    a shard_map body: (1) inputs fenced from the preceding ZO subgraph,
+    (2) backprop outputs fenced before any consumer (in the DP program
+    the consumer is a pmean; in the single-host program a metric output
+    — without this fence the differing consumer shape perturbs the
+    cluster's codegen by 1 ulp), (3) the synchronized results fenced
+    before the moments update.  Because this one function IS both paths,
+    the fences cannot drift apart."""
+    if g0 is not None:
+        params, b_fo, g0, lr = jax.lax.optimization_barrier(
+            (params, b_fo, g0, lr))
+    else:
+        params, b_fo, lr = jax.lax.optimization_barrier(
+            (params, b_fo, lr))
+    loss1, g1 = jax.value_and_grad(loss_fn)(params, b_fo)
+    loss1, g1 = jax.lax.optimization_barrier((loss1, g1))
+    if axes is not None:
+        loss1 = jax.lax.pmean(loss1, axes)
+        if compress_fo:
+            from repro.core import compression
+            g1 = compression.compress_tree(g1, axes)
+        else:
+            g1 = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, axes), g1)
+    g1, fo_m = _postprocess_fo(g1, cfg, spec, norm_metric=False)
+    if g0 is not None:
+        params, g1, g0, lr = jax.lax.optimization_barrier(
+            (params, g1, g0, lr))
+    else:
+        params, g1, lr = jax.lax.optimization_barrier((params, g1, lr))
+    return params, g0, g1, loss1, lr, fo_m
 
 
 def _bank_metrics(g0: jax.Array, n_dirs: int) -> dict:
@@ -319,7 +421,16 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     (``step(params[, state], step_idx, n_active, *batches)``) and only
     the first ``n_active`` of the ``cfg.n_dirs`` probed directions feed
     the update (active-prefix masking — changing ``n_active`` never
-    recompiles)."""
+    recompiles).
+
+    Raises (full matrix in docs/engine.md):
+
+    * ``ValueError`` — unknown optimizer ``name`` or ``backend``;
+    * ``ValueError`` (via ``bank_schedule_of``) — ``cfg.bank_schedule``
+      set for an optimizer with no ZO bank, or with ``cfg.n_dirs < 2``;
+    * ``ValueError`` (via ``spsa.spsa_bank_grad`` at trace time) — a
+      ``cfg.bank_exec`` executor incompatible with ``cfg.spsa_mode``
+      (``scan`` needs chain, ``vmap``/``map`` need fresh)."""
     spec = STEP_SPECS.get(name)
     if spec is None:
         raise ValueError(f"unknown optimizer {name!r}; "
@@ -328,7 +439,8 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
     sched = bank_schedule_of(cfg, spec)
 
-    def gradient_source(params, step_idx, batches, n_active=None):
+    def gradient_source(params, step_idx, batches, n_active=None,
+                        lr=None):
         seed = rng.fold_seed(spec.seed_base, step_idx)
         g0 = g1 = None
         metrics = {}
@@ -344,19 +456,26 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                 g0, bank_m = _mask_bank(g0, n_active, cfg.n_dirs)
                 metrics.update(bank_m)
         if spec.fo:
-            loss1, g1, fo_m = _fo_half(loss_fn, params, batches[-1], cfg,
-                                       spec)
+            if spec.moments:
+                # the fenced, collective-free instantiation of the SAME
+                # code the DP body runs — the replicated-(m, v)
+                # contract's single-host side (DESIGN.md §6)
+                params, g0, g1, loss1, lr, fo_m = _moments_fo_half(
+                    loss_fn, params, batches[-1], g0, lr, cfg, spec)
+            else:
+                loss1, g1, fo_m = _fo_half(loss_fn, params, batches[-1],
+                                           cfg, spec)
             metrics["loss_fo"] = loss1
             metrics.update(fo_m)
-        return params, g0, g1, seed, metrics
+        return params, g0, g1, seed, metrics, lr
 
     if spec.moments:
         def step(params, state, step_idx, *rest):
             n_active, batches = (rest[0], rest[1:]) if sched \
                 else (None, rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics = gradient_source(
-                params, step_idx, batches, n_active)
+            params, g0, g1, seed, metrics, lr = gradient_source(
+                params, step_idx, batches, n_active, lr)
             params, state = apply_adam_update(
                 params, state, g1, g0, seed, lr, alpha, step_idx,
                 backend=backend)
@@ -367,8 +486,8 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
             n_active, batches = (rest[0], rest[1:]) if sched \
                 else (None, rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics = gradient_source(
-                params, step_idx, batches, n_active)
+            params, g0, g1, seed, metrics, lr = gradient_source(
+                params, step_idx, batches, n_active, lr)
             params = apply_update(params, g1, g0, seed, lr, alpha,
                                   backend=backend)
             metrics["lr"] = lr
@@ -384,7 +503,8 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
 def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                        lr_fn, axes, *, dp_size: int | None = None,
                        compress_fo: bool = False,
-                       shard_bank: bool = False, backend: str = "jnp"):
+                       shard_bank: bool = False, backend: str = "jnp",
+                       check_moments: bool = False):
     """The per-shard body of the explicit-collective DP step (wrapped in
     ``shard_map`` by ``repro.distributed.collectives.make_dp_step``).
 
@@ -405,25 +525,56 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     vmaps/maps its own slice of the bank); ``cfg.bank_schedule`` adds the
     traced ``n_active`` argument exactly as in ``make_step`` — every
     shard still probes its full slice, and the *gathered* bank is masked
-    to the active global prefix, so shards stay bit-identical."""
+    to the active global prefix, so shards stay bit-identical.
+
+    **Moments optimizers** (``adam`` / ``addax-adam``) follow the
+    replicated-(m, v) psum contract (DESIGN.md §6): the step gains the
+    ``make_step`` moments signature
+    ``step(params, state, step_idx[, n_active], *batches)
+    -> (params, state, metrics)`` and every collective
+    (``g1`` pmean, ``g0`` loss-pmean or slice all-gather) runs *before*
+    ``apply_adam_update``, so each shard applies identical, fenced
+    moments arithmetic to identical inputs — (m, v, step) stay
+    bitwise-replicated with zero bytes of moments traffic.
+    ``check_moments=True`` adds a ``moments_checksum`` metric: the
+    all-gathered per-shard ``moments_checksum(state)`` vector (shape
+    ``(dp,)``) — all entries equal unless the contract is violated (the
+    train loop raises on divergence; tests assert on it).
+
+    Raises (the full optimizer x backend x DP matrix, including every
+    condition below, is tabulated in docs/engine.md):
+
+    * ``ValueError`` — unknown ``name`` or ``backend``;
+    * ``ValueError`` — ``check_moments=True`` for a stateless optimizer;
+    * ``ValueError`` — ``shard_bank=True`` with no ZO bank (``ipsgd`` /
+      ``sgd`` / ``adam``), with ``spsa_mode != "fresh"``, or with
+      ``cfg.n_dirs`` not divisible by ``dp_size``;
+    * ``NotImplementedError`` — ``shard_bank=True`` over multiple data
+      axes;
+    * ``ValueError`` (via ``bank_schedule_of``) — ``cfg.bank_schedule``
+      set for an optimizer with no ZO bank or with ``n_dirs < 2``."""
     spec = STEP_SPECS.get(name)
     if spec is None:
-        raise ValueError(f"unknown optimizer {name!r}")
-    if spec.moments:
-        raise NotImplementedError(
-            "DP moments optimizers not supported yet (replicated Adam "
-            "state would need its own psum contract)")
+        raise ValueError(f"unknown optimizer {name!r}; one of "
+                         f"{tuple(STEP_SPECS)} (see docs/engine.md)")
     _check_backend(backend)
+    if check_moments and not spec.moments:
+        raise ValueError(
+            f"check_moments=True needs a moments optimizer (adam / "
+            f"addax-adam), got {name!r} — stateless steps have no (m, v) "
+            "to checksum (see docs/engine.md)")
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
     sched = bank_schedule_of(cfg, spec)
 
     if shard_bank:
         if not spec.zo:
-            raise ValueError(f"{name!r} has no ZO bank to shard")
+            raise ValueError(f"{name!r} has no ZO bank to shard "
+                             "(see docs/engine.md)")
         if cfg.spsa_mode != "fresh":
             raise ValueError(
                 "sharded direction banks require spsa_mode='fresh' "
-                "(chain mode serializes the bank on one buffer)")
+                "(chain mode serializes the bank on one buffer; see "
+                "docs/engine.md)")
         if isinstance(axes, (tuple, list)) and len(axes) > 1:
             raise NotImplementedError(
                 "sharded banks over multiple data axes")
@@ -434,10 +585,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
         n_local = cfg.n_dirs // dp_size
         gather_axis = axes[0] if isinstance(axes, (tuple, list)) else axes
 
-    def local_step(params, step_idx, *rest):
-        n_active, batches = (rest[0], rest[1:]) if sched else (None, rest)
+    def gradient_source(params, step_idx, n_active, batches, lr):
         seed = rng.fold_seed(spec.seed_base, step_idx)
-        lr = lr_fn(step_idx)
         g0 = g1 = None
         metrics = {}
 
@@ -476,40 +625,80 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                 metrics.update(bank_m)
 
         if spec.fo:
-            from repro.core import compression
-            b1 = batches[-1]
-            # optimization_barriers isolate the backprop + update region
-            # from whatever ZO subgraph preceded it, so the sharded-bank
-            # and replicated-bank programs compile this region to
-            # identical bits (without them XLA's cross-region fusion
-            # makes the two variants drift by 1 ulp — the sharded-bank
-            # equivalence contract in tests/test_engine.py is bitwise)
-            if g0 is not None:
-                params, b1, g0, lr = jax.lax.optimization_barrier(
-                    (params, b1, g0, lr))
+            if spec.moments:
+                # the SAME fenced code object as the single-host moments
+                # path, with the collectives switched on — what makes
+                # the replicated-(m, v) contract's single-host
+                # equivalence bitwise rather than 1-ulp (DESIGN.md §6)
+                params, g0, g1, loss1, lr, fo_m = _moments_fo_half(
+                    loss_fn, params, batches[-1], g0, lr, cfg, spec,
+                    axes=axes, compress_fo=compress_fo)
+                metrics["loss_fo"] = loss1
+                metrics.update(fo_m)
             else:
-                params, b1, lr = jax.lax.optimization_barrier(
-                    (params, b1, lr))
-            loss1, g1 = jax.value_and_grad(loss_fn)(params, b1)
-            loss1 = jax.lax.pmean(loss1, axes)
-            if compress_fo:
-                g1 = compression.compress_tree(g1, axes)
-            else:
-                g1 = jax.tree_util.tree_map(
-                    lambda g: jax.lax.pmean(g, axes), g1)
-            metrics["loss_fo"] = loss1
-            g1, fo_m = _postprocess_fo(g1, cfg, spec, norm_metric=False)
-            metrics.update(fo_m)
-            if g0 is not None:
-                params, g1, g0, lr = jax.lax.optimization_barrier(
-                    (params, g1, g0, lr))
-            else:
-                params, g1, lr = jax.lax.optimization_barrier(
-                    (params, g1, lr))
+                from repro.core import compression
+                b1 = batches[-1]
+                # optimization_barriers isolate the backprop + update
+                # region from whatever ZO subgraph preceded it, so the
+                # sharded-bank and replicated-bank programs compile this
+                # region to identical bits (without them XLA's
+                # cross-region fusion makes the two variants drift by
+                # 1 ulp — the sharded-bank equivalence contract in
+                # tests/test_engine.py is bitwise)
+                if g0 is not None:
+                    params, b1, g0, lr = jax.lax.optimization_barrier(
+                        (params, b1, g0, lr))
+                else:
+                    params, b1, lr = jax.lax.optimization_barrier(
+                        (params, b1, lr))
+                loss1, g1 = jax.value_and_grad(loss_fn)(params, b1)
+                loss1 = jax.lax.pmean(loss1, axes)
+                if compress_fo:
+                    g1 = compression.compress_tree(g1, axes)
+                else:
+                    g1 = jax.tree_util.tree_map(
+                        lambda g: jax.lax.pmean(g, axes), g1)
+                metrics["loss_fo"] = loss1
+                g1, fo_m = _postprocess_fo(g1, cfg, spec,
+                                           norm_metric=False)
+                metrics.update(fo_m)
+                if g0 is not None:
+                    params, g1, g0, lr = jax.lax.optimization_barrier(
+                        (params, g1, g0, lr))
+                else:
+                    params, g1, lr = jax.lax.optimization_barrier(
+                        (params, g1, lr))
 
-        params = apply_update(params, g1, g0, seed, lr, alpha,
-                              backend=backend)
-        metrics["lr"] = lr
-        return params, metrics
+        return params, g0, g1, seed, metrics, lr
+
+    if spec.moments:
+        def local_step(params, state, step_idx, *rest):
+            n_active, batches = (rest[0], rest[1:]) if sched \
+                else (None, rest)
+            lr = lr_fn(step_idx)
+            params, g0, g1, seed, metrics, lr = gradient_source(
+                params, step_idx, n_active, batches, lr)
+            # the replicated-(m, v) contract: g0/g1 were synchronized
+            # above, so this fenced, deterministic update is identical on
+            # every shard — no moments collective needed (DESIGN.md §6)
+            params, state = apply_adam_update(
+                params, state, g1, g0, seed, lr, alpha, step_idx,
+                backend=backend)
+            if check_moments:
+                metrics["moments_checksum"] = jax.lax.all_gather(
+                    moments_checksum(state), axes)
+            metrics["lr"] = lr
+            return params, state, metrics
+    else:
+        def local_step(params, step_idx, *rest):
+            n_active, batches = (rest[0], rest[1:]) if sched \
+                else (None, rest)
+            lr = lr_fn(step_idx)
+            params, g0, g1, seed, metrics, lr = gradient_source(
+                params, step_idx, n_active, batches, lr)
+            params = apply_update(params, g1, g0, seed, lr, alpha,
+                                  backend=backend)
+            metrics["lr"] = lr
+            return params, metrics
 
     return local_step

@@ -61,6 +61,14 @@ class BankSchedule:
     Scheduler state is deliberately NOT checkpointed: it re-adapts
     within ~1/(1-ema) steps of a restart, and keeping it out preserves
     the tiny-checkpoint story (restart state stays ``(params, step)``).
+
+    Raises ``ValueError`` on construction (or from ``parse``) when
+    ``1 <= min_dirs <= max_dirs`` is violated, ``low >= high`` (no
+    hysteresis band), or ``ema`` falls outside ``[0, 1)`` — and, where
+    a schedule is attached to an optimizer,
+    ``engine.bank_schedule_of`` rejects optimizers with no ZO bank and
+    banks with ``n_dirs < 2`` (the composition matrix and every
+    raise-condition live in docs/engine.md).
     """
     max_dirs: int
     min_dirs: int = 1

@@ -26,6 +26,15 @@ with ``4 n_dirs`` gather bytes replacing the ``8 n_dirs`` loss psums.
 
 Parameters are replicated across the DP axis (Addax holds no optimizer
 state, so this is the paper's memory model, scaled out).
+
+The moments optimizers (``adam`` / ``addax-adam``) ride the same wire
+under the **replicated-(m, v) psum contract** (DESIGN.md §6,
+docs/engine.md): the mixed update direction is synchronized before the
+moments update, every shard then applies identical fenced Adam
+arithmetic, and (m, v, step) stay bitwise-replicated at zero moments
+bytes on the wire.  ``check_moments=True`` all-gathers a per-shard
+uint32 moments checksum each step (``4 dp`` bytes) as a divergence
+tripwire.
 """
 
 from __future__ import annotations
@@ -54,15 +63,30 @@ def make_dp_step(loss_fn: Callable[[Any, Any], jax.Array],
                  name: str = "addax",
                  data_axes: tuple[str, ...] = ("data",),
                  compress_fo: bool = False, shard_bank: bool = False,
-                 backend: str = "jnp"):
-    """Build a shard_map DP step for any stateless engine optimizer
-    (``addax | addax-wa | mezo | ipsgd | sgd``).
+                 backend: str = "jnp", check_moments: bool = False):
+    """Build a shard_map DP step for any engine optimizer
+    (``addax | addax-wa | mezo | ipsgd | sgd | adam | addax-adam``).
 
     Batches are globally-batched; their leading axis is sharded over
-    ``data_axes``.  Params are replicated.  Returns
-    ``step(params, step_idx, *batches) -> (params, metrics)`` with the
-    engine's batch arity for ``name`` (two streams for addax, one
-    otherwise)."""
+    ``data_axes``.  Params — and, for the moments optimizers, the
+    ``{"m", "v"}`` state — are replicated.  Returns a step with the
+    engine's signature for ``name`` (docs/engine.md):
+
+      stateless:  ``step(params, step_idx, *batches) -> (params, metrics)``
+      moments:    ``step(params, state, step_idx, *batches)
+                    -> (params, state, metrics)``
+
+    with the engine's batch arity (two streams for addax/addax-adam, one
+    otherwise) and, under a non-empty ``cfg.bank_schedule``, the traced
+    ``n_active`` scalar right after ``step_idx``.
+
+    The moments variants keep (m, v) bitwise-replicated by construction
+    (replicated-(m, v) contract, DESIGN.md §6); ``check_moments=True``
+    adds the all-gathered ``moments_checksum`` metric as a runtime
+    tripwire (the train loop raises on divergence).
+
+    Raise conditions are those of ``engine.make_dp_local_step`` — the
+    full matrix lives in docs/engine.md."""
     axes = data_axes if len(data_axes) > 1 else data_axes[0]
     dp = 1
     for a in data_axes:
@@ -70,17 +94,22 @@ def make_dp_step(loss_fn: Callable[[Any, Any], jax.Array],
     spec = engine.STEP_SPECS[name]
     local_step = engine.make_dp_local_step(
         name, loss_fn, cfg, lr_fn, axes, dp_size=dp,
-        compress_fo=compress_fo, shard_bank=shard_bank, backend=backend)
+        compress_fo=compress_fo, shard_bank=shard_bank, backend=backend,
+        check_moments=check_moments)
 
     batch_spec = P(axes)
     n_batches = 2 if spec.two_stream else 1
     # a variance-adaptive bank adds the replicated n_active scalar right
     # after step_idx (see engine.make_step / BankSchedule)
     sched_specs = (P(),) if engine.bank_schedule_of(cfg, spec) else ()
+    # moments state rides replicated between params and step_idx, and
+    # comes back replicated — the contract the engine body maintains
+    state_specs = (P(),) if spec.moments else ()
     return _shard_map(
         local_step, mesh,
-        in_specs=(P(), P()) + sched_specs + (batch_spec,) * n_batches,
-        out_specs=(P(), P()))
+        in_specs=(P(),) + state_specs + (P(),) + sched_specs +
+                 (batch_spec,) * n_batches,
+        out_specs=(P(),) + state_specs + (P(),))
 
 
 def make_dp_addax_step(loss_fn: Callable[[Any, Any], jax.Array],
@@ -110,7 +139,9 @@ def batch_sharding(mesh: Mesh, data_axes: tuple[str, ...] = ("data",)):
 def collective_bytes_of_dp_step(n_params: int, dp: int,
                                 compress: bool, n_dirs: int = 1,
                                 shard_bank: bool = False,
-                                n_active: int | None = None) -> dict:
+                                n_active: int | None = None,
+                                moments: bool = False,
+                                check_moments: bool = False) -> dict:
     """Napkin model of per-step DP collective bytes (used by benchmarks):
     ZO = two scalar ring all-reduces *per bank direction* (``2 n_dirs``
     fp32 scalars = ``8 n_dirs`` bytes — one scalar pair in the paper's
@@ -124,7 +155,16 @@ def collective_bytes_of_dp_step(n_params: int, dp: int,
     masked probes run and sync like live ones — so the headline keys are
     unchanged; the extra ``zo_bytes_active`` / ``zo_fwd_passes_active``
     keys report the *useful* fraction of that wire/compute cost at the
-    given active count."""
+    given active count.
+
+    ``moments`` models the replicated-(m, v) contract (DESIGN.md §6):
+    the moments update adds **zero** wire bytes — (m, v) are recomputed
+    identically on every shard, never communicated — so
+    ``moments_bytes = 0`` is a statement of the contract, not an
+    omission (a naive replicated-Adam would all-reduce ``8 n_params``
+    bytes of state or trust nondeterminism).  ``check_moments`` adds the
+    optional tripwire's cost: one uint32 checksum all-gather,
+    ``4 dp`` bytes."""
     fo_bytes = n_params * (1 if compress else 4)
     zo_bytes = (4 * n_dirs + 4) if shard_bank else 8 * n_dirs
     out = {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
@@ -132,6 +172,11 @@ def collective_bytes_of_dp_step(n_params: int, dp: int,
                (2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
            "sgd_bytes": n_params * 4,
            "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}
+    if moments:
+        out["moments_bytes"] = 0
+        out["moments_state_bytes_naive_allreduce"] = 8 * n_params
+        if check_moments:
+            out["moments_check_bytes"] = 4 * dp
     if n_active is not None:
         na = max(1, min(int(n_active), n_dirs))
         out["n_active"] = na

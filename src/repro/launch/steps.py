@@ -28,7 +28,14 @@ from repro.models.registry import Bundle, plan_train_cell
 
 @dataclasses.dataclass(frozen=True)
 class CellOptions:
-    """§Perf knobs.  Defaults = paper-faithful baseline."""
+    """§Perf knobs.  Defaults = paper-faithful baseline.
+
+    ``optimizer``/``backend``/``bank_exec``/``bank_schedule``/
+    ``grad_clip``/``spsa_mode`` select an engine step exactly as in
+    ``engine.make_step`` — docs/engine.md tabulates which combinations
+    compose (all seven optimizers, including the moments family whose
+    (m, v) state ``_plan_train`` shards alongside the params) and which
+    raise."""
     param_dtype: Any = jnp.bfloat16
     moe_parallelism: str = "tp"        # tp | ep
     shard_cache_seq: bool = True

@@ -56,6 +56,20 @@ def main(argv=None):
                    choices=("chain", "fresh"),
                    help="SPSA walk: chain (paper, single live buffer) | "
                         "fresh (bit-exact restore; ablation)")
+    p.add_argument("--dp", type=int, default=0,
+                   help="data-parallel shards: run the explicit-collective "
+                        "shard_map step over a (dp,) mesh (0 = single-"
+                        "process step; needs >= dp local devices, e.g. "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count"
+                        "=N on CPU).  Moments optimizers run under the "
+                        "replicated-(m, v) contract (docs/engine.md)")
+    p.add_argument("--shard-bank", action="store_true",
+                   help="with --dp: slice the SPSA bank across shards "
+                        "(requires --spsa-mode fresh and n-dirs %% dp == 0)")
+    p.add_argument("--check-moments", action="store_true",
+                   help="with --dp and adam/addax-adam: all-gather a "
+                        "per-shard moments checksum each step; the loop "
+                        "aborts if (m, v) replication ever diverges")
     p.add_argument("--task", default="markov",
                    choices=("markov", "copy", "classify"))
     p.add_argument("--profile", default="multirc",
@@ -95,14 +109,50 @@ def main(argv=None):
                        spsa_mode=args.spsa_mode, bank_exec=args.bank_exec,
                        bank_microbatch=args.bank_microbatch,
                        bank_schedule=args.bank_schedule)
-    opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
-                          total_steps=args.steps, backend=args.backend)
     dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16
     params = bundle.init_params(jax.random.key(args.seed), dtype)
-    opt_state = opt.init_state(params) if opt.has_state else None
 
-    def place(b):
-        return jax.tree_util.tree_map(jnp.asarray, b)
+    if args.dp:
+        from repro.distributed.collectives import (batch_sharding,
+                                                   replicated)
+        from repro.launch.mesh import _mk
+        from repro.train.state import build_dp_optimizer
+        n_dev = len(jax.devices())
+        if n_dev < args.dp:
+            raise SystemExit(
+                f"--dp {args.dp} needs {args.dp} devices, found {n_dev} "
+                "(on CPU set XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={args.dp})")
+        if args.k0 % args.dp or args.k1 % args.dp:
+            raise SystemExit(
+                f"batch sizes k0={args.k0}, k1={args.k1} must divide "
+                f"evenly over --dp {args.dp} shards")
+        mesh = _mk((args.dp,), ("data",))
+        opt = build_dp_optimizer(args.optimizer, bundle.loss_fn(), acfg,
+                                 mesh, total_steps=args.steps,
+                                 backend=args.backend,
+                                 shard_bank=args.shard_bank,
+                                 check_moments=args.check_moments)
+        params = jax.device_put(params, replicated(mesh))
+        opt_state = opt.init_state(params) if opt.has_state else None
+        if opt_state is not None:
+            opt_state = jax.device_put(opt_state, replicated(mesh))
+        b_shard = batch_sharding(mesh)
+        print(f"[dp] {args.dp} shards, shard_bank={args.shard_bank}, "
+              f"check_moments={args.check_moments}")
+
+        def place(b):
+            return jax.device_put(
+                jax.tree_util.tree_map(jnp.asarray, b), b_shard)
+    else:
+        if args.shard_bank or args.check_moments:
+            raise SystemExit("--shard-bank/--check-moments require --dp")
+        opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
+                              total_steps=args.steps, backend=args.backend)
+        opt_state = opt.init_state(params) if opt.has_state else None
+
+        def place(b):
+            return jax.tree_util.tree_map(jnp.asarray, b)
 
     out = run_training(
         opt, params, pipe,

@@ -142,6 +142,22 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
             sched_state = sched.update(sched_state, float(g0_mean),
                                        float(g0_std))
 
+        # DP moments tripwire (check_moments): the all-gathered
+        # per-shard checksums must be identical — divergence means the
+        # replicated-(m, v) contract broke (DESIGN.md §6) and
+        # continuing would silently train dp different models.  Checked
+        # every step (it is a dp-sized uint32 vector and the loop
+        # already blocks on the step), so a diverged state can never
+        # reach a checkpoint.
+        if "moments_checksum" in metrics:
+            ck = np.asarray(jax.device_get(
+                metrics["moments_checksum"])).ravel()
+            if np.unique(ck).size > 1:
+                raise RuntimeError(
+                    f"replicated-(m, v) contract violated at step "
+                    f"{step}: per-shard moments checksums "
+                    f"{ck.tolist()} diverged (DESIGN.md §6, "
+                    "docs/engine.md)")
         if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
             rec = {"step": step,
                    **{k: _to_host_metric(v) for k, v in metrics.items()}}

@@ -48,9 +48,48 @@ def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
                     backend: str = "jnp") -> OptimizerSetup:
     spec = engine.STEP_SPECS.get(name)
     if spec is None:
-        raise ValueError(f"unknown optimizer {name!r}")
+        raise ValueError(f"unknown optimizer {name!r}; one of "
+                         f"{tuple(engine.STEP_SPECS)} (see docs/engine.md)")
     lr_fn = schedules.by_name(cfg.schedule, cfg.lr, total_steps)
     step = engine.make_step(name, loss_fn, cfg, lr_fn, backend=backend)
+    return OptimizerSetup(
+        name, step, two_stream=spec.two_stream, has_state=spec.moments,
+        init_state=adam.init_adam_state if spec.moments else None,
+        stream=spec.stream,
+        bank_schedule=engine.bank_schedule_of(cfg, spec))
+
+
+def build_dp_optimizer(name: str, loss_fn: Callable,
+                       cfg: addax.AddaxConfig, mesh,
+                       total_steps: int = 1000, backend: str = "jnp",
+                       data_axes: tuple = ("data",),
+                       shard_bank: bool = False,
+                       compress_fo: bool = False,
+                       check_moments: bool = False) -> OptimizerSetup:
+    """Explicit-collective DP analogue of ``build_optimizer``: the step is
+    the ``shard_map`` step from ``distributed.collectives.make_dp_step``,
+    with the same ``OptimizerSetup`` surface so ``train.loop.run_training``
+    drives it unchanged (batches must be placed with
+    ``collectives.batch_sharding``; params and moments state replicated).
+
+    Moments optimizers (adam / addax-adam) run under the
+    replicated-(m, v) contract — (m, v) are bitwise-replicated across
+    shards and checkpointed exactly like the single-host state (they are
+    the same values on every shard).  ``check_moments=True`` adds the
+    per-step checksum tripwire; the train loop raises on divergence.
+
+    Raise conditions are those of ``engine.make_dp_local_step`` (the
+    optimizer x backend x DP matrix lives in docs/engine.md)."""
+    from repro.distributed import collectives
+    spec = engine.STEP_SPECS.get(name)
+    if spec is None:
+        raise ValueError(f"unknown optimizer {name!r}; one of "
+                         f"{tuple(engine.STEP_SPECS)} (see docs/engine.md)")
+    lr_fn = schedules.by_name(cfg.schedule, cfg.lr, total_steps)
+    step = collectives.make_dp_step(
+        loss_fn, cfg, lr_fn, mesh, name=name, data_axes=data_axes,
+        compress_fo=compress_fo, shard_bank=shard_bank, backend=backend,
+        check_moments=check_moments)
     return OptimizerSetup(
         name, step, two_stream=spec.two_stream, has_state=spec.moments,
         init_state=adam.init_adam_state if spec.moments else None,

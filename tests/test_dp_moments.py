@@ -1,0 +1,653 @@
+"""DP-sharded moments optimizers: the replicated-(m, v) psum contract
+(DESIGN.md §6, docs/engine.md).
+
+The contract, as enforced here:
+
+* **replication** — after any number of DP steps the (m, v) trees are
+  bitwise-identical on every shard, with zero moments bytes on the wire
+  (``moments_checksum`` all-gather tripwire + a stacked-out_specs test
+  that compares the shards' raw state slices);
+* **single-host equivalence at equal data** — ``adam`` (pure-FO
+  moments): params AND (m, v) bitwise vs ``engine.make_step`` for
+  dp ∈ {1, 2, 4} across >= 10 steps; ``addax-adam``: single-step updated
+  params bitwise, (m, v) inside a measured few-ulp envelope (the ZO
+  z-regeneration's Box-Muller clusters are cloned by XLA's fusion pass
+  with context-dependent codegen — barriers are expanded before fusion —
+  see DESIGN.md §6 for the full story);
+* **DP-family agreement** — shared-bank and sharded-bank steps at
+  dp ∈ {1, 2, 4} agree with each other bitwise on the g0 bank and the
+  first updated params, and inside the measured ulp envelope on 10-step
+  trajectories (module-dependent codegen of the cloned z chains bounds
+  what can be claimed bitwise across *different* compiled programs);
+* **edges** — moments x ``bank_exec`` executors, moments +
+  ``BankSchedule`` active-prefix masking, ``grad_clip`` under DP, the
+  jnp vs pallas-interpret backend inside the DP program, and every
+  rejected configuration of ``make_dp_local_step``.
+
+dp > 1 cases run in subprocesses with forced host devices (slow tier);
+dp = 1 cases run in-process on the default single CPU device.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, schedules
+from repro.core.adam import init_adam_state
+from repro.core.addax import AddaxConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def quad_loss(params, batch):
+    p = params["w"]
+    return 0.5 * jnp.sum((batch["A"] @ p - batch["b"]) ** 2) + \
+        0.1 * jnp.sum(params["a"] ** 2)
+
+
+def _batch(n=12, d=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"A": jax.random.normal(k1, (n, d)),
+            "b": jax.random.normal(k2, (n,))}
+
+
+def _params(d=8):
+    return {"a": jnp.linspace(-0.5, 0.5, 96).reshape(8, 12),
+            "w": jnp.linspace(-1, 1, d)}
+
+
+def _tree_bitwise(a, b):
+    """Bit-level equality (catches signed-zero differences too)."""
+    return all(
+        np.array_equal(np.asarray(x).view(np.uint32),
+                       np.asarray(y).view(np.uint32))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)))
+
+
+def _dp1_mesh():
+    from repro.launch.mesh import _mk
+    return _mk((1,), ("data",))
+
+
+# --------------------------------------------------------------------------
+# rejected configurations (the docs/engine.md raise-condition table)
+# --------------------------------------------------------------------------
+
+def test_check_moments_rejects_stateless():
+    cfg = AddaxConfig(n_dirs=2, spsa_mode="fresh")
+    with pytest.raises(ValueError, match="moments optimizer"):
+        engine.make_dp_local_step("addax", quad_loss, cfg,
+                                  schedules.constant(1e-3), "data",
+                                  dp_size=2, check_moments=True)
+
+
+def test_moments_shard_bank_rejections():
+    # adam has no ZO bank to shard
+    with pytest.raises(ValueError, match="no ZO bank"):
+        engine.make_dp_local_step(
+            "adam", quad_loss, AddaxConfig(n_dirs=4, spsa_mode="fresh"),
+            schedules.constant(1e-3), "data", dp_size=2, shard_bank=True)
+    # sharded banks need fresh mode, for moments exactly as for stateless
+    with pytest.raises(ValueError, match="fresh"):
+        engine.make_dp_local_step(
+            "addax-adam", quad_loss,
+            AddaxConfig(n_dirs=4, spsa_mode="chain"),
+            schedules.constant(1e-3), "data", dp_size=2, shard_bank=True)
+    with pytest.raises(ValueError, match="divide evenly"):
+        engine.make_dp_local_step(
+            "addax-adam", quad_loss,
+            AddaxConfig(n_dirs=3, spsa_mode="fresh"),
+            schedules.constant(1e-3), "data", dp_size=2, shard_bank=True)
+
+
+def test_error_messages_point_at_docs():
+    """Rejected optimizer/backend combos cite docs/engine.md (the
+    docstring-pass satellite's contract)."""
+    with pytest.raises(ValueError, match="docs/engine.md"):
+        engine.make_dp_local_step("nope", quad_loss, AddaxConfig(),
+                                  schedules.constant(1e-3), "data")
+    with pytest.raises(ValueError, match="docs/engine.md"):
+        engine.make_step("adam", quad_loss, AddaxConfig(),
+                         schedules.constant(1e-3), backend="nope")
+    with pytest.raises(ValueError, match="docs/engine.md"):
+        engine.make_dp_local_step(
+            "adam", quad_loss, AddaxConfig(n_dirs=4, spsa_mode="fresh"),
+            schedules.constant(1e-3), "data", dp_size=2, shard_bank=True)
+
+
+# --------------------------------------------------------------------------
+# moments checksum
+# --------------------------------------------------------------------------
+
+def test_moments_checksum_deterministic_and_bit_sensitive():
+    state = init_adam_state(_params())
+    state["m"]["w"] = jnp.linspace(-1, 1, 8)
+    a = int(jax.jit(engine.moments_checksum)(state))
+    b = int(jax.jit(engine.moments_checksum)(state))
+    assert a == b
+    # a single flipped mantissa bit changes the checksum
+    bits = np.asarray(state["m"]["w"]).view(np.uint32).copy()
+    bits[3] ^= 1
+    state2 = jax.tree_util.tree_map(lambda x: x, state)
+    state2["m"]["w"] = jnp.asarray(bits).view(jnp.float32)
+    assert int(jax.jit(engine.moments_checksum)(state2)) != a
+
+
+def test_moments_checksum_rejects_non_32bit():
+    with pytest.raises(ValueError, match="32-bit"):
+        engine.moments_checksum({"m": jnp.zeros((3,), jnp.bfloat16)})
+
+
+# --------------------------------------------------------------------------
+# wire model
+# --------------------------------------------------------------------------
+
+def test_collective_bytes_moments_model():
+    from repro.distributed.collectives import collective_bytes_of_dp_step
+    out = collective_bytes_of_dp_step(int(1e6), dp=4, compress=False,
+                                      n_dirs=4, moments=True,
+                                      check_moments=True)
+    # the contract: zero moments bytes on the wire (vs 8 n_params for a
+    # naive state all-reduce), 4 dp bytes for the optional checksum
+    assert out["moments_bytes"] == 0
+    assert out["moments_state_bytes_naive_allreduce"] == 8 * int(1e6)
+    assert out["moments_check_bytes"] == 16
+    no_check = collective_bytes_of_dp_step(int(1e6), dp=4, compress=False,
+                                           n_dirs=4, moments=True)
+    assert "moments_check_bytes" not in no_check
+    stateless = collective_bytes_of_dp_step(int(1e6), dp=4, compress=False,
+                                            n_dirs=4)
+    assert "moments_bytes" not in stateless
+
+
+# --------------------------------------------------------------------------
+# dp=1 (single device, in-process): single-host equivalence + edges
+# --------------------------------------------------------------------------
+
+def _dp1_setup(name, cfg, seed_idx=3):
+    from repro.distributed.collectives import (batch_sharding, make_dp_step,
+                                               replicated)
+    mesh = _dp1_mesh()
+    lr_fn = schedules.constant(cfg.lr)
+    params, state = _params(), init_adam_state(_params())
+    spec = engine.STEP_SPECS[name]
+    batches = (_batch(seed=1), _batch(seed=2)) if spec.two_stream \
+        else (_batch(seed=2),)
+    host = jax.jit(engine.make_step(name, quad_loss, cfg, lr_fn))
+    dp_step = make_dp_step(quad_loss, cfg, lr_fn, mesh, name=name,
+                           check_moments=True)
+    pd = jax.device_put(params, replicated(mesh))
+    std = jax.device_put(state, replicated(mesh))
+    bd = tuple(jax.device_put(b, batch_sharding(mesh)) for b in batches)
+    return host, jax.jit(dp_step), (params, state, batches), (pd, std, bd)
+
+
+def test_dp1_adam_bitwise_vs_single_host():
+    cfg = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3)
+    host, dp, (p, st, bs), (pd, std, bd) = _dp1_setup("adam", cfg)
+    ph, sth, mh = host(p, st, jnp.uint32(3), *bs)
+    pdp, stdp, mdp = dp(pd, std, jnp.uint32(3), *bd)
+    assert _tree_bitwise(ph, pdp)
+    assert _tree_bitwise(sth, stdp)
+    ck = np.asarray(mdp["moments_checksum"])
+    assert ck.shape == (1,)
+    # the checksum equals the host-side recomputation on the same state
+    assert int(ck[0]) == int(jax.jit(engine.moments_checksum)(stdp))
+
+
+def test_dp1_addax_adam_vs_single_host():
+    """Updated params bitwise; (m, v) inside the measured ulp envelope
+    (DESIGN.md §6: the z-chain clone effect)."""
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                      spsa_mode="fresh")
+    host, dp, (p, st, bs), (pd, std, bd) = _dp1_setup("addax-adam", cfg)
+    ph, sth, mh = host(p, st, jnp.uint32(3), *bs)
+    pdp, stdp, mdp = dp(pd, std, jnp.uint32(3), *bd)
+    assert _tree_bitwise(ph, pdp)
+    np.testing.assert_array_equal(np.asarray(mh["g0_bank"]),
+                                  np.asarray(mdp["g0_bank"]))
+    for k in ("m", "v"):
+        for x, y in zip(jax.tree_util.tree_leaves(sth[k]),
+                        jax.tree_util.tree_leaves(stdp[k])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-5, atol=1e-10)
+
+
+@pytest.mark.parametrize("mode,execs", [("chain", ("scan",)),
+                                        ("fresh", ("vmap", "map"))])
+def test_dp1_moments_bank_exec_equivalence(mode, execs):
+    """dp-moments x vectorized bank executors: each executor's DP step
+    tracks the unrolled reference at the bank-executor tolerances
+    (fp32 central-difference agreement, cf. tests/test_bank_exec.py),
+    and (m, v) stay checksum-replicated."""
+    from repro.distributed.collectives import (batch_sharding, make_dp_step,
+                                               replicated)
+    mesh = _dp1_mesh()
+    lr_fn = schedules.constant(1e-2)
+    params, state = _params(), init_adam_state(_params())
+    b0, b1 = _batch(seed=1), _batch(seed=2)
+    pd = jax.device_put(params, replicated(mesh))
+    std = jax.device_put(state, replicated(mesh))
+    bd0 = jax.device_put(b0, batch_sharding(mesh))
+    bd1 = jax.device_put(b1, batch_sharding(mesh))
+
+    def run(bank_exec):
+        cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                          spsa_mode=mode, bank_exec=bank_exec,
+                          bank_microbatch=2)
+        step = make_dp_step(quad_loss, cfg, lr_fn, mesh,
+                            name="addax-adam", check_moments=True)
+        return jax.jit(step)(pd, std, jnp.uint32(3), bd0, bd1)
+
+    p_ref, st_ref, m_ref = run("unroll")
+    for ex in execs:
+        p_ex, st_ex, m_ex = run(ex)
+        np.testing.assert_allclose(np.asarray(m_ref["g0_bank"]),
+                                   np.asarray(m_ex["g0_bank"]),
+                                   rtol=1e-3, atol=1e-5)
+        for a, c in ((p_ref, p_ex), (st_ref, st_ex)):
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(c)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           atol=1e-5)
+        assert np.unique(np.asarray(m_ex["moments_checksum"])).size == 1
+
+
+def test_dp1_moments_bank_schedule_masking():
+    """dp-moments + BankSchedule: n_active == n_dirs is bit-identical to
+    the unscheduled step ((m, v) included); n_active = 2 reproduces a
+    plain n_dirs=2 bank; the checksum stays uniform under masking."""
+    from repro.distributed.collectives import (batch_sharding, make_dp_step,
+                                               replicated)
+    mesh = _dp1_mesh()
+    lr_fn = schedules.constant(1e-2)
+    params, state = _params(), init_adam_state(_params())
+    b0, b1 = _batch(seed=1), _batch(seed=2)
+    pd = jax.device_put(params, replicated(mesh))
+    std = jax.device_put(state, replicated(mesh))
+    bd0 = jax.device_put(b0, batch_sharding(mesh))
+    bd1 = jax.device_put(b1, batch_sharding(mesh))
+    kw = dict(lr=1e-2, alpha=5e-3, eps=1e-3, spsa_mode="fresh")
+
+    sched_cfg = AddaxConfig(n_dirs=4, bank_schedule="1:0.5:2.0", **kw)
+    sched = jax.jit(make_dp_step(quad_loss, sched_cfg, lr_fn, mesh,
+                                 name="addax-adam", check_moments=True))
+    plain4 = jax.jit(make_dp_step(quad_loss, AddaxConfig(n_dirs=4, **kw),
+                                  lr_fn, mesh, name="addax-adam",
+                                  check_moments=True))
+    plain2 = jax.jit(make_dp_step(quad_loss, AddaxConfig(n_dirs=2, **kw),
+                                  lr_fn, mesh, name="addax-adam",
+                                  check_moments=True))
+
+    p4, st4, m4 = sched(pd, std, jnp.uint32(3), jnp.int32(4), bd0, bd1)
+    pu, stu, mu = plain4(pd, std, jnp.uint32(3), bd0, bd1)
+    assert _tree_bitwise(p4, pu) and _tree_bitwise(st4, stu)
+
+    p2, st2, m2 = sched(pd, std, jnp.uint32(3), jnp.int32(2), bd0, bd1)
+    pp2, stp2, mp2 = plain2(pd, std, jnp.uint32(3), bd0, bd1)
+    assert _tree_bitwise(p2, pp2) and _tree_bitwise(st2, stp2)
+    assert int(m2["n_active"]) == 2
+    for m in (m4, m2):
+        assert np.unique(np.asarray(m["moments_checksum"])).size == 1
+
+
+def test_dp1_grad_clip_moments_matches_single_host():
+    """grad_clip composes with the moments path identically under DP and
+    single-host (bitwise for adam, whose contract is exact), and the
+    clipped step actually differs from the unclipped one."""
+    clip = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3, grad_clip=0.5)
+    host, dp, (p, st, bs), (pd, std, bd) = _dp1_setup("adam", clip)
+    ph, sth, _ = host(p, st, jnp.uint32(0), *bs)
+    pdp, stdp, _ = dp(pd, std, jnp.uint32(0), *bd)
+    assert _tree_bitwise(ph, pdp)
+    assert _tree_bitwise(sth, stdp)
+    no_clip = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3)
+    host_n, _, _, _ = _dp1_setup("adam", no_clip)
+    pn, stn, _ = host_n(p, st, jnp.uint32(0), *bs)
+    assert not _tree_bitwise(ph, pn)
+
+
+def test_build_dp_optimizer_moments():
+    """train.state.build_dp_optimizer wires the DP moments step with the
+    standard OptimizerSetup surface (has_state, init_state, donate)."""
+    from repro.distributed.collectives import (batch_sharding, replicated)
+    from repro.train.state import build_dp_optimizer
+    mesh = _dp1_mesh()
+    cfg = AddaxConfig(lr=1e-2, alpha=0.0, eps=1e-3)
+    opt = build_dp_optimizer("adam", quad_loss, cfg, mesh,
+                             check_moments=True)
+    assert opt.has_state and not opt.two_stream
+    params = jax.device_put(_params(), replicated(mesh))
+    state = jax.device_put(opt.init_state(_params()), replicated(mesh))
+    batch = jax.device_put(_batch(), batch_sharding(mesh))
+    p, st, m = opt.step_fn(params, state, jnp.uint32(0), batch)
+    assert "moments_checksum" in m
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree_util.tree_leaves(p))
+
+
+def test_train_loop_raises_on_checksum_divergence(tmp_path):
+    """The run_training tripwire: a divergent moments_checksum vector
+    aborts the run instead of silently training different models."""
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import OptimizerSetup
+
+    def bad_step(params, state, idx, batch):
+        return params, state, {
+            "loss_fo": jnp.float32(1.0),
+            "moments_checksum": jnp.asarray([1, 2], jnp.uint32)}
+
+    opt = OptimizerSetup("adam", bad_step, two_stream=False,
+                         has_state=True, init_state=init_adam_state)
+
+    class OneBatchPipe:
+        def step_batches(self, step):
+            return _batch(), _batch()
+
+    with pytest.raises(RuntimeError, match="replicated-\\(m, v\\)"):
+        run_training(opt, _params(), OneBatchPipe(),
+                     TrainLoopConfig(total_steps=2, log_every=1),
+                     opt_state=init_adam_state(_params()), jit=False)
+
+
+# --------------------------------------------------------------------------
+# dp in {2, 4} (subprocess: forced 8-device CPU)
+# --------------------------------------------------------------------------
+
+def _run_subprocess(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+_COMMON = """
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import engine, schedules
+    from repro.core.adam import init_adam_state
+    from repro.core.addax import AddaxConfig
+    from repro.distributed.collectives import (batch_sharding, make_dp_step,
+                                               replicated)
+    from repro.launch.mesh import _mk
+    from repro.models.registry import get_bundle
+
+    b = get_bundle("tiny-100m", smoke=True)
+    lr_fn = schedules.constant(1e-3)
+    params0 = b.init_params(jax.random.key(0))
+    state0 = init_adam_state(params0)
+    bitw = lambda a, c: all(
+        np.array_equal(np.asarray(x).view(np.uint32),
+                       np.asarray(y).view(np.uint32))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(c)))
+    def maxdiff(a, c):
+        # host-side: operands may live on different meshes
+        return max(float(np.max(np.abs(np.asarray(jax.device_get(x)) -
+                                       np.asarray(jax.device_get(y)))))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(c)))
+"""
+
+
+@pytest.mark.slow
+def test_dp_adam_bitwise_matrix_10steps():
+    """adam at dp in {1, 2, 4}: params AND (m, v) bit-identical to the
+    single-host step at equal data on every one of 10 steps, with the
+    all-gathered checksums uniform throughout — the acceptance-criteria
+    matrix of the replicated-(m, v) contract."""
+    code = textwrap.dedent(_COMMON) + textwrap.dedent("""
+        cfg = AddaxConfig(lr=1e-3, alpha=0.0, eps=1e-3)
+        host = jax.jit(engine.make_step("adam", b.loss_fn(), cfg, lr_fn))
+        res = {}
+        for dp in (1, 2, 4):
+            mesh = _mk((dp,), ("data",))
+            rep = lambda bb: jax.tree_util.tree_map(
+                lambda x: jnp.concatenate([x] * dp), bb)
+            step = jax.jit(make_dp_step(b.loss_fn(), cfg, lr_fn, mesh,
+                                        name="adam", check_moments=True))
+            ph, sth = params0, state0
+            pd = jax.device_put(params0, replicated(mesh))
+            std = jax.device_put(state0, replicated(mesh))
+            ok_p = ok_s = ok_ck = True
+            for t in range(10):
+                batch = b.make_batch(t, 4, 32)
+                ph, sth, mh = host(ph, sth, jnp.uint32(t), batch)
+                bd = jax.device_put(rep(batch), batch_sharding(mesh))
+                pd, std, md = step(pd, std, jnp.uint32(t), bd)
+                ok_p &= bitw(ph, pd)
+                ok_s &= bitw(sth, std)
+                ok_ck &= bool(np.unique(
+                    np.asarray(md["moments_checksum"])).size == 1)
+            res[str(dp)] = [ok_p, ok_s, ok_ck]
+        print(json.dumps(res))
+    """)
+    res = _run_subprocess(code)
+    for dp in ("1", "2", "4"):
+        assert res[dp] == [True, True, True], (dp, res)
+
+
+@pytest.mark.slow
+def test_dp_addax_adam_family_invariance_and_host_envelope():
+    """addax-adam (fresh): across the DP family — shared and sharded
+    bank at dp in {1, 2, 4} — and vs the single-host step, the g0 bank
+    is bitwise at equal params (the first step; later steps run on
+    ulp-diverged trajectories, so bitwise claims do not compose),
+    checksums stay uniform everywhere, and the 10-step params/state
+    trajectories agree inside the measured ulp envelope.  (Bitwise
+    *trajectory* equality across different compiled modules is not
+    claimed for the ZO+moments composition: XLA clones the Box-Muller z
+    chains into the moments clusters with module-dependent codegen —
+    DESIGN.md §6 spells out which pairs are bitwise and why; ``adam``'s
+    full bitwise matrix is the test above, and the fixed-shape dp=1
+    bitwise cases are in the fast tier.)"""
+    code = textwrap.dedent(_COMMON) + textwrap.dedent("""
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=4,
+                          spsa_mode="fresh")
+        host = jax.jit(engine.make_step("addax-adam", b.loss_fn(), cfg,
+                                        lr_fn))
+        variants = {}
+        for dp in (1, 2, 4):
+            mesh = _mk((dp,), ("data",))
+            for tag, kw in (("shared", {}), ("shard", {"shard_bank": True})):
+                step = jax.jit(make_dp_step(
+                    b.loss_fn(), cfg, lr_fn, mesh, name="addax-adam",
+                    check_moments=True, **kw))
+                variants[f"{tag}{dp}"] = (mesh, dp, step)
+        st_h, p_h = state0, params0
+        carry = {k: (jax.device_put(params0, replicated(m)),
+                     jax.device_put(state0, replicated(m)))
+                 for k, (m, dp, s) in variants.items()}
+        first_theta_bitwise = True
+        g0_ok = ck_ok = True
+        family_drift = 0.0
+        for t in range(10):
+            b0 = b.make_batch(2 * t, 4, 48)
+            b1 = b.make_batch(2 * t + 1, 4, 32)
+            p_h, st_h, m_h = host(p_h, st_h, jnp.uint32(t), b0, b1)
+            outs = {}
+            for k, (mesh, dp, step) in variants.items():
+                rep = lambda bb: jax.tree_util.tree_map(
+                    lambda x: jnp.concatenate([x] * dp), bb)
+                pd, std = carry[k]
+                pd, std, md = step(pd, std, jnp.uint32(t),
+                                   jax.device_put(rep(b0),
+                                                  batch_sharding(mesh)),
+                                   jax.device_put(rep(b1),
+                                                  batch_sharding(mesh)))
+                carry[k] = (pd, std)
+                outs[k] = (pd, std, md)
+                if t == 0:
+                    # later steps run on ulp-diverged params, so their
+                    # g0 banks legitimately differ — only the equal-
+                    # params step carries the bitwise claim
+                    g0_ok &= bool(np.array_equal(
+                        np.asarray(md["g0_bank"]),
+                        np.asarray(m_h["g0_bank"])))
+                ck_ok &= bool(np.unique(
+                    np.asarray(md["moments_checksum"])).size == 1)
+            ref_p, ref_st, _ = outs["shared1"]
+            for k, (pd, std, md) in outs.items():
+                if k != "shared1":
+                    family_drift = max(family_drift, maxdiff(ref_p, pd),
+                                       maxdiff(ref_st, std))
+            if t == 0:
+                first_theta_bitwise = all(
+                    bitw(p_h, outs[k][0]) for k in outs)
+        print(json.dumps({
+            "g0_bank_bitwise_equal_params": bool(g0_ok),
+            "checksums_uniform": bool(ck_ok),
+            "first_step_theta_bitwise_vs_host": bool(first_theta_bitwise),
+            "family_drift_10_steps": family_drift,
+            "theta_drift_10_steps": maxdiff(p_h, carry["shared1"][0]),
+            "state_drift_10_steps": maxdiff(st_h, carry["shared1"][1]),
+        }))
+    """)
+    res = _run_subprocess(code)
+    assert res["g0_bank_bitwise_equal_params"]
+    assert res["checksums_uniform"]
+    # first_step_theta_bitwise_vs_host is reported but not asserted at
+    # this model size: whether a given module pair agrees bitwise is
+    # shape-dependent fusion luck (DESIGN.md §6); the structural bitwise
+    # claims live in test_dp_adam_bitwise_matrix_10steps (adam) and the
+    # fixed-shape dp=1 fast tests.
+    # the measured CPU envelope is ~1e-7 after 10 steps; 1e-5 leaves
+    # room for jax-version variation while still catching real bugs
+    assert res["family_drift_10_steps"] < 1e-5, res
+    assert res["theta_drift_10_steps"] < 1e-5, res
+    assert res["state_drift_10_steps"] < 1e-5, res
+
+
+@pytest.mark.slow
+def test_dp_moments_stacked_state_replication():
+    """Direct replication proof: a shard_map whose out_specs *stack* the
+    per-shard (m, v) along the data axis — the dp slices must be
+    bit-identical after multiple steps (no psum of state anywhere in the
+    program, so this is the replicated-(m, v) contract observed raw)."""
+    code = textwrap.dedent(_COMMON) + textwrap.dedent("""
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.collectives import _shard_map
+        dp = 4
+        mesh = _mk((dp,), ("data",))
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=4,
+                          spsa_mode="fresh")
+        local = engine.make_dp_local_step(
+            "addax-adam", b.loss_fn(), cfg, lr_fn, "data", dp_size=dp,
+            shard_bank=True)
+        def stacked(params, state, idx, b0, b1):
+            p, st, m = local(params, state, idx, b0, b1)
+            return p, st
+        f = jax.jit(_shard_map(stacked, mesh,
+                               in_specs=(P(), P(), P(), P("data"),
+                                         P("data")),
+                               out_specs=(P(), P("data"))))
+        pd = jax.device_put(params0, replicated(mesh))
+        std = jax.device_put(state0, replicated(mesh))
+        ok = True
+        for t in range(3):
+            b0 = b.make_batch(2 * t, 2 * dp, 48)
+            b1 = b.make_batch(2 * t + 1, 2 * dp, 32)
+            pd, stacked_st = f(pd, std, jnp.uint32(t),
+                               jax.device_put(b0, batch_sharding(mesh)),
+                               jax.device_put(b1, batch_sharding(mesh)))
+            # out_specs P("data") concatenated shard copies on axis 0:
+            # split them back and compare bitwise
+            for leaf in jax.tree_util.tree_leaves(stacked_st):
+                arr = np.asarray(leaf)
+                parts = np.split(arr, dp, axis=0)
+                ok &= all(np.array_equal(parts[0].view(np.uint32),
+                                         q.view(np.uint32))
+                          for q in parts[1:])
+            # feed shard 0's copy back as the replicated state
+            std = jax.device_put(jax.tree_util.tree_map(
+                lambda l: jnp.asarray(np.split(np.asarray(l), dp,
+                                               axis=0)[0]), stacked_st),
+                replicated(mesh))
+        print(json.dumps({"slices_bitwise": bool(ok)}))
+    """)
+    assert _run_subprocess(code)["slices_bitwise"]
+
+
+@pytest.mark.slow
+def test_dp_moments_backend_parity_and_edges_dp2():
+    """dp=2 edges: jnp vs pallas-interpret inside the DP program agree to
+    the interpret-inlining tolerance (bit-parity is a single-host
+    contract — interpret-mode kernels inline into the surrounding module,
+    docs/engine.md); per-shard vmap bank executor tracks unroll; a
+    scheduled bank keeps checksums uniform at n_active < n_dirs; and
+    grad_clip under DP matches single-host bitwise for adam."""
+    code = textwrap.dedent(_COMMON) + textwrap.dedent("""
+        dp = 2
+        mesh = _mk((dp,), ("data",))
+        rep = lambda bb: jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x] * dp), bb)
+        cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=2,
+                          spsa_mode="fresh")
+        b0 = b.make_batch(0, 2, 48); b1 = b.make_batch(1, 2, 32)
+        args = (jax.device_put(params0, replicated(mesh)),
+                jax.device_put(state0, replicated(mesh)), jnp.uint32(3),
+                jax.device_put(rep(b0), batch_sharding(mesh)),
+                jax.device_put(rep(b1), batch_sharding(mesh)))
+        outs = {}
+        for be in ("jnp", "pallas_interpret"):
+            step = make_dp_step(b.loss_fn(), cfg, lr_fn, mesh,
+                                name="addax-adam", backend=be)
+            outs[be] = jax.jit(step)(*args)
+        parity = max(maxdiff(outs["jnp"][0], outs["pallas_interpret"][0]),
+                     maxdiff(outs["jnp"][1], outs["pallas_interpret"][1]))
+
+        ex = {}
+        for bank_exec in ("unroll", "vmap"):
+            c = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=4,
+                            spsa_mode="fresh", bank_exec=bank_exec)
+            step = make_dp_step(b.loss_fn(), c, lr_fn, mesh,
+                                name="addax-adam", shard_bank=True,
+                                check_moments=True)
+            ex[bank_exec] = jax.jit(step)(*args)
+        exec_diff = max(maxdiff(ex["unroll"][0], ex["vmap"][0]),
+                        maxdiff(ex["unroll"][1], ex["vmap"][1]))
+        exec_ck = bool(np.unique(np.asarray(
+            ex["vmap"][2]["moments_checksum"])).size == 1)
+
+        c = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=4,
+                        spsa_mode="fresh", bank_schedule="1:0.5:2.0")
+        step = jax.jit(make_dp_step(b.loss_fn(), c, lr_fn, mesh,
+                                    name="addax-adam",
+                                    check_moments=True))
+        _, _, md = step(args[0], args[1], args[2], jnp.int32(2),
+                        args[3], args[4])
+        sched_ck = bool(np.unique(
+            np.asarray(md["moments_checksum"])).size == 1)
+        sched_active = int(md["n_active"])
+
+        cl = AddaxConfig(lr=1e-3, alpha=0.0, eps=1e-3, grad_clip=0.1)
+        host = jax.jit(engine.make_step("adam", b.loss_fn(), cl, lr_fn))
+        ph, sth, _ = host(params0, state0, jnp.uint32(0), b1)
+        stepc = jax.jit(make_dp_step(b.loss_fn(), cl, lr_fn, mesh,
+                                     name="adam"))
+        pdc, stdc, _ = stepc(args[0], args[1], jnp.uint32(0), args[4])
+        print(json.dumps({
+            "backend_parity_diff": parity,
+            "exec_diff": exec_diff, "exec_ck": exec_ck,
+            "sched_ck": sched_ck, "sched_active": sched_active,
+            "clip_bitwise": bool(bitw(ph, pdc) and bitw(sth, stdc)),
+        }))
+    """)
+    res = _run_subprocess(code)
+    assert res["backend_parity_diff"] < 1e-8, res
+    assert res["exec_diff"] < 1e-4, res
+    assert res["exec_ck"] and res["sched_ck"]
+    assert res["sched_active"] == 2
+    assert res["clip_bitwise"]

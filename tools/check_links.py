@@ -1,0 +1,85 @@
+"""Relative-link checker for the repo's markdown surface (no deps).
+
+CI runs ``python tools/check_links.py``; it scans README.md, DESIGN.md,
+ROADMAP.md, docs/, benchmarks/README.md, and tests/README.md for
+markdown links ``[text](target)`` and fails on any *relative* target
+that does not exist on disk (fragments are stripped; http(s)/mailto
+links are out of scope — this is a docs-integrity gate, not a crawler).
+
+Also usable as a library: ``check_files(paths) -> list[str]`` of
+"file: broken-target" strings (tests/test_docs.py drives it that way).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: default scan set (kept in sync with the docs satellite of PR 4)
+DEFAULT_FILES = (
+    "README.md",
+    "DESIGN.md",
+    "ROADMAP.md",
+    "CHANGES.md",
+    "benchmarks/README.md",
+    "tests/README.md",
+)
+DEFAULT_DIRS = ("docs",)
+
+# [text](target) — non-greedy text, target up to the closing paren
+# (no support for parenthesised URLs; none exist in this repo's docs)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def iter_md_files(repo: str = REPO):
+    for rel in DEFAULT_FILES:
+        path = os.path.join(repo, rel)
+        if os.path.exists(path):
+            yield path
+    for d in DEFAULT_DIRS:
+        root = os.path.join(repo, d)
+        if os.path.isdir(root):
+            for base, _, names in sorted(os.walk(root)):
+                for n in sorted(names):
+                    if n.endswith(".md"):
+                        yield os.path.join(base, n)
+
+
+def check_files(paths) -> list:
+    """Returns ["relpath: target", ...] for every broken relative link."""
+    broken = []
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks may contain [x](y)-looking noise
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                broken.append(f"{os.path.relpath(path, REPO)}: {target}")
+    return broken
+
+
+def main(argv=None) -> int:
+    paths = list(iter_md_files())
+    broken = check_files(paths)
+    print(f"[check_links] scanned {len(paths)} markdown files")
+    if broken:
+        print(f"[check_links] {len(broken)} broken relative link(s):")
+        for b in broken:
+            print(f"  - {b}")
+        return 1
+    print("[check_links] all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
