@@ -18,10 +18,15 @@
        the committed ratio ``c``: ratios are hardware-normalized, so the
        band absorbs runner variance while catching order-of-magnitude
        regressions;
-     * **directional gates** (``fig_bank_exec``) — vmap fresh-mode step
-       time and scan chain-mode compile time must stay below the
-       unrolled path at ``n_dirs >= 4`` (with a small noise slack):
-       the PR-committed speedup claim, re-proven on every run.
+     * **directional gates** (``fig_bank_exec``, ``fig_host_overlap``) —
+       vmap fresh-mode step time and scan chain-mode compile time must
+       stay below the unrolled path at ``n_dirs >= 4``, and the
+       streamed (prefetch+async) loop must stay below the synchronous
+       loop (with a small noise slack): the PR-committed speedup
+       claims, re-proven on every run;
+     * **live correctness gates** (``fig_dp_moments`` checksum
+       uniformity, ``fig_host_overlap`` bitwise-trajectory and
+       compile-count checks) — asserted on the FRESH run, hard-fail.
 
 The fresh JSONs overwrite ``benchmarks/results/`` in place — CI uploads
 them as workflow artifacts so a failed gate ships its evidence.
@@ -44,6 +49,7 @@ FIGURES = {
     "fig_sharded_bank": ["--quick", "--steps", "4"],
     "fig_bank_exec": ["--quick"],
     "fig_dp_moments": ["--quick", "--steps", "4"],
+    "fig_host_overlap": ["--quick"],
 }
 
 
@@ -224,10 +230,62 @@ def check_dp_moments(fresh: dict, committed: dict, tol: float,
               "(reported, not gated)")
 
 
+def check_host_overlap(fresh: dict, committed: dict, tol: float,
+                       slack: float, failures: list):
+    """Streaming-runtime gate: the wall ratios are banded against the
+    committed run AND directionally gated (prefetch+async must keep
+    beating the synchronous loop — the PR's host-overlap claim); the
+    bitwise-trajectory and per-bucket compile-count checks are *live*
+    correctness gates on the fresh run (prefetch/async must reorder
+    work, never values — docs/data-pipeline.md)."""
+    def rows_by_variant(s):
+        return {_need(r, "variant", "fig_host_overlap row"): r
+                for r in _need(s, "rows", "fig_host_overlap")}
+    fr, cr = rows_by_variant(fresh), rows_by_variant(committed)
+    for variant in cr:
+        if variant not in fr:
+            raise GateFailure(f"fig_host_overlap: fresh run lost variant "
+                              f"{variant!r}")
+        _need(fr[variant], "step_wall_s", variant)
+        # live: every variant must land on the sync trajectory bitwise
+        if not _need(fr[variant], "params_bitwise", variant):
+            raise GateFailure(
+                f"fig_host_overlap: {variant} diverged from the "
+                "synchronous trajectory — prefetch/async changed values, "
+                "not just work order (docs/data-pipeline.md)")
+    fb = _need(fresh, "bucketed", "fig_host_overlap")
+    cb = _need(committed, "bucketed", "fig_host_overlap")
+    # live: the per-bucket step cache compiled exactly once per width
+    if not _need(fb, "compiles_equals_widths", "bucketed"):
+        raise GateFailure(
+            "fig_host_overlap: bucketed run retraced — n_compiles "
+            f"{fb.get('n_compiles')} != widths seen "
+            f"{fb.get('widths_seen')} (engine.StepCache contract)")
+    # exact: the deterministic stream sees the same ladder every run
+    for key in ("n_compiles", "ladder_edges", "widths_seen"):
+        _exact(f"host_overlap bucketed.{key}", _need(fb, key, "bucketed"),
+               _need(cb, key, "bucketed"), failures)
+    fratios = _need(fresh, "ratios", "fig_host_overlap")
+    cratios = _need(committed, "ratios", "fig_host_overlap")
+    for key in cratios:
+        _band(f"host_overlap {key}", _need(fratios, key, "ratios"),
+              _need(cratios, key, "ratios"), tol, failures)
+    # directional: the streamed loop must keep beating sync
+    val = _need(fratios, "streamed_vs_sync", "ratios")
+    ok = val <= slack
+    print(f"  [{'ok' if ok else 'FAIL'}] streamed vs sync step time: "
+          f"x{val:.3f} (must be <= {slack})")
+    if not ok:
+        failures.append(
+            f"streamed_vs_sync: x{val:.3f} > {slack} — the prefetch+"
+            "async loop no longer beats the synchronous one")
+
+
 CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_sharded_bank": check_sharded,
           "fig_bank_exec": check_bank_exec,
-          "fig_dp_moments": check_dp_moments}
+          "fig_dp_moments": check_dp_moments,
+          "fig_host_overlap": check_host_overlap}
 
 
 # --------------------------------------------------------------------------

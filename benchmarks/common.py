@@ -23,6 +23,25 @@ from repro.models.registry import get_bundle
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
+def tree_bitwise(a, b) -> bool:
+    """Leaf-for-leaf *bit-pattern* equality of two pytrees — the live
+    bitwise-trajectory gates (fig_host_overlap) and the stream-runtime
+    determinism tests ride on this.  Deliberately stricter than numeric
+    equality: +0.0 vs -0.0 differ (a real reordering divergence), and
+    identical NaN payloads compare equal."""
+    import numpy as np
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if x.tobytes() != y.tobytes():
+            return False
+    return True
+
+
 def save_result(name: str, payload) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

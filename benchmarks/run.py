@@ -22,8 +22,9 @@ def main(argv=None):
 
     from benchmarks import (fig3_memory_vs_batch, fig4_memory_vs_seqlen,
                             fig5_k0_sweep, fig11_convergence,
-                            fig_bank_exec, fig_ndirs_sweep,
-                            roofline_report, table_accuracy_memory)
+                            fig_bank_exec, fig_host_overlap,
+                            fig_ndirs_sweep, roofline_report,
+                            table_accuracy_memory)
     suite = {
         "fig3_memory_vs_batch": lambda: fig3_memory_vs_batch.run(
             quick=quick),
@@ -32,6 +33,7 @@ def main(argv=None):
         "fig5_k0_sweep": lambda: fig5_k0_sweep.run(quick=quick),
         "fig_ndirs_sweep": lambda: fig_ndirs_sweep.run(quick=quick),
         "fig_bank_exec": lambda: fig_bank_exec.run(quick=quick),
+        "fig_host_overlap": lambda: fig_host_overlap.run(quick=quick),
         "fig11_convergence": lambda: fig11_convergence.run(quick=quick),
         "table_accuracy_memory": lambda: table_accuracy_memory.run(
             quick=quick),

@@ -1,12 +1,21 @@
-"""Length-threshold data assignment (paper §3.1).
+"""Length-threshold data assignment (paper §3.1) and its K-bucket
+generalization (the streaming runtime's length ladder).
 
 ``D0 = {x : length(x) > L_T}`` (zeroth-order, long sequences)
 ``D1 = {x : length(x) <= L_T}`` (first-order, short sequences)
 
 XLA needs static shapes, so the split is realized host-side: examples are
 bucketed into two fixed-shape streams — ``D1`` padded to ``L_T`` and ``D0``
-padded to ``L_max``.  This module is pure-numpy (host pipeline); the
-invariants (partition, disjointness, threshold) are property-tested.
+padded to ``L_max``.  The two-width split is the ``n_buckets = 1`` special
+case of a **bucket ladder** over the FO stream: ``BucketLadder`` partitions
+D1 into K width classes so a short-sequence-heavy minibatch pads to its
+class edge instead of all the way to ``L_T`` (the padding-FLOP waste the
+paper's D0/D1 mechanism exists to avoid, Appendix D.6 — extended here below
+the threshold).  Edges come from length quantiles
+(``choose_bucket_edges``) or from the activation-``memory_model``
+(``plan_bucket_edges``: the top edge is the widest FO batch that fits the
+HBM budget).  This module is pure-numpy (host pipeline); the invariants
+(partition, disjointness, threshold, ladder cover) are property-tested.
 """
 
 from __future__ import annotations
@@ -45,6 +54,109 @@ def choose_l_t(lengths: np.ndarray, fo_fraction: float = 0.5) -> int:
     quantile rule is the automated analogue (e.g. 0.5 -> median)."""
     lengths = np.asarray(lengths)
     return int(np.quantile(lengths, fo_fraction))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """K-width partition of one stream by sequence length.
+
+    Bucket ``i`` holds the indices whose length falls in
+    ``(edges[i-1], edges[i]]`` (bucket 0: ``<= edges[0]``); ``edges`` are
+    the padded batch widths, ascending, with ``edges[-1]`` the stream's
+    full width.  Empty buckets are dropped at construction, so every
+    bucket is drawable and ``sizes`` is all-positive.
+    """
+    edges: tuple[int, ...]
+    buckets: tuple            # tuple[np.ndarray, ...] — indices per edge
+
+    def __post_init__(self):
+        if not self.edges:
+            raise ValueError("BucketLadder needs at least one edge")
+        if list(self.edges) != sorted(set(self.edges)):
+            raise ValueError(
+                f"edges must be strictly ascending, got {self.edges}")
+        if len(self.edges) != len(self.buckets):
+            raise ValueError("one index set per edge")
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.edges)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([b.size for b in self.buckets], np.int64)
+
+
+def build_ladder(lengths: np.ndarray, indices: np.ndarray,
+                 edges: tuple[int, ...]) -> BucketLadder:
+    """Bucket ``indices`` (into a corpus with ``lengths``) by the width
+    ladder ``edges``.  Every index must fit under ``edges[-1]``; empty
+    buckets are dropped (their edge disappears from the ladder)."""
+    lengths = np.asarray(lengths)
+    indices = np.asarray(indices)
+    edges = tuple(sorted(set(int(e) for e in edges)))
+    if indices.size and int(lengths[indices].max()) > edges[-1]:
+        raise ValueError(
+            f"ladder top edge {edges[-1]} < max stream length "
+            f"{int(lengths[indices].max())}")
+    kept_edges, kept = [], []
+    prev = 0
+    for e in edges:
+        sel = indices[(lengths[indices] > prev) & (lengths[indices] <= e)]
+        prev = e
+        if sel.size:
+            kept_edges.append(e)
+            kept.append(sel)
+    if not kept:
+        raise ValueError("ladder has no non-empty bucket")
+    return BucketLadder(edges=tuple(kept_edges), buckets=tuple(kept))
+
+
+def choose_bucket_edges(lengths: np.ndarray, n_buckets: int, top: int,
+                        pad_multiple: int = 8) -> tuple[int, ...]:
+    """Quantile width ladder: ``n_buckets`` edges over the stream's length
+    distribution, snapped up to ``pad_multiple`` lanes, deduplicated, the
+    last edge pinned to ``top`` (the stream's full padded width).
+    ``n_buckets = 1`` degenerates to ``(top,)`` — the paper-faithful
+    single-width stream."""
+    if n_buckets < 1:
+        raise ValueError(f"n_buckets must be >= 1, got {n_buckets}")
+    if n_buckets == 1 or np.asarray(lengths).size == 0:
+        return (int(top),)
+    lengths = np.asarray(lengths)
+    qs = [np.quantile(lengths, (i + 1) / n_buckets)
+          for i in range(n_buckets - 1)]
+    snap = lambda x: int(np.ceil(x / pad_multiple) * pad_multiple)
+    edges = sorted({min(snap(q), int(top)) for q in qs} | {int(top)})
+    return tuple(edges)
+
+
+def plan_bucket_edges(lengths: np.ndarray, n_buckets: int, batch: int,
+                      n_layers: int, d_model: int, n_heads: int,
+                      hbm_budget_bytes: int,
+                      pad_multiple: int = 8) -> tuple[int, ...]:
+    """``memory_model``-driven ladder: the top edge is the widest padded
+    width whose FO activation estimate fits ``hbm_budget_bytes`` (at most
+    the stream max); the lower edges are the quantile ladder below it.
+    This is the Appendix-D.6 automation extended from one threshold to K
+    widths."""
+    lengths = np.asarray(lengths)
+    l_max = int(np.ceil(int(lengths.max()) / pad_multiple) * pad_multiple)
+    top = l_max
+    while top > pad_multiple and memory_model(
+            top, batch, n_layers, d_model, n_heads) > hbm_budget_bytes:
+        top -= pad_multiple
+    if memory_model(top, batch, n_layers, d_model,
+                    n_heads) > hbm_budget_bytes:
+        raise ValueError(
+            f"even the minimum width {top} exceeds the "
+            f"{hbm_budget_bytes}-byte budget — shrink the batch or the "
+            "model, or raise the budget")
+    kept = lengths[lengths <= top]
+    if kept.size == 0:
+        raise ValueError(
+            f"no sequence fits the memory budget (top width {top})")
+    return choose_bucket_edges(kept, n_buckets, top, pad_multiple)
 
 
 def memory_model(seq_len: int, batch: int, n_layers: int, d_model: int,

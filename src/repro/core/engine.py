@@ -103,6 +103,54 @@ def _check_backend(backend: str):
                          "(docs/engine.md lists the backend matrix)")
 
 
+class StepCache:
+    """Per-bucket compiled-step cache (the streaming runtime's step layer,
+    docs/data-pipeline.md).
+
+    One ``jax.jit`` with the optimizer's donation wraps the step; the
+    cache records the *batch-widths key* of every trace, so with a
+    K-bucket FO ladder the step compiles exactly once per distinct widths
+    signature and every later batch of the same widths reuses the
+    executable — ``n_compiles``/``keys`` make the no-retrace contract
+    observable (the train loop reports it, ``fig_host_overlap`` gates it
+    exactly).
+
+    The wrapped step keeps the engine's async-friendly metrics contract:
+    outputs are device arrays, nothing in here forces a host sync — the
+    caller decides when to block (``train.loop`` drains at lag <= W).
+    """
+
+    def __init__(self, fn: Callable, donate_argnums: tuple = (),
+                 **jit_kwargs):
+        self.keys: list[tuple] = []
+
+        def _recording(*args):
+            self.keys.append(self._widths_key(args))
+            return fn(*args)
+
+        self._jit = jax.jit(_recording, donate_argnums=donate_argnums,
+                            **jit_kwargs)
+
+    @staticmethod
+    def _widths_key(args) -> tuple:
+        out = []
+        for a in args:
+            if isinstance(a, dict) and "tokens" in a:
+                out.append(tuple(a["tokens"].shape))
+        return tuple(out)
+
+    @property
+    def n_compiles(self) -> int:
+        """Number of traces so far (== distinct argument signatures)."""
+        return len(self.keys)
+
+    def __call__(self, *args):
+        return self._jit(*args)
+
+    def lower(self, *args):
+        return self._jit.lower(*args)
+
+
 def moments_checksum(state: Any) -> jax.Array:
     """Order-independent uint32 checksum of a moments tree (fp32 leaves).
 

@@ -1,16 +1,34 @@
 """Host-side Addax data pipeline: the paper's D0/D1 length split realized
-as two fixed-shape batch streams.
+as two fixed-shape batch streams, generalized into a streaming runtime.
 
 Given a corpus and an ``Assignment`` (``repro.core.assignment``), each
 training step draws
 
   * ``batch0`` — K0 examples from D0 (long), padded to ``s_full``,
-  * ``batch1`` — K1 examples from D1 (short), padded to ``L_T``,
+  * ``batch1`` — K1 examples from D1 (short), padded to the step's FO
+    *bucket edge* (``n_buckets = 1``: always ``L_T`` — the paper split),
 
 as next-token LM batches ``{tokens, targets, mask}``.  Sampling is a pure
 function of ``(seed, step)`` (counter-seeded numpy Generator), so a
 restarted job replays the identical stream with *no* data-state in the
-checkpoint — the data-pipeline analogue of the MeZO seed trick.
+checkpoint — the data-pipeline analogue of the MeZO seed trick.  That
+purity is what makes the streaming features free of state:
+
+  * **bucket ladder** (``n_buckets > 1``): D1 is partitioned into K width
+    classes (``assignment.BucketLadder``); each step draws its FO batch
+    from one bucket (picked by the step's rng, weighted by bucket size)
+    and pads only to that bucket's edge — short-heavy minibatches stop
+    burning FLOPs on padding to ``L_T``;
+  * **packing** (``pack=True``): the FO batch is built by deterministic
+    first-fit — examples are drawn one at a time and placed into the
+    first of ``k1`` rows with room until a draw no longer fits; the batch
+    gains ``segments`` (1-based example id per token, 0 = padding) and
+    ``positions`` (per-example restart) so segment-aware attention keeps
+    examples isolated (see ``docs/data-pipeline.md``);
+  * **prefetch** (``stream(..., prefetch=N)``): a background thread
+    builds batches into a bounded queue.  Because ``step_batches`` is a
+    pure function of ``(seed, step)``, the prefetched stream is
+    *bitwise-identical* to the synchronous one — property-tested.
 
 Addax-WA: pass ``l_t=None`` — both streams draw from the full corpus and
 are padded to ``s_full``.
@@ -19,6 +37,8 @@ are padded to ``s_full``.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 
 import numpy as np
 
@@ -33,6 +53,8 @@ class PipelineConfig:
     s_full: int | None = None    # ZO pad length; default: corpus max
     seed: int = 0
     pad_multiple: int = 8        # align padded lengths (TPU lanes)
+    n_buckets: int = 1           # FO width-ladder size (1 = paper split)
+    pack: bool = False           # first-fit packing of the FO stream
 
 
 def _pad_len(n: int, mult: int) -> int:
@@ -44,24 +66,69 @@ def _lm_batch(corpus: list[dict], idx: np.ndarray, pad_to: int) -> dict:
 
     tokens[t] predicts targets[t] = tokens[t+1]; the mask covers positions
     whose *target* lies in the completion region (paper's prompt-masked
-    loss), never padding."""
+    loss), never padding.
+
+    Vectorized assembly (one flat scatter + broadcast compares) — bitwise
+    identical to the per-row reference loop, which lives on as the
+    regression oracle in ``tests/test_data_pipeline.py``."""
     b = len(idx)
     tokens = np.zeros((b, pad_to), np.int32)
-    targets = np.zeros((b, pad_to), np.int32)
-    mask = np.zeros((b, pad_to), np.float32)
-    for r, i in enumerate(idx):
-        ex = corpus[int(i)]
-        t = ex["tokens"][:pad_to]
-        n = len(t)
-        tokens[r, :n] = t
-        targets[r, :n - 1] = t[1:]
-        lo = max(ex["completion_start"] - 1, 0)
-        mask[r, lo:n - 1] = 1.0
+    if b == 0:
+        z = np.zeros((b, pad_to), np.float32)
+        return {"tokens": tokens, "targets": tokens.copy(), "mask": z}
+    toks = [np.asarray(corpus[int(i)]["tokens"][:pad_to], np.int32)
+            for i in idx]
+    ns = np.fromiter((t.size for t in toks), np.int64, count=b)
+    starts = np.fromiter((corpus[int(i)]["completion_start"] for i in idx),
+                         np.int64, count=b)
+    rows = np.repeat(np.arange(b), ns)
+    cols = np.concatenate([np.arange(n) for n in ns])
+    tokens[rows, cols] = np.concatenate(toks)
+    shifted = np.zeros_like(tokens)
+    shifted[:, :-1] = tokens[:, 1:]
+    col = np.arange(pad_to)[None, :]
+    last = (ns - 1)[:, None]                  # first column past the targets
+    targets = np.where(col < last, shifted, 0).astype(np.int32)
+    lo = np.maximum(starts - 1, 0)[:, None]
+    mask = ((col >= lo) & (col < last)).astype(np.float32)
     return {"tokens": tokens, "targets": targets, "mask": mask}
 
 
+def _packed_lm_batch(corpus: list[dict], placements: list[list[int]],
+                     pad_to: int) -> dict:
+    """Build a packed FO batch: row ``r`` holds ``placements[r]`` examples
+    back to back.  Adds ``segments`` (1-based per-row example id, 0 on
+    padding) and ``positions`` (restarting at each example) so
+    segment-aware attention and RoPE treat each example exactly as if it
+    sat alone in its own row.  Targets and mask are built per example —
+    the last token of one example never targets the first token of the
+    next."""
+    b = len(placements)
+    tokens = np.zeros((b, pad_to), np.int32)
+    targets = np.zeros((b, pad_to), np.int32)
+    mask = np.zeros((b, pad_to), np.float32)
+    segments = np.zeros((b, pad_to), np.int32)
+    positions = np.zeros((b, pad_to), np.int32)
+    for r, row in enumerate(placements):
+        off = 0
+        for seg, i in enumerate(row, start=1):
+            ex = corpus[int(i)]
+            t = np.asarray(ex["tokens"][:pad_to - off], np.int32)
+            n = t.size
+            tokens[r, off:off + n] = t
+            targets[r, off:off + n - 1] = t[1:]
+            lo = max(ex["completion_start"] - 1, 0)
+            mask[r, off + lo:off + n - 1] = 1.0
+            segments[r, off:off + n] = seg
+            positions[r, off:off + n] = np.arange(n)
+            off += n
+    return {"tokens": tokens, "targets": targets, "mask": mask,
+            "segments": segments, "positions": positions}
+
+
 class AddaxPipeline:
-    """Two-stream batch source for ``make_addax_step``."""
+    """Two-stream batch source for ``make_addax_step`` (and every other
+    engine optimizer via ``train.loop.run_training``)."""
 
     def __init__(self, corpus: list[dict], cfg: PipelineConfig):
         self.corpus = corpus
@@ -79,45 +146,192 @@ class AddaxPipeline:
         wa = cfg.l_t is None or cfg.l_t >= self.assignment.l_max
         self.l_short = self.s_full if wa else _pad_len(cfg.l_t,
                                                        cfg.pad_multiple)
+        # FO width ladder: n_buckets=1 -> one bucket at l_short (the paper
+        # split, and the bitwise-compatible legacy sampling path).  Widths
+        # are clamped to l_short first: an explicit s_full below the
+        # corpus max means *truncation* (matching _lm_batch's tokens[:pad]
+        # semantics), not a construction error.
+        fo_lengths = np.minimum(lengths, self.l_short)
+        edges = asg.choose_bucket_edges(fo_lengths[self.assignment.d1],
+                                        cfg.n_buckets, self.l_short,
+                                        cfg.pad_multiple)
+        self.ladder = asg.build_ladder(fo_lengths, self.assignment.d1,
+                                       edges)
+
+    @property
+    def fo_widths(self) -> tuple[int, ...]:
+        """The FO batch widths this pipeline can emit (the ladder edges) —
+        what a per-bucket compiled-step cache will compile, once each."""
+        return self.ladder.edges
 
     def _rng(self, step: int) -> np.random.Generator:
         return np.random.default_rng(
             np.random.SeedSequence([self.cfg.seed, int(step)]))
 
+    def _draw_fo(self, rng: np.random.Generator):
+        """One step's FO draw: (bucket pool, pad width).  The single-bucket
+        ladder takes no extra rng draws, so ``n_buckets=1`` streams are
+        bitwise-identical to the pre-ladder pipeline."""
+        if self.ladder.n_buckets == 1:
+            return self.ladder.buckets[0], self.ladder.edges[0]
+        sizes = self.ladder.sizes
+        bi = int(rng.choice(self.ladder.n_buckets, p=sizes / sizes.sum()))
+        return self.ladder.buckets[bi], self.ladder.edges[bi]
+
+    def _pack_placements(self, rng: np.random.Generator, pool: np.ndarray,
+                         rows: int, width: int) -> list[list[int]]:
+        """Deterministic first-fit: draw one example at a time from
+        ``pool`` and place it in the first row with room; stop at the
+        first draw that fits nowhere.  Pure function of the rng state, so
+        the packed stream replays from ``(seed, step)`` like everything
+        else."""
+        used = [0] * rows
+        placements: list[list[int]] = [[] for _ in range(rows)]
+        for _ in range(rows * width):        # hard bound; loop exits early
+            i = int(rng.choice(pool))
+            n = min(len(self.corpus[i]["tokens"]), width)
+            for r in range(rows):
+                if used[r] + n <= width:
+                    placements[r].append(i)
+                    used[r] += n
+                    break
+            else:
+                break
+        return placements
+
     def step_batches(self, step: int) -> tuple[dict, dict]:
-        """(batch0 ZO @ s_full, batch1 FO @ l_short) for one step."""
+        """(batch0 ZO @ s_full, batch1 FO @ bucket edge) for one step."""
         rng = self._rng(step)
         i0 = rng.choice(self.assignment.d0, size=self.cfg.k0, replace=True)
-        i1 = rng.choice(self.assignment.d1, size=self.cfg.k1, replace=True)
-        return (_lm_batch(self.corpus, i0, self.s_full),
-                _lm_batch(self.corpus, i1, self.l_short))
+        pool, width = self._draw_fo(rng)
+        b0 = _lm_batch(self.corpus, i0, self.s_full)
+        if self.cfg.pack:
+            placements = self._pack_placements(rng, pool, self.cfg.k1,
+                                               width)
+            return b0, _packed_lm_batch(self.corpus, placements, width)
+        i1 = rng.choice(pool, size=self.cfg.k1, replace=True)
+        return b0, _lm_batch(self.corpus, i1, width)
+
+    def stream(self, start_step: int, stop_step: int, prefetch: int = 0):
+        """Iterate ``(step, batch0, batch1)`` over ``[start, stop)``.
+
+        ``prefetch > 0`` builds batches on a background thread into a
+        bounded queue of that depth.  The output is bitwise-identical to
+        the synchronous path — ``step_batches`` is a pure function of
+        ``(seed, step)``, so prefetching reorders *work*, never values.
+        The worker dies with the consumer (closing the generator stops
+        it), and worker exceptions re-raise at the consuming site."""
+        if prefetch <= 0:
+            for s in range(start_step, stop_step):
+                yield (s, *self.step_batches(s))
+            return
+        worker = _PrefetchWorker(self, start_step, stop_step, prefetch)
+        try:
+            while True:
+                item = worker.get()
+                if item is None:
+                    worker.raise_if_failed()
+                    return
+                yield item
+        finally:
+            worker.close()
 
     def eval_batches(self, corpus: list[dict], batch: int):
-        """Fixed-shape eval batches over a held-out corpus (no shuffling)."""
+        """Fixed-shape eval batches over a held-out corpus (no shuffling).
+
+        The tail remainder is *padded*, not dropped: the last batch keeps
+        the full ``batch`` rows, with all-zero fill rows whose mask is 0
+        everywhere — so every example is evaluated exactly once and every
+        batch compiles to the same shape."""
         pad = _pad_len(max(len(e["tokens"]) for e in corpus),
                        self.cfg.pad_multiple)
-        for lo in range(0, len(corpus) - batch + 1, batch):
-            idx = np.arange(lo, lo + batch)
-            yield _lm_batch(corpus, idx, pad)
+        for lo in range(0, len(corpus), batch):
+            idx = np.arange(lo, min(lo + batch, len(corpus)))
+            b = _lm_batch(corpus, idx, pad)
+            if idx.size < batch:
+                fill = batch - idx.size
+                b = {k: np.concatenate(
+                        [v, np.zeros((fill, pad), v.dtype)], axis=0)
+                     for k, v in b.items()}
+            yield b
+
+
+class _PrefetchWorker:
+    """Bounded-queue background batch builder behind
+    ``AddaxPipeline.stream``.  Calls ``pipeline.step_batches`` (late-bound,
+    so instrumented pipelines keep working), pushes ``(step, b0, b1)`` in
+    step order, then a ``None`` sentinel.  ``close()`` makes the thread
+    exit promptly even when the queue is full."""
+
+    def __init__(self, pipeline, start: int, stop: int, depth: int):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Exception | None = None
+        self._thread = threading.Thread(
+            target=self._run, args=(pipeline, start, stop), daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self, pipeline, start: int, stop: int):
+        try:
+            for s in range(start, stop):
+                item = (s, *pipeline.step_batches(s))
+                if not self._put(item):
+                    return
+        except Exception as e:          # surfaced by raise_if_failed()
+            self._err = e
+        finally:
+            self._put(None)
+
+    def get(self):
+        while True:
+            try:
+                return self._q.get(timeout=0.1)
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    # crashed before the sentinel made it into the queue
+                    self.raise_if_failed()
+                    return None
+
+    def raise_if_failed(self):
+        if self._err is not None:
+            raise RuntimeError("prefetch worker failed") from self._err
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
 
 
 def auto_plan(corpus: list[dict], hbm_budget_bytes: int, n_layers: int,
               d_model: int, n_heads: int, k1: int = 4, k0: int = 6,
-              fo_quantile: float = 0.5) -> PipelineConfig:
+              fo_quantile: float = 0.5, n_buckets: int = 1) -> PipelineConfig:
     """Appendix D.6 automated: pick L_T from the length distribution, then
     back off the quantile until the FO activation-memory model fits the
-    budget.  Falls back to Addax-WA when even the full length fits."""
+    budget.  Falls back to Addax-WA when even the full length fits.
+    ``n_buckets > 1`` additionally spreads the FO stream over a
+    ``memory_model``-validated width ladder (the chosen L_T is the top
+    edge; see ``assignment.choose_bucket_edges``)."""
     lengths = np.array([len(e["tokens"]) for e in corpus])
     l_max = int(lengths.max())
     if asg.memory_model(l_max, k1, n_layers, d_model,
                         n_heads) <= hbm_budget_bytes:
-        return PipelineConfig(k0=k0, k1=k1, l_t=None)
+        return PipelineConfig(k0=k0, k1=k1, l_t=None, n_buckets=n_buckets)
     q = fo_quantile
     while q > 0.05:
         l_t = asg.choose_l_t(lengths, q)
         if (l_t < l_max and l_t >= int(lengths.min()) and
                 asg.memory_model(l_t, k1, n_layers, d_model,
                                  n_heads) <= hbm_budget_bytes):
-            return PipelineConfig(k0=k0, k1=k1, l_t=l_t)
+            return PipelineConfig(k0=k0, k1=k1, l_t=l_t,
+                                  n_buckets=n_buckets)
         q -= 0.05
-    return PipelineConfig(k0=k0, k1=k1, l_t=int(lengths.min()))
+    return PipelineConfig(k0=k0, k1=k1, l_t=int(lengths.min()),
+                          n_buckets=n_buckets)

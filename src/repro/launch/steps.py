@@ -62,6 +62,9 @@ class CellOptions:
     grad_clip: float | None = None     # global-norm clip on the FO gradient
     spsa_mode: str = "chain"           # chain (paper) | fresh (ablation;
                                        # required by DP-sharded banks)
+    fo_buckets: tuple[int, ...] = ()   # FO bucket-ladder widths for train
+                                       # cells (streaming runtime); () =
+                                       # single width from plan_train_cell
     replicate_small_kv: bool = True    # kv_heads unsharded when < TP degree
                                        # (Megatron GQA practice; False forces
                                        # GSPMD padding — §Perf ablation)
@@ -172,8 +175,14 @@ class CellPlan:
 # Train cells
 # --------------------------------------------------------------------------
 
-def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
-                opts: CellOptions) -> CellPlan:
+def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
+                      opts: CellOptions,
+                      fo_widths: tuple[int, ...]) -> list[CellPlan]:
+    """Shared train-cell assembly: one engine step + ONE compiled-step
+    cache, lowered against one abstract batch pair per FO width.  All
+    returned plans share ``jitted`` (an ``engine.StepCache``), so a
+    bucketed ``batch1`` compiles once per width and never retraces —
+    the streaming runtime's step-layer contract."""
     ctx = build_ctx(bundle, mesh, opts)
     data_axes = data_axes_of(mesh)
     loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
@@ -189,50 +198,89 @@ def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
     lr_fn = schedules.constant(opts.lr)
 
     cell = plan_train_cell(bundle.arch, shape)
-    b0, b1 = bundle.train_batches(shape, dtype=opts.param_dtype)
+    b0, _ = bundle.train_batches(shape, dtype=opts.param_dtype)
+    b1_by_width = {w: bundle._batch_struct(cell.k1, w, opts.param_dtype)
+                   for w in fo_widths}
 
     abstract_params = bundle.abstract_params(opts.param_dtype)
     params_sh = _sharding_tree(bundle.axes(), ctx, mesh, abstract_params)
     b0_sh = _batch_shardings(b0, mesh, data_axes)
-    b1_sh = _batch_shardings(b1, mesh, data_axes)
+    b1_sh = _batch_shardings(next(iter(b1_by_width.values())), mesh,
+                             data_axes)   # width-independent specs
 
     # every optimizer is one engine instantiation; only the arg plumbing
     # (batch arity, moments state) differs per StepSpec
     spec = engine.STEP_SPECS.get(opts.optimizer)
     if spec is None:
         raise ValueError(opts.optimizer)
+    if not spec.two_stream and spec.stream == "zo":
+        # ZO-only steps (mezo) never consume batch1: every FO width would
+        # lower the identical signature — collapse to one plan
+        fo_widths = fo_widths[:1]
+        b1_by_width = {w: b1_by_width[w] for w in fo_widths}
     step = engine.make_step(opts.optimizer, loss_fn, acfg, lr_fn,
                             backend=backend)
     idx = jax.ShapeDtypeStruct((), jnp.uint32)
-    if spec.two_stream:
-        batch_args, batch_sh = (b0, b1), (b0_sh, b1_sh)
-    elif spec.stream == "zo":
-        batch_args, batch_sh = (b0,), (b0_sh,)
-    else:
-        batch_args, batch_sh = (b1,), (b1_sh,)
-    # a variance-adaptive bank adds the replicated traced n_active scalar
-    # right after step_idx (engine.make_step signature contract)
-    if engine.bank_schedule_of(acfg, spec):
-        batch_args = (jax.ShapeDtypeStruct((), jnp.int32),) + batch_args
-        batch_sh = (_repl(mesh),) + batch_sh
 
+    def batch_plumbing(b1):
+        if spec.two_stream:
+            batch_args, batch_sh = (b0, b1), (b0_sh, b1_sh)
+        elif spec.stream == "zo":
+            batch_args, batch_sh = (b0,), (b0_sh,)
+        else:
+            batch_args, batch_sh = (b1,), (b1_sh,)
+        # a variance-adaptive bank adds the replicated traced n_active
+        # scalar right after step_idx (engine.make_step signature contract)
+        if engine.bank_schedule_of(acfg, spec):
+            batch_args = (jax.ShapeDtypeStruct((), jnp.int32),) + batch_args
+            batch_sh = (_repl(mesh),) + batch_sh
+        return batch_args, batch_sh
+
+    batch_sh = batch_plumbing(next(iter(b1_by_width.values())))[1]
     if spec.moments:
         from repro.core.adam import init_adam_state
         state = jax.eval_shape(init_adam_state, abstract_params)
         state_sh = {"m": params_sh, "v": params_sh}
         in_sh = (params_sh, state_sh, _repl(mesh)) + batch_sh
-        args = (abstract_params, state, idx) + batch_args
-        jitted = jax.jit(step, in_shardings=in_sh,
-                         out_shardings=(params_sh, state_sh, None),
-                         donate_argnums=(0, 1))
+        jitted = engine.StepCache(step, donate_argnums=(0, 1),
+                                  in_shardings=in_sh,
+                                  out_shardings=(params_sh, state_sh,
+                                                 None))
+        head = (abstract_params, state, idx)
     else:
         in_sh = (params_sh, _repl(mesh)) + batch_sh
-        args = (abstract_params, idx) + batch_args
-        jitted = jax.jit(step, in_shardings=in_sh,
-                         out_shardings=(params_sh, None),
-                         donate_argnums=(0,))
-    return CellPlan(bundle.arch.arch_id, shape, "train", jitted, args,
-                    notes={"cell": dataclasses.asdict(cell)})
+        jitted = engine.StepCache(step, donate_argnums=(0,),
+                                  in_shardings=in_sh,
+                                  out_shardings=(params_sh, None))
+        head = (abstract_params, idx)
+
+    plans = []
+    for w in fo_widths:
+        args = head + batch_plumbing(b1_by_width[w])[0]
+        plans.append(CellPlan(
+            bundle.arch.arch_id, shape, "train", jitted, args,
+            notes={"cell": dataclasses.asdict(cell), "fo_width": w}))
+    return plans
+
+
+def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
+                opts: CellOptions) -> CellPlan:
+    cell = plan_train_cell(bundle.arch, shape)
+    return _plan_train_cells(bundle, shape, mesh, opts, (cell.l_t,))[0]
+
+
+def plan_train_buckets(bundle: Bundle, shape: ShapeCfg, mesh,
+                       opts: CellOptions) -> list[CellPlan]:
+    """Per-bucket train cells for the streaming runtime: one ``CellPlan``
+    per FO width in ``opts.fo_buckets`` (ascending; defaults to the
+    single ``plan_train_cell`` width), all sharing one compiled-step
+    cache — compiling every bucket up front means the bucketed stream
+    never traces inside the training loop."""
+    widths = tuple(sorted(set(opts.fo_buckets))) or None
+    if widths is None:
+        cell = plan_train_cell(bundle.arch, shape)
+        widths = (cell.l_t,)
+    return _plan_train_cells(bundle, shape, mesh, opts, widths)
 
 
 # --------------------------------------------------------------------------

@@ -30,6 +30,26 @@ def main(argv=None):
     p.add_argument("--k1", type=int, default=4)
     p.add_argument("--l-t", type=int, default=None,
                    help="length threshold; omit for Addax-WA")
+    p.add_argument("--buckets", type=int, default=1,
+                   help="FO width-ladder size: the short stream pads to "
+                        "its bucket's edge instead of L_T (1 = paper "
+                        "two-width split; see docs/data-pipeline.md)")
+    p.add_argument("--pack", action="store_true",
+                   help="first-fit sequence packing of the FO stream "
+                        "(segment-aware attention keeps examples "
+                        "isolated; decoder family + dense attention only)")
+    p.add_argument("--prefetch", type=int, default=0,
+                   help="background batch-prefetch depth (0 = build "
+                        "synchronously; the stream is bitwise-identical "
+                        "either way)")
+    p.add_argument("--async-window", type=int, default=1,
+                   help="max in-flight dispatched steps (1 = classic "
+                        "synchronous loop; >1 overlaps host and device "
+                        "work — the trajectory is bitwise-identical)")
+    p.add_argument("--sched-lag", type=int, default=1,
+                   help="fixed BankSchedule feedback lag in steps "
+                        "(window-independent; raise it to overlap "
+                        "scheduled-bank runs)")
     p.add_argument("--lr", type=float, default=1e-4)
     p.add_argument("--alpha", type=float, default=5e-4)
     p.add_argument("--eps", type=float, default=1e-3)
@@ -98,10 +118,12 @@ def main(argv=None):
         n_examples=args.n_examples, max_len=args.max_len, seed=args.seed))
 
     pipe = AddaxPipeline(corpus, PipelineConfig(
-        k0=args.k0, k1=args.k1, l_t=args.l_t, seed=args.seed))
+        k0=args.k0, k1=args.k1, l_t=args.l_t, seed=args.seed,
+        n_buckets=args.buckets, pack=args.pack))
     print(f"[data] {len(corpus)} examples, L_max={pipe.assignment.l_max}, "
           f"L_T={pipe.assignment.l_t}, |D0|={pipe.assignment.d0.size}, "
-          f"|D1|={pipe.assignment.d1.size}")
+          f"|D1|={pipe.assignment.d1.size}, "
+          f"fo_widths={pipe.fo_widths}, pack={args.pack}")
 
     acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
                        k0=args.k0, k1=args.k1, l_t=args.l_t,
@@ -159,7 +181,10 @@ def main(argv=None):
         TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                         ckpt_every=args.ckpt_every,
                         log_every=args.log_every,
-                        metrics_path=args.metrics),
+                        metrics_path=args.metrics,
+                        prefetch=args.prefetch,
+                        async_window=args.async_window,
+                        sched_lag=args.sched_lag),
         opt_state=opt_state, place=place)
 
     hist = out["history"]
@@ -168,7 +193,7 @@ def main(argv=None):
     last = next(h[key] for h in reversed(hist) if key in h)
     print(f"[done] step={out['step']} {key}: {first:.4f} -> {last:.4f} "
           f"stragglers={len(out['stragglers'])} "
-          f"preempted={out['preempted']}")
+          f"preempted={out['preempted']} compiles={out['n_compiles']}")
     if args.metrics:
         print(f"[metrics] {args.metrics}")
     return 0

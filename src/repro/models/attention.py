@@ -99,21 +99,36 @@ def _masked_softmax(scores: jax.Array, mask: jax.Array, cap,
 
 def attention_dense(params: dict, x: jax.Array, cfg: AttnCfg, *,
                     kv_x: jax.Array | None = None,
-                    window=None, q_offset=0, ctx=NULL_CTX) -> jax.Array:
+                    window=None, q_offset=0, ctx=NULL_CTX,
+                    segments: jax.Array | None = None,
+                    positions: jax.Array | None = None) -> jax.Array:
     """Materialized-scores attention (training path).
 
     ``window`` may be None (full), a python int, or a traced scalar (per-
     layer window inside a scanned body — gemma2).  ``q_offset`` shifts query
     positions (prefix-decoder setups).
-    """
+
+    ``segments`` / ``positions`` (both (B, S) int32, self-attention only)
+    support *packed* batches: tokens attend only within their own segment
+    (causal AND ``seg_q == seg_kv`` — a token of one packed example can
+    never see another's), and RoPE uses the per-example restarted
+    ``positions`` so each example is encoded exactly as if it sat alone
+    in its row.  Segments must be row-contiguous (the packer's layout):
+    causality then stays the plain row-index order and the sliding-window
+    offset is segment-local by construction.  With ``segments=None`` the
+    computation is unchanged, bit for bit."""
     self_attn = kv_x is None
     kv_x = x if self_attn else kv_x
     B, Sq, _ = x.shape
     Skv = kv_x.shape[1]
     q_pos = q_offset + jnp.arange(Sq)
     kv_pos = jnp.arange(Skv)
+    if positions is not None:
+        q_positions, kv_positions = q_offset + positions, positions
+    else:
+        q_positions, kv_positions = q_pos[None, :], kv_pos[None, :]
     q, k, v = project_qkv(params, x, kv_x, cfg,
-                          q_pos[None, :], kv_pos[None, :], ctx)
+                          q_positions, kv_positions, ctx)
     scale = 1.0 / np.sqrt(cfg.head_dim)
     acc_t = jnp.float32 if cfg.scores_f32 else x.dtype
     scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
@@ -124,8 +139,14 @@ def attention_dense(params: dict, x: jax.Array, cfg: AttnCfg, *,
         mask = rel >= 0
         if window is not None:
             mask = mask & (rel < window)
-    probs = _masked_softmax(scores, mask[None, None, None], cfg.softcap,
-                            cfg.scores_f32)
+    if segments is not None:
+        if not self_attn:
+            raise ValueError("packed segments require self-attention")
+        mask = mask[None] & (segments[:, :, None] == segments[:, None, :])
+        mask = mask[:, None, None]
+    else:
+        mask = mask[None, None, None]
+    probs = _masked_softmax(scores, mask, cfg.softcap, cfg.scores_f32)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
     out = out.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
     y = jnp.einsum("bqh,hd->bqd", out, params["wo"])

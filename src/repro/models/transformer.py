@@ -132,8 +132,14 @@ def model_specs(cfg: TransformerCfg) -> dict:
 # --------------------------------------------------------------------------
 
 def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
-                ctx, impl: str) -> jax.Array:
+                ctx, impl: str, segments: jax.Array | None = None,
+                positions: jax.Array | None = None) -> jax.Array:
     if kind == "rwkv":
+        if segments is not None:
+            raise ValueError(
+                "packed batches (segments) are unsupported for rwkv "
+                "blocks: the recurrent state mixes across segment "
+                "boundaries (see docs/data-pipeline.md)")
         h = h + rwkv.time_mix(params["tm"], apply_norm(params["ln1"], h, cfg),
                               cfg.rwkv_cfg, ctx)
         h = h + rwkv.channel_mix(params["cm"],
@@ -143,6 +149,11 @@ def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
     acfg = cfg.attn_cfg()
     window = cfg.window_for(kind)
     a_in = apply_norm(params["ln1"], h, cfg)
+    if impl in ("chunked", "flash") and segments is not None:
+        raise ValueError(
+            f"packed batches (segments) need impl='dense', got "
+            f"{impl!r} — the blockwise kernels have no segment mask "
+            "(see docs/data-pipeline.md)")
     if impl == "chunked":
         a = attention.attention_chunked(params["attn"], a_in, acfg,
                                         window=window, block_q=cfg.block_q,
@@ -153,7 +164,9 @@ def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
                                       block_kv=cfg.block_kv, ctx=ctx)
     else:
         a = attention.attention_dense(params["attn"], a_in, acfg,
-                                      window=window, ctx=ctx)
+                                      window=window, ctx=ctx,
+                                      segments=segments,
+                                      positions=positions)
     if cfg.post_norms:
         a = apply_norm(params["ln1p"], a, cfg)
     h = h + a
@@ -177,13 +190,17 @@ def _maybe_remat(fn, cfg: TransformerCfg):
 
 
 def run_stack(params: dict, h: jax.Array, cfg: TransformerCfg,
-              ctx=NULL_CTX, impl: str = "dense") -> jax.Array:
-    """Scan the layer groups over the residual stream."""
+              ctx=NULL_CTX, impl: str = "dense",
+              segments: jax.Array | None = None,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Scan the layer groups over the residual stream.  ``segments`` /
+    ``positions`` (packed batches) are closed over by the scanned body —
+    every layer sees the same segment isolation."""
 
     def body(h, group_params):
         for i, kind in enumerate(cfg.layer_pattern):
             h = apply_block(group_params[f"{i}:{kind}"], h, kind, cfg, ctx,
-                            impl)
+                            impl, segments=segments, positions=positions)
         # the carry is what remat saves per layer group: under Megatron
         # sequence parallelism it is sharded on seq ("seq_res" rule)
         h = ctx.constrain(h, "batch", "seq_res", "embed")
@@ -211,11 +228,20 @@ def _head(params: dict, cfg: TransformerCfg):
 def loss_fn(params: dict, batch: dict, cfg: TransformerCfg,
             ctx=NULL_CTX, impl: str = "dense") -> jax.Array:
     """batch: tokens (B,S_text), targets/mask (B, prefix+S_text),
-    optional prefix_embeds (B,P,d)."""
+    optional prefix_embeds (B,P,d).  Packed batches additionally carry
+    segments/positions (B,S_text) — per-example attention isolation and
+    RoPE restart (``docs/data-pipeline.md``); requires ``impl='dense'``
+    and no prefix."""
+    segments = batch.get("segments")
+    if segments is not None and cfg.prefix_len:
+        raise ValueError(
+            "packed batches are unsupported with a frontend prefix "
+            "(targets/mask offsets assume one example per row)")
     h = embed_tokens(params, batch["tokens"], cfg,
                      batch.get("prefix_embeds"))
     h = ctx.constrain(h, "batch", "seq", "embed")
-    h = run_stack(params, h, cfg, ctx, impl)
+    h = run_stack(params, h, cfg, ctx, impl, segments=segments,
+                  positions=batch.get("positions"))
     h = apply_norm(params["final_norm"], h, cfg)
     head, layout = _head(params, cfg)
     return lm_loss(h, head, batch["targets"], batch["mask"],

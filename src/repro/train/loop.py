@@ -1,19 +1,49 @@
-"""Training loop: checkpoint/restart, preemption, straggler logging,
-metrics JSONL — the piece that has to survive a 1000-node fleet.
+"""Training loop: async dispatch window, checkpoint/restart, preemption,
+straggler logging, metrics JSONL — the piece that has to survive a
+1000-node fleet.
 
-The loop is device-layout agnostic: it takes an already-jitted step
+The loop is device-layout agnostic: it takes an already-built step
 function plus a batch *placer* (identity on CPU; ``device_put`` with batch
 shardings under a mesh).  All restart-relevant state is
 ``(params[, opt_state], step)`` — the data stream and the ZO perturbations
 replay from ``(seed, step)`` alone (see ``repro.data.pipeline`` /
 ``repro.core.rng``), so checkpoints stay tiny and elastic.
+
+**Streaming runtime** (docs/data-pipeline.md): the loop never calls
+``block_until_ready``.  Steps are *dispatched* and pushed onto a bounded
+in-flight deque of ``cfg.async_window`` entries; host work (batch
+building — optionally on a prefetch thread, metric processing, logging)
+overlaps device compute, and each step's metrics are *drained* (one
+``device_get``, the only host sync) at lag <= W.  Everything that
+consumes metrics is lag-tolerant:
+
+* the **straggler watchdog** times the drain waits and emits standalone
+  records for events on non-``log_every`` steps;
+* the **DP moments-checksum tripwire** raises at drain time — at most W
+  steps after the divergence, and always *before* a checkpoint, because
+  checkpoints (and eval, and preemption) force a full drain first, so a
+  diverged state never reaches disk;
+* **BankSchedule feedback** consumes the bank statistics of step
+  ``t - cfg.sched_lag`` before dispatching step ``t`` — a *fixed* lag, so
+  the ``n_active`` trajectory (and therefore the whole run) is
+  bitwise-independent of the async window and of prefetch depth
+  (``sched_lag=1``, the default, reproduces the classic synchronous
+  feedback and caps the effective window at 1; raise it to overlap
+  scheduled-bank runs).
+
+Because dispatch order, step inputs, and donation are identical for
+every ``(prefetch, async_window)`` setting, the (params, opt_state)
+trajectory is bitwise-identical to the synchronous loop — property-tested
+in ``tests/test_stream_runtime.py``, including restart mid-window.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
+import time
 from typing import Any, Callable
 
 import jax
@@ -38,12 +68,17 @@ class TrainLoopConfig:
     eval_every: int | None = None
     keep_ckpts: int = 3
     straggler_threshold: float = 2.5
+    prefetch: int = 0        # background batch-prefetch depth (0 = sync)
+    async_window: int = 1    # max in-flight dispatched steps (1 = classic
+                             # synchronous loop: drain right after dispatch)
+    sched_lag: int = 1       # fixed BankSchedule feedback lag in steps —
+                             # window-independent by construction
 
 
 def _to_host_metric(x):
     """Scalar metrics -> float; vector metrics (e.g. a per-direction g0
     bank) -> list of floats, kept JSONL-serializable."""
-    arr = np.asarray(jax.device_get(x))
+    arr = np.asarray(x)
     if arr.size == 1:
         return float(arr.reshape(()))
     return [float(v) for v in arr.ravel()]
@@ -78,7 +113,7 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
                  guard: PreemptionGuard | None = None,
                  jit: bool = True) -> dict:
     """Run (or resume) training.  Returns {params, opt_state, step,
-    history, stragglers, preempted}."""
+    history, stragglers, preempted, n_compiles}."""
     store = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
         if cfg.ckpt_dir else None
     ckpt = AsyncCheckpointer(store) if store else None
@@ -102,77 +137,136 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
             opt_state, _ = opt_store.restore(opt_state,
                                              step=meta["step"])
 
-    step_fn = opt.step_fn
-    if jit:
-        donate = (0, 1) if opt.has_state else (0,)
-        step_fn = jax.jit(step_fn, donate_argnums=donate)
+    # per-bucket compiled-step cache: one compile per distinct batch-widths
+    # signature (a bucketed FO stream traces once per ladder edge), with
+    # the compile count reported in the result
+    cache = opt.make_step_cache() if jit else None
+    step_fn = cache if jit else opt.step_fn
 
     # variance-adaptive bank: host-side scheduler state feeding the traced
     # n_active argument; deliberately not checkpointed (re-adapts within
     # ~1/(1-ema) steps of a restart, keeps restart state (params, step))
     sched = getattr(opt, "bank_schedule", None)
     sched_state = sched.init() if sched else None
+    sched_lag = max(1, cfg.sched_lag)
+    sched_applied = start_step - 1       # last step folded into the state
+    bank_stats: dict[int, tuple[float, float]] = {}
 
+    window = max(1, cfg.async_window)
+    inflight: collections.deque = collections.deque()  # (step, metrics)
     preempted = False
     completed = start_step - 1          # last fully-executed step
-    for step in range(start_step, cfg.total_steps):
-        if guard.should_stop():
-            preempted = True
-            break
-        b0, b1 = pipeline.step_batches(step)
-        idx = jnp.uint32(step)
-        watchdog.start()
-        if opt.two_stream:
-            args = (place(b0), place(b1))
-        else:
-            args = (place(b0 if opt.stream == "zo" else b1),)
-        if sched:
-            args = (jnp.int32(sched_state["n_active"]),) + args
-        if opt.has_state:
-            params, opt_state, metrics = step_fn(params, opt_state, idx,
-                                                 *args)
-        else:
-            params, metrics = step_fn(params, idx, *args)
-        jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
-        ev = watchdog.stop(step)
-        completed = step
-        if sched:
-            g0_mean, g0_std = jax.device_get(
-                (metrics["g0"], metrics["g0_std"]))
-            sched_state = sched.update(sched_state, float(g0_mean),
-                                       float(g0_std))
 
-        # DP moments tripwire (check_moments): the all-gathered
-        # per-shard checksums must be identical — divergence means the
-        # replicated-(m, v) contract broke (DESIGN.md §6) and
-        # continuing would silently train dp different models.  Checked
-        # every step (it is a dp-sized uint32 vector and the loop
-        # already blocks on the step), so a diverged state can never
-        # reach a checkpoint.
-        if "moments_checksum" in metrics:
-            ck = np.asarray(jax.device_get(
-                metrics["moments_checksum"])).ravel()
+    def drain_one():
+        """Block on the oldest in-flight step's metrics and process them:
+        straggler accounting, bank statistics, the DP moments tripwire,
+        and logging.  The ONE host sync of the streaming loop.
+
+        The watchdog observes dispatch-to-drain latency (not the drain
+        *wait*, which is ~0 whenever the step already finished): at a
+        steady window it is a constant ~W-step wall per step, so a slow
+        step still stands out, while the forced drains at checkpoint/
+        eval boundaries shrink the latency and never fake a straggler."""
+        nonlocal completed
+        s, mdev, t_dispatch = inflight.popleft()
+        mhost = jax.device_get(mdev)     # waits for step s to finish
+        ev = watchdog.observe(s, time.monotonic() - t_dispatch)
+        completed = s
+        if sched:
+            bank_stats[s] = (float(np.asarray(mhost["g0"])),
+                             float(np.asarray(mhost["g0_std"])))
+        # DP moments tripwire (check_moments): the all-gathered per-shard
+        # checksums must be identical — divergence means the
+        # replicated-(m, v) contract broke (DESIGN.md §6) and continuing
+        # would silently train dp different models.  Raised at most W
+        # steps after the fact; checkpoints drain first, so a diverged
+        # state can never reach disk.
+        if "moments_checksum" in mhost:
+            ck = np.asarray(mhost["moments_checksum"]).ravel()
             if np.unique(ck).size > 1:
                 raise RuntimeError(
                     f"replicated-(m, v) contract violated at step "
-                    f"{step}: per-shard moments checksums "
+                    f"{s}: per-shard moments checksums "
                     f"{ck.tolist()} diverged (DESIGN.md §6, "
                     "docs/engine.md)")
-        if step % cfg.log_every == 0 or step == cfg.total_steps - 1:
-            rec = {"step": step,
-                   **{k: _to_host_metric(v) for k, v in metrics.items()}}
+        if s % cfg.log_every == 0 or s == cfg.total_steps - 1:
+            rec = {"step": s, "t": time.monotonic(),
+                   **{k: _to_host_metric(v) for k, v in mhost.items()}}
             if ev:
                 rec["straggler"] = True
             logger.log(rec)
-        if eval_fn and cfg.eval_every and step and \
-                step % cfg.eval_every == 0:
-            logger.log({"step": step, **eval_fn(params)})
-        if ckpt and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
-            # opt first: params' DONE marker is what restore scans for, so
-            # a crash between the two leaves no params@N without opt@N
-            if opt_store:
-                opt_store.save(step, opt_state)
-            ckpt.save(step, params)
+        elif ev:
+            # a straggler on a non-log_every step still leaves a record
+            # (they used to vanish): standalone, with its evidence
+            logger.log({"step": s, "straggler": True,
+                        "duration_s": ev.duration, "ewma_s": ev.ewma})
+
+    def drain_all():
+        while inflight:
+            drain_one()
+
+    batch_iter = None
+    if cfg.prefetch > 0 and hasattr(pipeline, "stream"):
+        batch_iter = pipeline.stream(start_step, cfg.total_steps,
+                                     cfg.prefetch)
+    try:
+        for step in range(start_step, cfg.total_steps):
+            if guard.should_stop():
+                preempted = True
+                break
+            if batch_iter is not None:
+                _, b0, b1 = next(batch_iter)
+            else:
+                b0, b1 = pipeline.step_batches(step)
+            idx = jnp.uint32(step)
+            if opt.two_stream:
+                args = (place(b0), place(b1))
+            else:
+                args = (place(b0 if opt.stream == "zo" else b1),)
+            if sched:
+                # fixed-lag feedback: fold in the bank statistics of every
+                # step <= step - sched_lag (draining as far as needed) —
+                # the n_active fed to this dispatch is independent of the
+                # async window and prefetch depth
+                while sched_applied < step - sched_lag:
+                    s = sched_applied + 1
+                    while completed < s:
+                        drain_one()
+                    g0_mean, g0_std = bank_stats.pop(s)
+                    sched_state = sched.update(sched_state, g0_mean,
+                                               g0_std)
+                    sched_applied = s
+                args = (jnp.int32(sched_state["n_active"]),) + args
+            if opt.has_state:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     idx, *args)
+            else:
+                params, metrics = step_fn(params, idx, *args)
+            inflight.append((step, metrics, time.monotonic()))
+            # async_window=1 is the classic synchronous loop (drain right
+            # after dispatch); W>1 leaves up to W steps in flight and
+            # drains the overflow — the bounded window
+            limit = 0 if window == 1 else window
+            while len(inflight) > limit:
+                drain_one()
+            if eval_fn and cfg.eval_every and step and \
+                    step % cfg.eval_every == 0:
+                drain_all()              # history stays in step order
+                logger.log({"step": step, **eval_fn(params)})
+            if ckpt and cfg.ckpt_every and (step + 1) % cfg.ckpt_every == 0:
+                # full drain: the tripwire fires before anything is
+                # saved, and the donated params@step buffers are final
+                drain_all()
+                # opt first: params' DONE marker is what restore scans
+                # for, so a crash between the two leaves no params@N
+                # without opt@N
+                if opt_store:
+                    opt_store.save(step, opt_state)
+                ckpt.save(step, params)
+        drain_all()
+    finally:
+        if batch_iter is not None:
+            batch_iter.close()
 
     if ckpt:
         if completed >= start_step:     # never re-stamp a stale step
@@ -183,4 +277,5 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
     logger.close()
     return {"params": params, "opt_state": opt_state, "step": completed,
             "history": logger.history,
-            "stragglers": watchdog.events, "preempted": preempted}
+            "stragglers": watchdog.events, "preempted": preempted,
+            "n_compiles": cache.n_compiles if cache else None}

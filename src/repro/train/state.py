@@ -42,6 +42,16 @@ class OptimizerSetup:
     # n_active scalar after step_idx, driven host-side by the train loop
     bank_schedule: schedules.BankSchedule | None = None
 
+    def make_step_cache(self) -> engine.StepCache:
+        """Bind the step to the streaming runtime's per-bucket
+        compiled-step cache (``engine.StepCache``): donation follows
+        ``has_state``, one compile per distinct batch-widths signature
+        (a bucketed FO stream retraces at most once per ladder edge),
+        and the returned metrics stay device arrays — the train loop
+        drains them at lag <= its async window."""
+        donate = (0, 1) if self.has_state else (0,)
+        return engine.StepCache(self.step_fn, donate_argnums=donate)
+
 
 def build_optimizer(name: str, loss_fn: Callable, cfg: addax.AddaxConfig,
                     total_steps: int = 1000,

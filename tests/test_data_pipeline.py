@@ -1,13 +1,16 @@
 """Property tests for the L_T assignment (paper §3.1) and the two-stream
 pipeline: partition/disjointness invariants, deterministic restart
-replay, mask correctness."""
+replay, mask correctness — plus the streaming-runtime data layer
+(bucket ladder, vectorized batch assembly, prefetch, eval-tail
+padding; see docs/data-pipeline.md)."""
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import assignment as asg
-from repro.data.pipeline import AddaxPipeline, PipelineConfig, auto_plan
+from repro.data.pipeline import (AddaxPipeline, PipelineConfig, _lm_batch,
+                                 auto_plan)
 from repro.data.synthetic import (LENGTH_PROFILES, SyntheticTaskConfig,
                                   corpus_lengths, make_corpus)
 
@@ -97,6 +100,193 @@ def test_pipeline_rejects_degenerate_threshold():
     with pytest.raises(ValueError):
         AddaxPipeline(corpus, PipelineConfig(l_t=int(lens.min()) - 1,
                                              k0=1, k1=1))
+
+
+def _lm_batch_rows(corpus, idx, pad_to):
+    """The original per-row loop — kept as the bitwise oracle for the
+    vectorized ``_lm_batch``."""
+    b = len(idx)
+    tokens = np.zeros((b, pad_to), np.int32)
+    targets = np.zeros((b, pad_to), np.int32)
+    mask = np.zeros((b, pad_to), np.float32)
+    for r, i in enumerate(idx):
+        ex = corpus[int(i)]
+        t = ex["tokens"][:pad_to]
+        n = len(t)
+        tokens[r, :n] = t
+        targets[r, :n - 1] = t[1:]
+        lo = max(ex["completion_start"] - 1, 0)
+        mask[r, lo:n - 1] = 1.0
+    return {"tokens": tokens, "targets": targets, "mask": mask}
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 9),
+       pad=st.sampled_from([16, 64, 739, 800]))
+@settings(max_examples=30, deadline=None)
+def test_vectorized_lm_batch_bitwise(seed, b, pad):
+    """The vectorized batch assembly is bitwise-identical to the per-row
+    reference loop — truncation, target shift, and completion mask."""
+    corpus = make_corpus(SyntheticTaskConfig(name="multirc", vocab=500,
+                                             n_examples=64))
+    idx = np.random.default_rng(seed).integers(0, len(corpus), size=b)
+    fast, ref = _lm_batch(corpus, idx, pad), _lm_batch_rows(corpus, idx,
+                                                            pad)
+    for key in ref:
+        np.testing.assert_array_equal(fast[key], ref[key])
+
+
+def test_eval_batches_pads_tail_remainder():
+    """Regression: len(corpus) % batch != 0 used to silently drop the
+    tail.  Now the last batch is padded with zero-mask fill rows — every
+    example evaluated exactly once, every batch the same shape."""
+    corpus = make_corpus(SyntheticTaskConfig(name="sst2", vocab=100,
+                                             n_examples=10))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=1, k1=1, l_t=None))
+    batches = list(pipe.eval_batches(corpus, 4))
+    assert len(batches) == 3
+    assert all(b["tokens"].shape[0] == 4 for b in batches)
+    pad = batches[0]["tokens"].shape[1]
+    per_example = sum(
+        float(_lm_batch_rows(corpus, [i], pad)["mask"].sum())
+        for i in range(10))
+    assert sum(float(b["mask"].sum()) for b in batches) == per_example
+    # the two fill rows contribute nothing
+    assert np.all(batches[-1]["mask"][2:] == 0.0)
+    assert np.all(batches[-1]["tokens"][2:] == 0)
+    # smaller-than-batch corpora yield one padded batch, not zero batches
+    short = list(pipe.eval_batches(corpus[:3], 8))
+    assert len(short) == 1 and short[0]["tokens"].shape[0] == 8
+
+
+@given(lengths=st.lists(st.integers(1, 500), min_size=1, max_size=120),
+       n_buckets=st.integers(1, 5))
+@settings(max_examples=40, deadline=None)
+def test_bucket_ladder_partition_property(lengths, n_buckets):
+    """The ladder covers the stream: every index lands in exactly one
+    bucket, each example fits under its bucket's edge, and edges ascend
+    with the top edge covering the max length."""
+    lengths = np.array(lengths)
+    idx = np.arange(lengths.size)
+    top = int(lengths.max())
+    edges = asg.choose_bucket_edges(lengths, n_buckets, top,
+                                    pad_multiple=8)
+    assert edges[-1] == top and list(edges) == sorted(set(edges))
+    ladder = asg.build_ladder(lengths, idx, edges)
+    seen = np.concatenate(ladder.buckets)
+    assert sorted(seen) == list(idx)                       # partition
+    prev = 0
+    for e, bucket in zip(ladder.edges, ladder.buckets):
+        assert np.all(lengths[bucket] <= e)
+        assert np.all(lengths[bucket] > prev)
+        prev = e
+
+
+def test_single_bucket_stream_matches_legacy_sampling():
+    """n_buckets=1 is the paper split AND the bitwise-compatible legacy
+    stream: same widths, same draws (no extra rng consumption)."""
+    corpus = make_corpus(SyntheticTaskConfig(name="rte", vocab=100,
+                                             n_examples=120))
+    lens = corpus_lengths(corpus)
+    l_t = int(np.median(lens))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=2, k1=3, l_t=l_t,
+                                                seed=11))
+    assert pipe.fo_widths == (pipe.l_short,)
+    for step in (0, 9, 57):
+        rng = pipe._rng(step)
+        i0 = rng.choice(pipe.assignment.d0, size=2, replace=True)
+        i1 = rng.choice(pipe.assignment.d1, size=3, replace=True)
+        b0, b1 = pipe.step_batches(step)
+        np.testing.assert_array_equal(
+            b0["tokens"], _lm_batch_rows(corpus, i0, pipe.s_full)["tokens"])
+        np.testing.assert_array_equal(
+            b1["tokens"],
+            _lm_batch_rows(corpus, i1, pipe.l_short)["tokens"])
+
+
+def test_wa_with_small_s_full_truncates_not_raises():
+    """Regression (ladder introduction): Addax-WA with an explicit
+    ``s_full`` below the corpus max means *truncation* (matching
+    ``_lm_batch``'s ``tokens[:pad]``), never a construction error."""
+    corpus = make_corpus(SyntheticTaskConfig(name="rte", vocab=100,
+                                             n_examples=64))
+    assert corpus_lengths(corpus).max() > 128
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=1, k1=1, l_t=None,
+                                                s_full=128))
+    b0, b1 = pipe.step_batches(0)
+    assert b0["tokens"].shape[1] == 128
+    assert b1["tokens"].shape[1] == 128
+    # bucketed WA clamps too: every ladder edge stays <= the pad width
+    pipeb = AddaxPipeline(corpus, PipelineConfig(k0=1, k1=2, l_t=None,
+                                                 s_full=128, n_buckets=3))
+    assert max(pipeb.fo_widths) == 128
+
+
+def test_bucketed_stream_widths_and_replay():
+    """n_buckets>1: every emitted FO width is a ladder edge, widths vary
+    across steps, and the bucketed stream replays deterministically."""
+    corpus = make_corpus(SyntheticTaskConfig(name="multirc", vocab=200,
+                                             n_examples=240))
+    cfg = PipelineConfig(k0=2, k1=3, l_t=400, seed=5, n_buckets=4)
+    p1, p2 = AddaxPipeline(corpus, cfg), AddaxPipeline(corpus, cfg)
+    widths = set()
+    for step in range(24):
+        a0, a1 = p1.step_batches(step)
+        b0, b1 = p2.step_batches(step)
+        np.testing.assert_array_equal(a1["tokens"], b1["tokens"])
+        widths.add(a1["tokens"].shape[1])
+        assert a1["tokens"].shape[1] in p1.fo_widths
+        # bucket membership: drawn examples actually fit the edge
+        assert a1["tokens"].shape[1] >= (a1["tokens"] != 0).sum(1).max()
+    assert len(widths) > 1
+
+
+@pytest.mark.parametrize("prefetch", [1, 4])
+def test_prefetch_stream_bitwise(prefetch):
+    """The background-prefetched stream is bitwise-identical to the
+    synchronous one (pure function of (seed, step)), at any depth."""
+    corpus = make_corpus(SyntheticTaskConfig(name="multirc", vocab=200,
+                                             n_examples=160))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=2, k1=2, l_t=400,
+                                                seed=3, n_buckets=3))
+    sync = list(pipe.stream(2, 18, 0))
+    pre = list(pipe.stream(2, 18, prefetch))
+    assert [s for s, *_ in sync] == [s for s, *_ in pre]
+    for (sa, a0, a1), (_, b0, b1) in zip(sync, pre):
+        for key in a0:
+            np.testing.assert_array_equal(a0[key], b0[key])
+        for key in a1:
+            np.testing.assert_array_equal(a1[key], b1[key])
+
+
+def test_prefetch_worker_propagates_errors():
+    corpus = make_corpus(SyntheticTaskConfig(name="sst2", vocab=100,
+                                             n_examples=32))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=1, k1=1, l_t=None))
+
+    def boom(step):
+        if step >= 3:
+            raise RuntimeError("corrupt shard")
+        return AddaxPipeline.step_batches(pipe, step)
+    pipe.step_batches = boom
+    it = pipe.stream(0, 8, prefetch=2)
+    with pytest.raises(RuntimeError, match="prefetch worker failed"):
+        list(it)
+
+
+def test_plan_bucket_edges_respects_memory_budget():
+    """The memory_model-driven ladder caps its top edge at the widest
+    width whose FO activation estimate fits the budget."""
+    lengths = np.arange(16, 512, 7)
+    budget = asg.memory_model(256, 4, 12, 768, 12)
+    edges = asg.plan_bucket_edges(lengths, 3, batch=4, n_layers=12,
+                                  d_model=768, n_heads=12,
+                                  hbm_budget_bytes=budget)
+    assert asg.memory_model(edges[-1], 4, 12, 768, 12) <= budget
+    assert edges[-1] >= 248                   # not pathologically tight
+    rich = asg.plan_bucket_edges(lengths, 3, batch=4, n_layers=12,
+                                 d_model=768, n_heads=12,
+                                 hbm_budget_bytes=int(1e18))
+    assert rich[-1] >= int(lengths.max())
 
 
 def test_auto_plan_backs_off_quantile():

@@ -1,0 +1,359 @@
+"""Streaming host runtime (docs/data-pipeline.md): the bucketed/packed
+two-stream pipeline and the async-dispatch train loop.
+
+The load-bearing contract is *bitwise stream determinism*: because
+batches and ZO perturbations are pure functions of ``(seed, step)``,
+prefetching, async dispatch windows, bucket ladders, and restart all
+reorder host work without ever changing a value.  These tests pin it:
+
+* prefetch 0 vs 4 and async window W in {1, 4} produce identical
+  ``(params, opt_state)`` trajectories — for addax, for addax-adam with
+  a variance-adaptive ``bank_schedule`` (fixed-lag feedback), and for
+  the DP ``check_moments`` tripwire path;
+* restart mid-window (preemption with W=4 in-flight steps) + resume ==
+  the uninterrupted run, bit for bit;
+* the per-bucket compiled-step cache (``engine.StepCache``) traces once
+  per FO width and never retraces;
+* packed FO batches are loss-equivalent to the unpacked per-example
+  reference (segment-aware attention leaks nothing across examples),
+  and packing is rejected loudly where isolation cannot hold;
+* stragglers on non-``log_every`` steps leave standalone records.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.addax import AddaxConfig
+from repro.core.engine import StepCache
+from repro.data.pipeline import AddaxPipeline, PipelineConfig
+from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+from repro.distributed.fault_tolerance import PreemptionGuard
+from repro.train.loop import TrainLoopConfig, run_training
+from repro.train.state import build_optimizer
+
+
+def lm_toy_loss(params, batch):
+    """Cheap LM-batch-shaped loss: exercises the full loop machinery
+    (two streams, variable FO widths, masks) without a transformer."""
+    x = batch["tokens"].astype(jnp.float32)
+    t = batch["targets"].astype(jnp.float32)
+    m = batch["mask"].astype(jnp.float32)
+    h = jnp.tanh(x * params["w"] + params["b"])
+    return jnp.sum((h - jnp.tanh(t * 0.01)) ** 2 * m) / (jnp.sum(m) + 1.0)
+
+
+def _toy_params():
+    return {"w": jnp.full((1, 1), 0.01, jnp.float32),
+            "b": jnp.zeros((1, 1), jnp.float32)}
+
+
+def _corpus(n=160, seed=0, name="rte", max_len=64):
+    return make_corpus(SyntheticTaskConfig(
+        name=name, task="copy", vocab=512, n_examples=n, min_len=12,
+        max_len=max_len, seed=seed))
+
+
+def _pipe(corpus, l_t=32, n_buckets=1, pack=False, seed=0, k0=2, k1=2):
+    return AddaxPipeline(corpus, PipelineConfig(
+        k0=k0, k1=k1, l_t=l_t, seed=seed, n_buckets=n_buckets, pack=pack))
+
+
+# the bit-pattern comparator shared with the fig_host_overlap live gate
+# (pytest runs from the repo root, so the benchmarks package is on path)
+from benchmarks.common import tree_bitwise as _tree_bitwise  # noqa: E402
+
+
+def _run(optimizer, corpus, *, prefetch=0, window=1, sched="", lag=1,
+         n_buckets=1, steps=10, n_dirs=None, ckpt=None, guard=None,
+         total=None, log_every=1):
+    pipe = _pipe(corpus, n_buckets=n_buckets)
+    acfg = AddaxConfig(lr=1e-2, alpha=1e-2, eps=1e-3,
+                       n_dirs=n_dirs if n_dirs is not None else
+                       (4 if sched else 1),
+                       bank_schedule=sched)
+    opt = build_optimizer(optimizer, lm_toy_loss, acfg)
+    params = _toy_params()
+    st = opt.init_state(params) if opt.has_state else None
+    out = run_training(
+        opt, params, pipe,
+        TrainLoopConfig(total_steps=total or steps, log_every=log_every,
+                        prefetch=prefetch, async_window=window,
+                        sched_lag=lag, ckpt_dir=ckpt,
+                        ckpt_every=4 if ckpt else 50),
+        opt_state=st, guard=guard)
+    return out
+
+
+# --------------------------------------------------------------------------
+# bitwise stream determinism
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("optimizer,sched", [
+    ("addax", ""),
+    ("addax-adam", "1:0.05:20.0:0.5"),
+])
+@pytest.mark.parametrize("prefetch,window", [(4, 1), (0, 4), (4, 4)])
+def test_stream_bitwise_vs_synchronous(optimizer, sched, prefetch, window):
+    """prefetch/async trajectories == the synchronous loop, params AND
+    opt_state, over >= 10 steps — including the variance-adaptive bank
+    (its fixed-lag feedback makes n_active window-independent)."""
+    corpus = _corpus()
+    ref = _run(optimizer, corpus, sched=sched)
+    out = _run(optimizer, corpus, prefetch=prefetch, window=window,
+               sched=sched)
+    assert _tree_bitwise(ref["params"], out["params"])
+    assert _tree_bitwise(ref["opt_state"], out["opt_state"])
+    # same metric stream too (records may drain late but never differ)
+    ref_n = [h.get("n_active") for h in ref["history"]]
+    out_n = [h.get("n_active") for h in out["history"]]
+    assert ref_n == out_n
+
+
+def test_stream_bitwise_with_raised_sched_lag():
+    """sched_lag > 1 (the overlapping scheduled-bank mode) is still
+    window-independent: W=1 and W=4 agree at equal lag."""
+    corpus = _corpus()
+    a = _run("addax", corpus, sched="1:0.05:20.0:0.5", lag=4, window=1)
+    b = _run("addax", corpus, sched="1:0.05:20.0:0.5", lag=4, window=4,
+             prefetch=2)
+    assert _tree_bitwise(a["params"], b["params"])
+
+
+def test_stream_bitwise_check_moments_dp1():
+    """The check_moments (DP tripwire) path through the async loop:
+    drained checksums, window {1, 4}, bitwise params + (m, v)."""
+    from repro.launch.mesh import _mk
+    from repro.train.state import build_dp_optimizer
+    corpus = _corpus()
+    mesh = _mk((1,), ("data",))
+    outs = {}
+    for prefetch, window in ((0, 1), (4, 4)):
+        pipe = _pipe(corpus)
+        acfg = AddaxConfig(lr=1e-2, alpha=1e-2, eps=1e-3, n_dirs=1)
+        opt = build_dp_optimizer("addax-adam", lm_toy_loss, acfg, mesh,
+                                 check_moments=True)
+        params = _toy_params()
+        out = run_training(
+            opt, params, pipe,
+            TrainLoopConfig(total_steps=10, log_every=1,
+                            prefetch=prefetch, async_window=window),
+            opt_state=opt.init_state(params))
+        outs[(prefetch, window)] = out
+    a, b = outs[(0, 1)], outs[(4, 4)]
+    assert _tree_bitwise(a["params"], b["params"])
+    assert _tree_bitwise(a["opt_state"], b["opt_state"])
+    assert all("moments_checksum" in h for h in a["history"])
+
+
+def test_restart_mid_window_resume(tmp_path):
+    """Preemption with W=4 steps in flight: the forced drain checkpoints
+    a fully-executed step, and the resumed run lands bitwise on the
+    uninterrupted trajectory."""
+    corpus = _corpus()
+    ref = _run("addax-adam", corpus, total=12,
+               ckpt=str(tmp_path / "ref"))
+
+    guard = PreemptionGuard(install_signal=False)
+    pipe = _pipe(corpus)
+    orig = pipe.step_batches
+
+    def hook(step):
+        if step >= 6:           # fires while earlier steps are in flight
+            guard.request()
+        return orig(step)
+    pipe.step_batches = hook
+    acfg = AddaxConfig(lr=1e-2, alpha=1e-2, eps=1e-3, n_dirs=1)
+    opt = build_optimizer("addax-adam", lm_toy_loss, acfg)
+    params = _toy_params()
+    cfg = TrainLoopConfig(total_steps=12, log_every=1, async_window=4,
+                          prefetch=2, ckpt_dir=str(tmp_path / "mid"),
+                          ckpt_every=4)
+    mid = run_training(opt, params, pipe, cfg,
+                       opt_state=opt.init_state(params), guard=guard)
+    assert mid["preempted"] and mid["step"] < 11
+
+    pipe2 = _pipe(corpus)
+    opt2 = build_optimizer("addax-adam", lm_toy_loss, acfg)
+    params2 = _toy_params()
+    fin = run_training(opt2, params2, pipe2, cfg,
+                       opt_state=opt2.init_state(params2))
+    assert fin["step"] == 11
+    assert _tree_bitwise(ref["params"], fin["params"])
+    assert _tree_bitwise(ref["opt_state"], fin["opt_state"])
+
+
+# --------------------------------------------------------------------------
+# per-bucket compiled-step cache
+# --------------------------------------------------------------------------
+
+def test_step_cache_compiles_once_per_width():
+    calls = []
+
+    def step(params, idx, batch):
+        calls.append(batch["tokens"].shape)
+        return jax.tree_util.tree_map(
+            lambda p: p + jnp.float32(batch["tokens"].shape[1]), params), \
+            {"loss": jnp.float32(0.0)}
+
+    cache = StepCache(step, donate_argnums=(0,))
+    params = {"w": jnp.zeros((2, 2))}
+
+    def mk(width):
+        return {"tokens": np.zeros((2, width), np.int32)}
+
+    for width in (32, 64, 32, 64, 32, 32, 64):
+        params, _ = cache(params, jnp.uint32(0), mk(width))
+    assert cache.n_compiles == 2            # one trace per distinct width
+    assert sorted(set(cache.keys)) == [(((2, 32),)), (((2, 64),))]
+
+
+def test_bucketed_loop_compiles_once_per_edge():
+    """A K-bucket FO ladder through the real loop: at most one compile
+    per ladder edge, and more than one width actually flows."""
+    corpus = _corpus(n=240, name="multirc", max_len=None)
+    pipe = _pipe(corpus, l_t=400, n_buckets=4)
+    assert len(pipe.fo_widths) > 1
+    acfg = AddaxConfig(lr=1e-2, alpha=1e-2, eps=1e-3, n_dirs=1)
+    opt = build_optimizer("addax", lm_toy_loss, acfg)
+    out = run_training(opt, _toy_params(), pipe,
+                       TrainLoopConfig(total_steps=24, log_every=6,
+                                       prefetch=2, async_window=4))
+    widths = {pipe.step_batches(s)[1]["tokens"].shape[1]
+              for s in range(24)}
+    assert len(widths) > 1                  # the ladder actually spreads
+    assert out["n_compiles"] == len(widths)  # once per seen width, cached
+
+
+def test_plan_train_buckets_shares_one_cache():
+    """launch.steps.plan_train_buckets: one CellPlan per FO width, all
+    sharing a single StepCache (bucketed batch1 never retraces)."""
+    from repro.configs.base import ShapeCfg
+    from repro.launch.mesh import _mk
+    from repro.launch.steps import CellOptions, plan_train_buckets
+    from repro.models.registry import get_bundle
+
+    bundle = get_bundle("tiny-100m", smoke=True)
+    mesh = _mk((1, 1), ("data", "model"))
+    shape = ShapeCfg("bucket_smoke", 128, 2, "train")
+    opts = CellOptions(optimizer="addax", fo_buckets=(64, 128))
+    plans = plan_train_buckets(bundle, shape, mesh, opts)
+    assert len(plans) == 2
+    assert plans[0].jitted is plans[1].jitted
+    assert isinstance(plans[0].jitted, StepCache)
+    w0 = plans[0].abstract_args[-1]["tokens"].shape[1]
+    w1 = plans[1].abstract_args[-1]["tokens"].shape[1]
+    assert {w0, w1} == {64, 128}
+
+
+# --------------------------------------------------------------------------
+# straggler standalone records
+# --------------------------------------------------------------------------
+
+def test_straggler_records_on_non_log_steps():
+    """Straggler events off the log_every grid used to vanish from the
+    metrics; they must emit standalone records with their evidence."""
+    corpus = _corpus()
+    pipe = _pipe(corpus)
+    acfg = AddaxConfig(lr=1e-2, alpha=1e-2, eps=1e-3, n_dirs=1)
+    opt = build_optimizer("addax", lm_toy_loss, acfg)
+    out = run_training(opt, _toy_params(), pipe,
+                       TrainLoopConfig(total_steps=16, log_every=10,
+                                       straggler_threshold=1e-12))
+    off_grid = [ev.step for ev in out["stragglers"]
+                if ev.step % 10 != 0 and ev.step != 15]
+    assert off_grid, "threshold=1e-12 must flag off-grid steps"
+    standalone = {h["step"] for h in out["history"]
+                  if h.get("straggler") and "duration_s" in h}
+    assert set(off_grid) <= standalone
+
+
+# --------------------------------------------------------------------------
+# packing correctness (the models/registry loss-mask audit)
+# --------------------------------------------------------------------------
+
+def _packed_setup():
+    from repro.models.registry import get_bundle
+    bundle = get_bundle("tiny-100m", smoke=True)
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=64, min_len=8, max_len=20))
+    corpus += make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=8, min_len=50, max_len=64, seed=9))
+    pipe = AddaxPipeline(corpus, PipelineConfig(
+        k0=2, k1=3, l_t=48, pack=True, seed=1))
+    return bundle, pipe
+
+
+@pytest.mark.slow
+def test_packed_loss_matches_unpacked_reference():
+    """A packed FO batch's loss equals the mask-weighted mean of each
+    example's *unpacked* single-row loss: segment-aware attention and the
+    per-segment targets/mask leak nothing across pack boundaries."""
+    bundle, pipe = _packed_setup()
+    _, pb = pipe.step_batches(0)
+    assert max(int(r.max()) for r in pb["segments"]) > 1  # actually packed
+    params = bundle.init_params(jax.random.key(0))
+    jb = {k: jnp.asarray(v) for k, v in pb.items()}
+    loss_packed = float(bundle.loss(params, jb))
+
+    width = pb["tokens"].shape[1]
+    num = den = 0.0
+    for r in range(pb["tokens"].shape[0]):
+        for seg in range(1, int(pb["segments"][r].max()) + 1):
+            sel = pb["segments"][r] == seg
+            n, off = int(sel.sum()), int(np.argmax(sel))
+            one = {"tokens": np.zeros((1, width), np.int32),
+                   "targets": np.zeros((1, width), np.int32),
+                   "mask": np.zeros((1, width), np.float32)}
+            for key in one:
+                one[key][0, :n] = pb[key][r, off:off + n]
+            li = float(bundle.loss(
+                params, {k: jnp.asarray(v) for k, v in one.items()}))
+            ms = float(one["mask"].sum())
+            num, den = num + li * ms, den + ms
+    assert den > 0
+    np.testing.assert_allclose(loss_packed, num / den, rtol=2e-6)
+
+
+def test_packed_batch_invariants():
+    """Packer output: segments contiguous 1..m then 0-padding, positions
+    restart per segment, no target crosses a boundary, mask only where
+    segments live."""
+    _, pipe = _packed_setup()
+    _, pb = pipe.step_batches(3)
+    for r in range(pb["tokens"].shape[0]):
+        seg = pb["segments"][r]
+        m = int(seg.max())
+        off = 0
+        for s in range(1, m + 1):
+            sel = np.where(seg == s)[0]
+            assert sel.size and sel[0] == off          # contiguous layout
+            assert np.array_equal(sel, np.arange(off, off + sel.size))
+            np.testing.assert_array_equal(
+                pb["positions"][r, sel], np.arange(sel.size))
+            # the boundary token targets nothing
+            assert pb["targets"][r, sel[-1]] == 0
+            assert pb["mask"][r, sel[-1]] == 0.0
+            off += sel.size
+        assert np.all(seg[off:] == 0)
+        assert np.all(pb["mask"][r][seg == 0] == 0.0)
+
+
+def test_packing_rejected_where_it_would_leak():
+    """Families/impls whose state crosses row positions reject packed
+    batches loudly (the loss mask alone cannot isolate examples)."""
+    from repro.models.registry import get_bundle
+    fake = {"tokens": jnp.zeros((1, 8), jnp.int32),
+            "targets": jnp.zeros((1, 8), jnp.int32),
+            "mask": jnp.ones((1, 8), jnp.float32),
+            "segments": jnp.ones((1, 8), jnp.int32),
+            "positions": jnp.zeros((1, 8), jnp.int32)}
+    hybrid = get_bundle("zamba2-1.2b", smoke=True)
+    with pytest.raises(ValueError, match="packed"):
+        hybrid.loss(hybrid.init_params(jax.random.key(0)), fake)
+    dec = get_bundle("tiny-100m", smoke=True)
+    with pytest.raises(ValueError, match="dense"):
+        dec.loss(dec.init_params(jax.random.key(0)), fake, impl="chunked")
