@@ -50,6 +50,7 @@ FIGURES = {
     "fig_bank_exec": ["--quick"],
     "fig_dp_moments": ["--quick", "--steps", "4"],
     "fig_host_overlap": ["--quick"],
+    "fig_compressed_dp": ["--quick", "--steps", "6"],
 }
 
 
@@ -281,11 +282,54 @@ def check_host_overlap(fresh: dict, committed: dict, tol: float,
             "async loop no longer beats the synchronous one")
 
 
+def check_compressed_dp(fresh: dict, committed: dict, tol: float,
+                        slack: float, failures: list):
+    """Compressed-FO gate (DESIGN.md §8): the wire-model numbers are
+    exact (the ~4x bytes cut IS the claim), and the loss/params envelope
+    is a *live* correctness gate on the fresh run — compression is not
+    bitwise, so the deliverable is a bounded divergence, hard-failed if
+    quantization error ever escapes the documented envelope."""
+    fw = _need(fresh, "wire", "fig_compressed_dp")
+    cw = _need(committed, "wire", "fig_compressed_dp")
+    for key in ("fo_bytes_fp32", "fo_bytes_int8", "fo_scale_bytes",
+                "zo_bytes"):
+        _exact(f"compressed_dp wire.{key}", _need(fw, key, "wire"),
+               _need(cw, key, "wire"), failures)
+    ratio = _need(fw, "fo_compression_ratio", "wire")
+    ok = ratio > 3.5
+    print(f"  [{'ok' if ok else 'FAIL'}] compressed_dp "
+          f"fo_compression_ratio: x{ratio:.3f} (must be > 3.5)")
+    if not ok:
+        failures.append(f"fo_compression_ratio x{ratio:.3f} <= 3.5 — the "
+                        "int8 wire model lost its ~4x cut")
+    # structure: both trajectories present, equal length
+    fe = _need(fresh, "loss_fo_exact", "fig_compressed_dp")
+    fc = _need(fresh, "loss_fo_compressed", "fig_compressed_dp")
+    if len(fe) != len(fc) or not fe:
+        raise GateFailure("fig_compressed_dp: trajectory lengths "
+                          f"{len(fe)} vs {len(fc)} (need equal, nonzero)")
+    # live: the measured envelope must stay inside the documented bound
+    env = _need(fresh, "params_envelope", "fig_compressed_dp")
+    bound = _need(fresh, "envelope_bound", "fig_compressed_dp")
+    ok = env <= bound
+    print(f"  [{'ok' if ok else 'FAIL'}] compressed_dp params_envelope: "
+          f"{env:.3e} (must be <= {bound:.0e})")
+    if not ok:
+        raise GateFailure(
+            f"fig_compressed_dp: params envelope {env:.3e} escaped the "
+            f"documented bound {bound:.0e} — int8 quantization error is "
+            "no longer bounded (DESIGN.md §8)")
+    _exact("compressed_dp envelope_bound", bound,
+           _need(committed, "envelope_bound", "fig_compressed_dp"),
+           failures)
+
+
 CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_sharded_bank": check_sharded,
           "fig_bank_exec": check_bank_exec,
           "fig_dp_moments": check_dp_moments,
-          "fig_host_overlap": check_host_overlap}
+          "fig_host_overlap": check_host_overlap,
+          "fig_compressed_dp": check_compressed_dp}
 
 
 # --------------------------------------------------------------------------

@@ -8,8 +8,24 @@ over the dry-run artifacts.  Results land in ``benchmarks/results/``.
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
 import traceback
+
+
+def _run_subprocess_fig(module: str, *extra: str):
+    """Figures that force ``xla_force_host_platform_device_count`` at
+    import (DP benchmarks) cannot share this process's already-
+    initialized 1-device jax — run them as ``python -m`` children."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    subprocess.run([sys.executable, "-m", module, *extra], check=True,
+                   env=env, cwd=repo)
 
 
 def main(argv=None):
@@ -35,6 +51,9 @@ def main(argv=None):
         "fig_bank_exec": lambda: fig_bank_exec.run(quick=quick),
         "fig_host_overlap": lambda: fig_host_overlap.run(quick=quick),
         "fig11_convergence": lambda: fig11_convergence.run(quick=quick),
+        "fig_compressed_dp": lambda: _run_subprocess_fig(
+            "benchmarks.fig_compressed_dp",
+            *(("--quick",) if quick else ())),
         "table_accuracy_memory": lambda: table_accuracy_memory.run(
             quick=quick),
         "roofline_report": lambda: roofline_report.run(),

@@ -352,7 +352,7 @@ def _fo_half(loss_fn: LossFn, params: Any, batch: Any, cfg: AddaxConfig,
 
 def _moments_fo_half(loss_fn: LossFn, params: Any, b_fo: Any,
                      g0: jax.Array | None, lr, cfg: AddaxConfig,
-                     spec: StepSpec, axes=None, compress_fo: bool = False):
+                     spec: StepSpec, axes=None):
     """Fenced backprop half shared *verbatim* by the single-host and DP
     moments paths (``axes=None`` -> no collectives) — the load-bearing
     piece of the replicated-(m, v) contract's single-host equivalence
@@ -376,13 +376,13 @@ def _moments_fo_half(loss_fn: LossFn, params: Any, b_fo: Any,
     loss1, g1 = jax.value_and_grad(loss_fn)(params, b_fo)
     loss1, g1 = jax.lax.optimization_barrier((loss1, g1))
     if axes is not None:
+        # always the exact fp32 pmean: make_dp_local_step rejects
+        # compress_fo for moments optimizers (the quantization error
+        # would enter (m, v) and void the bitwise single-host
+        # equivalence half of the §6 contract)
         loss1 = jax.lax.pmean(loss1, axes)
-        if compress_fo:
-            from repro.core import compression
-            g1 = compression.compress_tree(g1, axes)
-        else:
-            g1 = jax.tree_util.tree_map(
-                lambda g: jax.lax.pmean(g, axes), g1)
+        g1 = jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axes), g1)
     g1, fo_m = _postprocess_fo(g1, cfg, spec, norm_metric=False)
     if g0 is not None:
         params, g1, g0, lr = jax.lax.optimization_barrier(
@@ -594,6 +594,10 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
 
     * ``ValueError`` — unknown ``name`` or ``backend``;
     * ``ValueError`` — ``check_moments=True`` for a stateless optimizer;
+    * ``ValueError`` — ``compress_fo=True`` for a moments optimizer
+      (quantization error would enter (m, v): the contract's bitwise
+      single-host equivalence cannot hold — DESIGN.md §8) or for a
+      ZO-only optimizer (no gradient on the wire);
     * ``ValueError`` — ``shard_bank=True`` with no ZO bank (``ipsgd`` /
       ``sgd`` / ``adam``), with ``spsa_mode != "fresh"``, or with
       ``cfg.n_dirs`` not divisible by ``dp_size``;
@@ -611,6 +615,22 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
             f"check_moments=True needs a moments optimizer (adam / "
             f"addax-adam), got {name!r} — stateless steps have no (m, v) "
             "to checksum (see docs/engine.md)")
+    if compress_fo and spec.moments:
+        raise ValueError(
+            f"compress_fo=True is rejected for the moments optimizer "
+            f"{name!r}: the int8-quantized all-reduce keeps (m, v) "
+            "bitwise-replicated across shards, but its quantization "
+            "error enters (m, v) and compounds over steps, so the "
+            "replicated-(m, v) contract's other half — bitwise "
+            "single-host equivalence — cannot hold (documented envelope "
+            "instead: DESIGN.md §8, docs/engine.md).  Run adam / "
+            "addax-adam uncompressed, or a stateless optimizer "
+            "compressed")
+    if compress_fo and not spec.fo:
+        raise ValueError(
+            f"compress_fo=True has nothing to compress for {name!r}: a "
+            "ZO-only optimizer all-reduces scalars, not a gradient "
+            "(see docs/engine.md)")
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
     sched = bank_schedule_of(cfg, spec)
 
@@ -680,7 +700,7 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                 # equivalence bitwise rather than 1-ulp (DESIGN.md §6)
                 params, g0, g1, loss1, lr, fo_m = _moments_fo_half(
                     loss_fn, params, batches[-1], g0, lr, cfg, spec,
-                    axes=axes, compress_fo=compress_fo)
+                    axes=axes)
                 metrics["loss_fo"] = loss1
                 metrics.update(fo_m)
             else:

@@ -122,6 +122,16 @@ class BankSchedule:
             n = max(self.min_dirs, n // 2)
         return {"rel_ema": rel_ema, "n_active": n}
 
+    def shrink(self, state: dict) -> dict:
+        """Robustness-loop transition (straggler feedback from
+        ``train.loop.run_training``): halve the active bank toward
+        ``min_dirs`` when the watchdog reports a *sustained* slow shard —
+        fewer probes per step is the one lever the loop can pull without
+        recompiling.  Keeps ``rel_ema``: the variance feedback may grow
+        the bank back once step times recover."""
+        return {"rel_ema": state["rel_ema"],
+                "n_active": max(self.min_dirs, state["n_active"] // 2)}
+
 
 def by_name(name: str, lr: float, total_steps: int):
     if name == "constant":

@@ -24,8 +24,9 @@ shard ``s`` walks directions ``[s·n/dp, (s+1)·n/dp)`` of the global bank
 effective directions at the forward-pass wall-clock of ``n_dirs / dp``,
 with ``4 n_dirs`` gather bytes replacing the ``8 n_dirs`` loss psums.
 
-Parameters are replicated across the DP axis (Addax holds no optimizer
-state, so this is the paper's memory model, scaled out).
+Parameters are replicated across the DP axis.  For the paper's stateless
+optimizers that is the whole memory model, scaled out; the moments
+variants additionally replicate (m, v) on every shard (below).
 
 The moments optimizers (``adam`` / ``addax-adam``) ride the same wire
 under the **replicated-(m, v) psum contract** (DESIGN.md §6,
@@ -141,7 +142,8 @@ def collective_bytes_of_dp_step(n_params: int, dp: int,
                                 shard_bank: bool = False,
                                 n_active: int | None = None,
                                 moments: bool = False,
-                                check_moments: bool = False) -> dict:
+                                check_moments: bool = False,
+                                n_leaves: int = 1) -> dict:
     """Napkin model of per-step DP collective bytes (used by benchmarks):
     ZO = two scalar ring all-reduces *per bank direction* (``2 n_dirs``
     fp32 scalars = ``8 n_dirs`` bytes — one scalar pair in the paper's
@@ -149,6 +151,24 @@ def collective_bytes_of_dp_step(n_params: int, dp: int,
     ``n_dirs``-float all-gather of the g0 slices (+ one pmean'd loss
     metric scalar).  FO = ring all-reduce of the gradient (2 (dp-1)/dp
     bytes-per-elem factor folded out — we report payload).
+
+    **Compressed FO wire model** (``compress=True``,
+    ``repro.core.compression``): the payload is the int8 quantized
+    gradient (1 byte/elem) plus one fp32 scale *per leaf* — the
+    per-leaf ``pmax`` all-reduce that synchronizes the quantization
+    scale — so ``fo_bytes = n_params + 4 n_leaves`` vs ``4 n_params``
+    fp32 (asymptotically a 4x cut; ``fo_bytes_fp32`` /
+    ``fo_compression_ratio`` report it directly).  Pass the tree's leaf
+    count as ``n_leaves``; the default 1 models a single fused buffer.
+
+    **Sharded-bank counts use the ceiling.**  The engine slices the bank
+    into equal per-shard runs of ``ceil(n_dirs / dp)`` directions (it
+    rejects non-divisible ``n_dirs % dp`` outright; a padded program
+    would run the ceiling), and the tiled ``g0`` all-gather moves ``dp``
+    equal slices of that padded length.  The headline
+    ``zo_fwd_passes_per_shard`` therefore matches the
+    ``zo_fwd_passes_active`` convention at ``n_active = n_dirs`` —
+    the earlier floor under-reported both for non-divisible banks.
 
     ``n_active`` models a variance-adaptive bank (BankSchedule): the
     compiled program still moves the full static-``n_dirs`` payload —
@@ -165,13 +185,21 @@ def collective_bytes_of_dp_step(n_params: int, dp: int,
     bytes of state or trust nondeterminism).  ``check_moments`` adds the
     optional tripwire's cost: one uint32 checksum all-gather,
     ``4 dp`` bytes."""
-    fo_bytes = n_params * (1 if compress else 4)
-    zo_bytes = (4 * n_dirs + 4) if shard_bank else 8 * n_dirs
+    fo_bytes_fp32 = n_params * 4
+    fo_scale_bytes = 4 * max(1, int(n_leaves))
+    fo_bytes = (n_params + fo_scale_bytes) if compress else fo_bytes_fp32
+    # ceil(n_dirs / dp): the per-shard (padded) bank-slice length
+    n_local = -(-n_dirs // dp) if shard_bank else n_dirs
+    zo_bytes = (4 * dp * n_local + 4) if shard_bank else 8 * n_dirs
     out = {"zo_bytes": zo_bytes, "fo_bytes": fo_bytes,
            "zo_fwd_passes_per_shard":
-               (2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
-           "sgd_bytes": n_params * 4,
-           "ratio_vs_sgd": (zo_bytes + fo_bytes) / (n_params * 4)}
+               -(-2 * n_dirs // dp) if shard_bank else 2 * n_dirs,
+           "sgd_bytes": fo_bytes_fp32,
+           "ratio_vs_sgd": (zo_bytes + fo_bytes) / fo_bytes_fp32}
+    if compress:
+        out["fo_bytes_fp32"] = fo_bytes_fp32
+        out["fo_scale_bytes"] = fo_scale_bytes
+        out["fo_compression_ratio"] = fo_bytes_fp32 / fo_bytes
     if moments:
         out["moments_bytes"] = 0
         out["moments_state_bytes_naive_allreduce"] = 8 * n_params

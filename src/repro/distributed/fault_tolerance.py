@@ -6,12 +6,23 @@ Design constraints for 1000+ node fleets:
 * **Mesh-agnostic checkpoints.** Arrays are saved as *logical* (fully
   replicated host values) per leaf, so a job killed on a (2,16,16) mesh can
   resume on (16,16) or any other shape — resharding happens at load via the
-  target sharding.  Addax has no optimizer state, so a checkpoint is just
-  ``params + step + pipeline seed`` — tiny restart cost, and the ZO stream
-  replays exactly from ``(seed, step)``.
+  target sharding.  Restart state is ``(params[, opt_state], step)``: the
+  stateless optimizers (Addax/MeZO/IP-SGD) checkpoint just ``params + step
+  + pipeline seed`` — tiny restart cost, and the ZO/data streams replay
+  exactly from ``(seed, step)`` — while the moments optimizers
+  (adam / addax-adam, beyond-paper) pair it with an ``(m, v)`` checkpoint
+  in a sibling ``opt/`` store that ``train/loop.py`` saves and restores in
+  lockstep at the same step (opt first, params' DONE marker last, so a
+  crash between the two never publishes params@N without opt@N).  Under DP
+  the moments are **bitwise-replicated** across shards (the replicated-
+  (m, v) contract, DESIGN.md §6), so the single host copy saved here is
+  shard-agnostic and restores onto any mesh shape exactly like the params.
 * **Atomicity.** Writes go to ``<dir>/tmp.<uuid>`` then ``os.replace`` to
-  ``step_<n>``; a crash mid-write never corrupts the latest checkpoint.
-  ``latest`` is discovered by scanning, not by a mutable pointer file.
+  ``step_<n>``; a same-step re-save parks the previous copy aside as
+  ``step_<n>.old.<uuid>`` *before* the swap (asides with a DONE marker
+  stay discoverable by ``steps()``/``restore``), so a crash at any point
+  leaves a complete checkpoint — never a half-deleted one.  ``latest`` is
+  discovered by scanning, not by a mutable pointer file.
 * **Async save.** Serialization happens on a background thread off the
   device-host copy, keeping the training loop's checkpoint stall to the
   device->host transfer only.
@@ -41,6 +52,9 @@ import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+# a same-step re-save parks the previous copy here while the new one is
+# swapped in; still a valid checkpoint if the swap never happens
+_ASIDE_RE = re.compile(r"^step_(\d+)\.old\.[0-9a-f]+$")
 
 
 # --------------------------------------------------------------------------
@@ -65,12 +79,30 @@ class CheckpointStore:
         return os.path.join(self.root, f"step_{step}")
 
     def steps(self) -> list[int]:
-        out = []
+        out = set()
         for name in os.listdir(self.root):
-            m = _STEP_RE.match(name)
+            m = _STEP_RE.match(name) or _ASIDE_RE.match(name)
             if m and os.path.exists(os.path.join(self.root, name, "DONE")):
-                out.append(int(m.group(1)))
+                out.add(int(m.group(1)))
         return sorted(out)
+
+    def _resolve_dir(self, step: int) -> str:
+        """Directory holding step ``step``: the published ``step_<n>`` if
+        complete, else the newest ``.old.`` aside left by a re-save that
+        crashed mid-swap (crash recovery for ``save``'s aside scheme)."""
+        final = self._dir(step)
+        if os.path.exists(os.path.join(final, "DONE")):
+            return final
+        prefix = f"step_{step}.old."
+        asides = sorted(
+            name for name in os.listdir(self.root)
+            if name.startswith(prefix) and _ASIDE_RE.match(name)
+            and os.path.exists(os.path.join(self.root, name, "DONE")))
+        if not asides:
+            raise FileNotFoundError(
+                f"no complete checkpoint for step {step} under "
+                f"{self.root}")
+        return os.path.join(self.root, asides[-1])
 
     def latest_step(self) -> int | None:
         s = self.steps()
@@ -92,10 +124,18 @@ class CheckpointStore:
         with open(os.path.join(tmp, "DONE"), "w") as f:
             f.write("ok")
         final = self._dir(step)
-        if os.path.exists(final):  # same-step re-save: drop the old one
-            import shutil
-            shutil.rmtree(final)
+        aside = None
+        if os.path.exists(final):
+            # same-step re-save: never delete the only copy before the
+            # new one is published.  Park it aside (still discoverable by
+            # steps()/restore via _resolve_dir if we crash here), swap
+            # the new dir in, then drop the aside.
+            aside = f"{final}.old.{uuid.uuid4().hex}"
+            os.replace(final, aside)
         os.replace(tmp, final)
+        if aside is not None:
+            import shutil
+            shutil.rmtree(aside, ignore_errors=True)
         self._gc()
 
     def restore(self, like: Any, step: int | None = None,
@@ -106,7 +146,7 @@ class CheckpointStore:
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
-        d = self._dir(step)
+        d = self._resolve_dir(step)
         with np.load(os.path.join(d, "params.npz")) as z:
             arrays = {k: z[k] for k in z.files}
         with open(os.path.join(d, "meta.json")) as f:
@@ -130,9 +170,21 @@ class CheckpointStore:
         return params, meta
 
     def _gc(self):
+        import shutil
         steps = self.steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            import shutil
+        drop = set(steps[:-self.keep]) if self.keep else set()
+        for name in list(os.listdir(self.root)):
+            m = _ASIDE_RE.match(name)
+            if not m:
+                continue
+            s = int(m.group(1))
+            # an aside is garbage once its step is either superseded by a
+            # complete published dir (the re-save finished) or retired
+            if s in drop or \
+                    os.path.exists(os.path.join(self._dir(s), "DONE")):
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)
+        for s in drop:
             shutil.rmtree(self._dir(s), ignore_errors=True)
 
 
@@ -226,7 +278,14 @@ class StragglerEvent:
 
 class StragglerWatchdog:
     """EWMA step-time monitor.  ``observe`` returns a StragglerEvent when a
-    step exceeds ``threshold x EWMA`` (after ``warmup`` steps)."""
+    step exceeds ``threshold x EWMA`` (after ``warmup`` steps).
+
+    Straggler steps still move the EWMA, but with their contribution
+    clamped at ``threshold x EWMA``: a one-off spike barely shifts the
+    baseline, while a *sustained* regime shift (a permanently slower step
+    time — e.g. resuming a dp=4 job at dp=2) re-baselines geometrically
+    instead of flagging every subsequent step forever.  (The earlier
+    skip-on-straggler rule froze the EWMA at the old regime.)"""
 
     def __init__(self, threshold: float = 2.0, decay: float = 0.9,
                  warmup: int = 5,
@@ -257,11 +316,15 @@ class StragglerWatchdog:
         is_straggler = (self._n > self.warmup and
                         duration > self.threshold * self.ewma)
         ev = None
+        contribution = duration
         if is_straggler:
             ev = StragglerEvent(step=step, duration=duration,
                                 ewma=self.ewma)
             self.events.append(ev)
-        else:
-            # stragglers do not poison the EWMA
-            self.ewma = self.decay * self.ewma + (1 - self.decay) * duration
+            # clamp, don't skip: an outlier cannot poison the baseline by
+            # more than the threshold multiple, but a sustained slowdown
+            # still converges the EWMA to the new regime
+            contribution = min(duration, self.threshold * self.ewma)
+        self.ewma = self.decay * self.ewma + \
+            (1 - self.decay) * contribution
         return ev

@@ -62,6 +62,11 @@ class CellOptions:
     grad_clip: float | None = None     # global-norm clip on the FO gradient
     spsa_mode: str = "chain"           # chain (paper) | fresh (ablation;
                                        # required by DP-sharded banks)
+    compress_fo: bool = False          # int8 FO all-reduce over the data
+                                       # axes via the explicit-collective
+                                       # (shard_map) step — data-only
+                                       # meshes, FO-carrying stateless
+                                       # optimizers (docs/engine.md)
     fo_buckets: tuple[int, ...] = ()   # FO bucket-ladder widths for train
                                        # cells (streaming runtime); () =
                                        # single width from plan_train_cell
@@ -218,8 +223,31 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
         # lower the identical signature — collapse to one plan
         fo_widths = fo_widths[:1]
         b1_by_width = {w: b1_by_width[w] for w in fo_widths}
-    step = engine.make_step(opts.optimizer, loss_fn, acfg, lr_fn,
-                            backend=backend)
+    if opts.compress_fo:
+        # int8 FO collectives need the *explicit* shard_map step — GSPMD
+        # cannot be asked to emit a quantized all-reduce from sharding
+        # annotations alone.  The explicit step replicates params over
+        # the whole mesh, so it only composes with data-only meshes;
+        # optimizer-level rejections (moments, ZO-only) live in
+        # engine.make_dp_local_step and surface here at build time.
+        model_size = 1
+        for ax, size in dict(mesh.shape).items():
+            if ax not in data_axes:
+                model_size *= size
+        if model_size != 1:
+            raise ValueError(
+                "compress_fo requires a data-only mesh (non-data axes "
+                f"of {dict(mesh.shape)} have total size {model_size}): "
+                "the explicit-collective step replicates params across "
+                "the mesh (distributed/collectives.py, docs/engine.md)")
+        from repro.distributed import collectives
+        step = collectives.make_dp_step(
+            loss_fn, acfg, lr_fn, mesh, name=opts.optimizer,
+            data_axes=tuple(data_axes), compress_fo=True,
+            backend=backend)
+    else:
+        step = engine.make_step(opts.optimizer, loss_fn, acfg, lr_fn,
+                                backend=backend)
     idx = jax.ShapeDtypeStruct((), jnp.uint32)
 
     def batch_plumbing(b1):

@@ -90,6 +90,25 @@ def main(argv=None):
                    help="with --dp and adam/addax-adam: all-gather a "
                         "per-shard moments checksum each step; the loop "
                         "aborts if (m, v) replication ever diverges")
+    p.add_argument("--compress-fo", action="store_true",
+                   help="with --dp: int8-quantized FO all-reduce "
+                        "(repro.core.compression) — ~4x fewer gradient "
+                        "bytes on the wire; stateless FO optimizers only "
+                        "(moments combinations are rejected, DESIGN.md §8)")
+    p.add_argument("--preempt-flag", default=None,
+                   help="preemption flag-file path: the loop checkpoints "
+                        "and exits cleanly once this file exists "
+                        "(PreemptionGuard)")
+    p.add_argument("--preempt-at-step", type=int, default=None,
+                   help="testing hook: write --preempt-flag once step N "
+                        "has been reached, exercising the real flag-file "
+                        "preemption path (requires --preempt-flag and "
+                        "--prefetch 0)")
+    p.add_argument("--straggler-shrink", type=int, default=0,
+                   help="robustness loop: after N consecutive straggler "
+                        "steps halve the active bank (requires "
+                        "--bank-schedule; wall-clock-driven, so it trades "
+                        "bitwise reproducibility for robustness)")
     p.add_argument("--task", default="markov",
                    choices=("markov", "copy", "classify"))
     p.add_argument("--profile", default="multirc",
@@ -107,9 +126,21 @@ def main(argv=None):
     from repro.core.addax import AddaxConfig
     from repro.data.pipeline import AddaxPipeline, PipelineConfig
     from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+    from repro.distributed.fault_tolerance import PreemptionGuard
     from repro.models.registry import get_bundle
     from repro.train.loop import TrainLoopConfig, run_training
     from repro.train.state import build_optimizer
+
+    if args.straggler_shrink and not args.bank_schedule:
+        raise SystemExit("--straggler-shrink requires --bank-schedule "
+                         "(it acts by shrinking the scheduled bank)")
+    if args.preempt_at_step is not None:
+        if not args.preempt_flag:
+            raise SystemExit("--preempt-at-step requires --preempt-flag "
+                             "(it writes that file)")
+        if args.prefetch:
+            raise SystemExit("--preempt-at-step requires --prefetch 0 "
+                             "(the hook wraps synchronous batch builds)")
 
     bundle = get_bundle(args.arch, smoke=args.smoke)
     vocab = bundle.mcfg.vocab
@@ -154,6 +185,7 @@ def main(argv=None):
                                  mesh, total_steps=args.steps,
                                  backend=args.backend,
                                  shard_bank=args.shard_bank,
+                                 compress_fo=args.compress_fo,
                                  check_moments=args.check_moments)
         params = jax.device_put(params, replicated(mesh))
         opt_state = opt.init_state(params) if opt.has_state else None
@@ -161,20 +193,53 @@ def main(argv=None):
             opt_state = jax.device_put(opt_state, replicated(mesh))
         b_shard = batch_sharding(mesh)
         print(f"[dp] {args.dp} shards, shard_bank={args.shard_bank}, "
+              f"compress_fo={args.compress_fo}, "
               f"check_moments={args.check_moments}")
+        if args.compress_fo:
+            from repro.distributed.collectives import \
+                collective_bytes_of_dp_step
+            n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+            wire = collective_bytes_of_dp_step(
+                n_params, dp=args.dp, compress=True, n_dirs=args.n_dirs,
+                shard_bank=args.shard_bank,
+                n_leaves=len(jax.tree_util.tree_leaves(params)))
+            print(f"[wire] fo_bytes={wire['fo_bytes']} "
+                  f"(fp32 {wire['fo_bytes_fp32']}, "
+                  f"{wire['fo_compression_ratio']:.2f}x)")
 
         def place(b):
             return jax.device_put(
                 jax.tree_util.tree_map(jnp.asarray, b), b_shard)
     else:
-        if args.shard_bank or args.check_moments:
-            raise SystemExit("--shard-bank/--check-moments require --dp")
+        if args.shard_bank or args.check_moments or args.compress_fo:
+            raise SystemExit("--shard-bank/--check-moments/--compress-fo "
+                             "require --dp")
         opt = build_optimizer(args.optimizer, bundle.loss_fn(), acfg,
                               total_steps=args.steps, backend=args.backend)
         opt_state = opt.init_state(params) if opt.has_state else None
 
         def place(b):
             return jax.tree_util.tree_map(jnp.asarray, b)
+
+    guard = None
+    if args.preempt_flag:
+        guard = PreemptionGuard(flag_path=args.preempt_flag,
+                                install_signal=False)
+    if args.preempt_at_step is not None:
+        # testing hook: raise the *real* flag file once step N's batch is
+        # built — step N still dispatches; the loop's guard poll at N+1
+        # takes the production preemption path (drain + checkpoint @ N)
+        import os as _os
+        inner = pipe.step_batches
+        trip_at = args.preempt_at_step
+        flag = args.preempt_flag
+
+        def step_batches(step):
+            if step >= trip_at and not _os.path.exists(flag):
+                with open(flag, "w") as f:
+                    f.write(f"preempt-at-step {step}\n")
+            return inner(step)
+        pipe.step_batches = step_batches
 
     out = run_training(
         opt, params, pipe,
@@ -184,8 +249,9 @@ def main(argv=None):
                         metrics_path=args.metrics,
                         prefetch=args.prefetch,
                         async_window=args.async_window,
-                        sched_lag=args.sched_lag),
-        opt_state=opt_state, place=place)
+                        sched_lag=args.sched_lag,
+                        straggler_shrink=args.straggler_shrink),
+        opt_state=opt_state, place=place, guard=guard)
 
     hist = out["history"]
     key = "loss_fo" if any("loss_fo" in h for h in hist) else "loss_zo"

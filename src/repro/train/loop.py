@@ -29,7 +29,11 @@ consumes metrics is lag-tolerant:
   bitwise-independent of the async window and of prefetch depth
   (``sched_lag=1``, the default, reproduces the classic synchronous
   feedback and caps the effective window at 1; raise it to overlap
-  scheduled-bank runs).
+  scheduled-bank runs).  With ``cfg.straggler_shrink = N`` the watchdog
+  *also* feeds the schedule: N consecutive straggler steps halve
+  ``n_active`` (``BankSchedule.shrink``) — wall-clock-driven, so it
+  trades the bitwise-reproducibility guarantee for robustness and is
+  off by default.
 
 Because dispatch order, step inputs, and donation are identical for
 every ``(prefetch, async_window)`` setting, the (params, opt_state)
@@ -73,6 +77,12 @@ class TrainLoopConfig:
                              # synchronous loop: drain right after dispatch)
     sched_lag: int = 1       # fixed BankSchedule feedback lag in steps —
                              # window-independent by construction
+    straggler_shrink: int = 0  # robustness loop: after N *consecutive*
+                               # straggler steps, halve the BankSchedule's
+                               # n_active (0 = off).  Wall-clock-driven, so
+                               # unlike the variance feedback it trades
+                               # bitwise reproducibility for robustness —
+                               # keep it off for parity runs.
 
 
 def _to_host_metric(x):
@@ -111,9 +121,15 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
                  place: Callable[[Any], Any] = lambda x: x,
                  eval_fn: Callable[[Any], dict] | None = None,
                  guard: PreemptionGuard | None = None,
+                 watchdog: StragglerWatchdog | None = None,
                  jit: bool = True) -> dict:
     """Run (or resume) training.  Returns {params, opt_state, step,
-    history, stragglers, preempted, n_compiles}."""
+    history, stragglers, preempted, n_compiles}.
+
+    ``watchdog`` overrides the loop's straggler watchdog (default: a
+    fresh ``StragglerWatchdog(cfg.straggler_threshold)``) — injection
+    point for fake-clock tests of the ``cfg.straggler_shrink``
+    robustness loop."""
     store = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep_ckpts) \
         if cfg.ckpt_dir else None
     ckpt = AsyncCheckpointer(store) if store else None
@@ -124,7 +140,8 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
                                 keep=cfg.keep_ckpts) \
         if (store and opt.has_state) else None
     guard = guard or PreemptionGuard(install_signal=False)
-    watchdog = StragglerWatchdog(threshold=cfg.straggler_threshold)
+    watchdog = watchdog or StragglerWatchdog(
+        threshold=cfg.straggler_threshold)
     logger = MetricsLogger(cfg.metrics_path)
 
     start_step = 0
@@ -151,6 +168,12 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
     sched_lag = max(1, cfg.sched_lag)
     sched_applied = start_step - 1       # last step folded into the state
     bank_stats: dict[int, tuple[float, float]] = {}
+    if cfg.straggler_shrink and not sched:
+        raise ValueError(
+            "cfg.straggler_shrink needs a BankSchedule to act on — the "
+            "optimizer setup carries none (set cfg.bank_schedule / "
+            "--bank-schedule, or leave straggler_shrink at 0)")
+    straggler_streak = 0                 # consecutive straggler steps
 
     window = max(1, cfg.async_window)
     inflight: collections.deque = collections.deque()  # (step, metrics)
@@ -167,11 +190,25 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
         steady window it is a constant ~W-step wall per step, so a slow
         step still stands out, while the forced drains at checkpoint/
         eval boundaries shrink the latency and never fake a straggler."""
-        nonlocal completed
+        nonlocal completed, straggler_streak, sched_state
         s, mdev, t_dispatch = inflight.popleft()
         mhost = jax.device_get(mdev)     # waits for step s to finish
         ev = watchdog.observe(s, time.monotonic() - t_dispatch)
         completed = s
+        if cfg.straggler_shrink:
+            # robustness loop (straggler -> BankSchedule): a *sustained*
+            # slow shard — straggler_shrink consecutive flagged steps —
+            # halves n_active; fewer probes per step without a recompile.
+            # One-shot per streak: the counter resets after acting.
+            straggler_streak = straggler_streak + 1 if ev else 0
+            if straggler_streak >= cfg.straggler_shrink:
+                old = sched_state["n_active"]
+                sched_state = sched.shrink(sched_state)
+                straggler_streak = 0
+                if sched_state["n_active"] != old:
+                    logger.log({"step": s, "bank_shrunk":
+                                sched_state["n_active"], "from": old,
+                                "reason": "sustained_straggler"})
         if sched:
             bank_stats[s] = (float(np.asarray(mhost["g0"])),
                              float(np.asarray(mhost["g0_std"])))

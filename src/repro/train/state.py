@@ -38,6 +38,8 @@ class OptimizerSetup:
     init_state: Callable[[Any], Any] | None
     stream: str = "fo"          # one-stream optimizers: which stream
     donate: tuple[int, ...] = (0,)
+    compress_fo: bool = False   # DP steps only: int8 FO all-reduce
+                                # (wire model in collective_bytes_of_dp_step)
     # variance-adaptive bank (cfg.bank_schedule): the step takes a traced
     # n_active scalar after step_idx, driven host-side by the train loop
     bank_schedule: schedules.BankSchedule | None = None
@@ -88,6 +90,12 @@ def build_dp_optimizer(name: str, loss_fn: Callable,
     the same values on every shard).  ``check_moments=True`` adds the
     per-step checksum tripwire; the train loop raises on divergence.
 
+    ``compress_fo=True`` swaps the FO pmean for the int8-quantized
+    all-reduce (``repro.core.compression``; wire model in
+    ``collectives.collective_bytes_of_dp_step(compress=True)``) and is
+    recorded on the returned setup.  Stateless optimizers only — the
+    engine rejects the moments combination loudly (DESIGN.md §8).
+
     Raise conditions are those of ``engine.make_dp_local_step`` (the
     optimizer x backend x DP matrix lives in docs/engine.md)."""
     from repro.distributed import collectives
@@ -103,7 +111,7 @@ def build_dp_optimizer(name: str, loss_fn: Callable,
     return OptimizerSetup(
         name, step, two_stream=spec.two_stream, has_state=spec.moments,
         init_state=adam.init_adam_state if spec.moments else None,
-        stream=spec.stream,
+        stream=spec.stream, compress_fo=compress_fo,
         bank_schedule=engine.bank_schedule_of(cfg, spec))
 
 

@@ -1,0 +1,279 @@
+"""Compressed FO collectives end-to-end: ``compressed_psum`` /
+``compress_tree`` numerics under shard_map (zero gradients, mixed-dtype
+trees, per-leaf error bounds, cross-dp-shape consistency + bitwise
+replication), the engine's loud rejections for combinations where the
+replicated-(m, v) contract cannot hold, the ``CellOptions.compress_fo``
+plan path (data-only mesh gate), and the ``--compress-fo`` CLI wiring.
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main test
+process keeps the real 1-device CPU.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression, engine, schedules
+from repro.core.addax import AddaxConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def _one_device_shard_map(fn):
+    """Run ``fn(tree) -> tree`` under shard_map on a 1-device ("data",)
+    mesh — the collectives are degenerate (dp=1) but really lowered."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.collectives import _shard_map
+    from repro.launch.mesh import _mk
+    mesh = _mk((1,), ("data",))
+    return _shard_map(fn, mesh, in_specs=(P(),), out_specs=P())
+
+
+# --------------------------------------------------------------------------
+# numerics: zero grads, mixed dtypes, per-leaf error bound
+# --------------------------------------------------------------------------
+
+def test_compressed_psum_zero_gradient_is_exact_zero():
+    """An all-zero gradient (a frozen leaf, a masked-out step) must come
+    back exactly zero — the 1e-30 scale floor guards the 0/0, and no
+    NaN/Inf may leak out of the dequantization."""
+    f = _one_device_shard_map(
+        lambda t: compression.compress_tree(t, "data"))
+    tree = {"w": jnp.zeros((16, 4)), "b": jnp.zeros((7,))}
+    out = jax.jit(f)(tree)
+    for leaf in jax.tree_util.tree_leaves(out):
+        arr = np.asarray(leaf)
+        assert np.all(arr == 0.0)
+        assert np.all(np.isfinite(arr))
+
+
+def test_compressed_psum_near_zero_gradient_stays_finite():
+    f = _one_device_shard_map(
+        lambda t: compression.compress_tree(t, "data"))
+    tree = {"w": jnp.full((8,), 1e-38, jnp.float32)}
+    out = jax.jit(f)(tree)
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+
+
+def test_compress_tree_mixed_dtype_tree():
+    """compress_tree on an f32/bf16/f16 tree: every leaf dequantizes to
+    f32 and honors its own per-leaf bound |err| <= scale/127 (the scale
+    being that leaf's max|g|) — per-tensor quantization, no cross-leaf
+    scale bleed."""
+    k = jax.random.key(1)
+    k1, k2, k3 = jax.random.split(k, 3)
+    tree = {"f32": jax.random.normal(k1, (64,), jnp.float32) * 5.0,
+            "bf16": (jax.random.normal(k2, (32,)) * 0.1).astype(
+                jnp.bfloat16),
+            "f16": (jax.random.normal(k3, (16,)) * 100.0).astype(
+                jnp.float16)}
+    f = _one_device_shard_map(
+        lambda t: compression.compress_tree(t, "data"))
+    out = jax.jit(f)(tree)
+    for name, g in tree.items():
+        got = np.asarray(out[name])
+        want = np.asarray(g, np.float32)
+        assert got.dtype == np.float32
+        scale = np.max(np.abs(want))
+        np.testing.assert_allclose(got, want, atol=scale / 127 + 1e-6,
+                                   err_msg=name)
+
+
+def test_quantize_error_bound_per_leaf():
+    """The reference quantizer's reconstruction error is <= scale/127
+    elementwise (half a quantization bin would be scale/254; a full bin
+    is the safe bound with the clip at +-127)."""
+    g = jax.random.normal(jax.random.key(7), (512,)) * 3.7
+    q, scale = compression.quantize_int8(g)
+    err = np.abs(np.asarray(compression.dequantize_int8(q, scale))
+                 - np.asarray(g))
+    assert err.max() <= float(scale) / 127 + 1e-6
+
+
+# --------------------------------------------------------------------------
+# cross-dp consistency + replication (subprocess, 8 forced devices)
+# --------------------------------------------------------------------------
+
+def test_compressed_psum_cross_dp_consistency():
+    """The same global gradient, split over dp in {2, 4, 8} shards:
+    every dp shape dequantizes within the quantization bound of the
+    exact global mean, and each result is bitwise-replicated across its
+    shards (psum + pmax see identical operands everywhere)."""
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import compression
+        from repro.distributed.collectives import _shard_map
+        from repro.launch.mesh import _mk
+
+        g = np.asarray(jax.random.normal(jax.random.key(0), (8, 256))) * 2.0
+        exact = g.mean(0)
+        out = {}
+        for dp in (2, 4, 8):
+            mesh = _mk((dp,), ("data",))
+            # shard s holds the mean of its 8/dp rows -> the pmean of the
+            # per-shard means equals the global mean for every dp
+            local = g.reshape(dp, 8 // dp, -1).mean(1)
+
+            def body(x):
+                return compression.compressed_psum(x[0], "data")
+
+            f = _shard_map(body, mesh, in_specs=(P("data"),),
+                           out_specs=P())
+            res = jax.jit(f)(jnp.asarray(local))
+            # bitwise replication across shards: every device holds the
+            # identical dequantized buffer
+            shards = [np.asarray(s.data).reshape(-1)
+                      for s in res.addressable_shards]
+            replicated = all(np.array_equal(shards[0], s)
+                             for s in shards[1:])
+            out[str(dp)] = {
+                "max_err": float(np.max(np.abs(np.asarray(res) - exact))),
+                "scale": float(np.max(np.abs(g))),
+                "replicated": replicated}
+        print(json.dumps(out))
+    """)
+    res = _run_subprocess(code)
+    for dp, r in res.items():
+        assert r["replicated"], f"dp={dp} result not bitwise-replicated"
+        # per-shard scales differ from the global max by <= pmax, so the
+        # synchronized scale is the global max: one-bin bound applies
+        assert r["max_err"] <= r["scale"] / 127 + 1e-6, f"dp={dp}"
+
+
+def test_compress_fo_plan_rejects_model_parallel_mesh():
+    """CellOptions(compress_fo=True) on a mesh with a real model axis is
+    rejected at plan time — the explicit-collective step replicates
+    params and cannot honor tensor-parallel shardings."""
+    code = textwrap.dedent("""
+        import json
+        from repro.configs.base import ShapeCfg
+        from repro.launch.mesh import _mk
+        from repro.launch.steps import CellOptions, plan_train_buckets
+        from repro.models.registry import get_bundle
+
+        bundle = get_bundle("tiny-100m", smoke=True)
+        mesh = _mk((2, 4), ("data", "model"))
+        try:
+            plan_train_buckets(bundle, ShapeCfg("t", 128, 8, "train"),
+                               mesh,
+                               CellOptions(optimizer="addax",
+                                           compress_fo=True,
+                                           fo_buckets=(64,)))
+            print(json.dumps({"raised": False, "msg": ""}))
+        except ValueError as e:
+            print(json.dumps({"raised": True, "msg": str(e)}))
+    """)
+    res = _run_subprocess(code)
+    assert res["raised"]
+    assert "data-only mesh" in res["msg"]
+
+
+# --------------------------------------------------------------------------
+# loud rejections (engine factory — build-time, no devices needed)
+# --------------------------------------------------------------------------
+
+def _quad(params, batch):
+    return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+
+@pytest.mark.parametrize("name", ["adam", "addax-adam"])
+def test_compress_fo_rejected_for_moments_optimizers(name):
+    cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+    with pytest.raises(ValueError, match="replicated-\\(m, v\\)"):
+        engine.make_dp_local_step(name, _quad, cfg,
+                                  schedules.constant(1e-3), "data",
+                                  dp_size=2, compress_fo=True)
+
+
+def test_compress_fo_rejected_for_zo_only_optimizer():
+    cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+    with pytest.raises(ValueError, match="nothing to compress"):
+        engine.make_dp_local_step("mezo", _quad, cfg,
+                                  schedules.constant(1e-3), "data",
+                                  dp_size=2, compress_fo=True)
+
+
+@pytest.mark.parametrize("name", ["addax", "addax-wa", "ipsgd", "sgd"])
+def test_compress_fo_accepted_for_stateless_fo_optimizers(name):
+    cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+    step = engine.make_dp_local_step(name, _quad, cfg,
+                                     schedules.constant(1e-3), "data",
+                                     dp_size=2, compress_fo=True)
+    assert callable(step)
+
+
+# --------------------------------------------------------------------------
+# plan + CLI threading (1-device paths)
+# --------------------------------------------------------------------------
+
+def test_cell_options_compress_fo_plan_builds_on_data_only_mesh():
+    """The compress_fo plan path builds (and the step executes) on a
+    size-1 model axis — 'data-only' means no *real* model parallelism."""
+    from repro.configs.base import ShapeCfg
+    from repro.launch.mesh import _mk
+    from repro.launch.steps import CellOptions, plan_train_buckets
+    from repro.models.registry import get_bundle
+
+    bundle = get_bundle("tiny-100m", smoke=True)
+    mesh = _mk((1, 1), ("data", "model"))
+    plans = plan_train_buckets(bundle, ShapeCfg("t", 64, 2, "train"),
+                               mesh,
+                               CellOptions(optimizer="addax",
+                                           compress_fo=True,
+                                           fo_buckets=(64,)))
+    assert len(plans) == 1
+
+
+def test_cell_options_compress_fo_moments_rejected_at_plan_time():
+    from repro.configs.base import ShapeCfg
+    from repro.launch.mesh import _mk
+    from repro.launch.steps import CellOptions, plan_train_buckets
+    from repro.models.registry import get_bundle
+
+    bundle = get_bundle("tiny-100m", smoke=True)
+    mesh = _mk((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="replicated-\\(m, v\\)"):
+        plan_train_buckets(bundle, ShapeCfg("t", 64, 2, "train"), mesh,
+                           CellOptions(optimizer="addax-adam",
+                                       compress_fo=True,
+                                       fo_buckets=(64,)))
+
+
+def test_train_cli_compress_fo_requires_dp():
+    from repro.launch.train import main
+    with pytest.raises(SystemExit, match="--dp"):
+        main(["--smoke", "--steps", "1", "--compress-fo",
+              "--n-examples", "8"])
+
+
+def test_optimizer_setup_records_compress_fo():
+    """build_dp_optimizer threads compress_fo onto the returned setup
+    (callers — the launcher, benchmarks — introspect it)."""
+    import inspect
+    from repro.train.state import OptimizerSetup, build_dp_optimizer
+    assert "compress_fo" in {f.name for f in
+                             __import__("dataclasses").fields(
+                                 OptimizerSetup)}
+    sig = inspect.signature(build_dp_optimizer)
+    assert "compress_fo" in sig.parameters

@@ -11,6 +11,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import compression
 
@@ -189,7 +190,15 @@ def test_collective_bytes_model():
     assert small["zo_bytes"] == big["zo_bytes"] == 8
     assert big["fo_bytes"] == 7e10 * 4
     cbig = collective_bytes_of_dp_step(int(7e10), dp=16, compress=True)
-    assert cbig["fo_bytes"] == 7e10  # 4x cut
+    # int8 payload + one fp32 scale per leaf (default n_leaves=1): the
+    # asymptotic 4x cut
+    assert cbig["fo_bytes"] == 7e10 + 4
+    assert cbig["fo_bytes_fp32"] == 7e10 * 4
+    assert cbig["fo_compression_ratio"] == pytest.approx(4.0, rel=1e-9)
+    cleaf = collective_bytes_of_dp_step(int(7e10), dp=16, compress=True,
+                                        n_leaves=100)
+    assert cleaf["fo_bytes"] == 7e10 + 400
+    assert cleaf["fo_scale_bytes"] == 400
     bank = collective_bytes_of_dp_step(int(1e8), dp=16, compress=False,
                                        n_dirs=8)
     assert bank["zo_bytes"] == 8 * 8
@@ -198,3 +207,28 @@ def test_collective_bytes_model():
                                       n_dirs=16, shard_bank=True)
     assert shb["zo_fwd_passes_per_shard"] == 2
     assert shb["zo_bytes"] == 4 * 16 + 4
+
+
+@pytest.mark.parametrize("n_dirs,dp", [(6, 8), (8, 3), (16, 16), (4, 2),
+                                       (1, 8), (7, 4)])
+def test_collective_bytes_sharded_bank_uses_ceiling(n_dirs, dp):
+    """Regression for the floor/ceiling inconsistency: the headline
+    ``zo_fwd_passes_per_shard`` used ``2*n_dirs//dp`` (floor) while the
+    n_active keys used the ceiling — at (6, 8) the floor reported 1
+    forward pass per shard for a 12-pass global bank.  Both now use the
+    ceiling (the per-shard padded slice length), and ``zo_bytes`` counts
+    the dp equal padded gather slices."""
+    from repro.distributed.collectives import collective_bytes_of_dp_step
+    out = collective_bytes_of_dp_step(int(1e6), dp=dp, compress=False,
+                                      n_dirs=n_dirs, shard_bank=True,
+                                      n_active=n_dirs)
+    ceil = -(-2 * n_dirs // dp)
+    assert out["zo_fwd_passes_per_shard"] == ceil
+    assert out["zo_fwd_passes_per_shard"] >= 1          # floor gave 0 or
+    # under-reported for n_dirs % dp != 0; never below the ceiling now
+    assert out["zo_fwd_passes_per_shard"] * dp >= 2 * n_dirs
+    # headline convention == active-key convention at n_active = n_dirs
+    assert out["zo_fwd_passes_per_shard"] == out["zo_fwd_passes_active"]
+    # gather moves dp equal slices of the padded per-shard length
+    assert out["zo_bytes"] == 4 * dp * (-(-n_dirs // dp)) + 4
+    assert out["zo_bytes"] >= 4 * n_dirs + 4

@@ -1,5 +1,7 @@
-"""Fault-tolerance unit tests: atomic checkpoints, async writer,
-preemption, straggler watchdog with a fake clock."""
+"""Fault-tolerance unit tests: atomic checkpoints (including the
+same-step re-save aside scheme under an injected fault), async writer,
+preemption, straggler watchdog with a fake clock, and the
+straggler -> BankSchedule robustness loop."""
 
 import os
 
@@ -11,6 +13,7 @@ import pytest
 from repro.distributed.fault_tolerance import (AsyncCheckpointer,
                                                CheckpointStore,
                                                PreemptionGuard,
+                                               StragglerEvent,
                                                StragglerWatchdog)
 
 
@@ -73,6 +76,56 @@ def test_elastic_restore_dtype_cast(tmp_path):
     assert q["a"].dtype == jnp.bfloat16
 
 
+def test_resave_atomic_under_injected_fault(tmp_path, monkeypatch):
+    """Regression for the rmtree-then-replace re-save: a same-step
+    re-save that dies between removing the old copy and publishing the
+    new one used to lose the *only* checkpoint for that step.  The aside
+    scheme parks the old dir as ``step_<n>.old.<uuid>`` first, so the
+    crash window always leaves a complete, restorable checkpoint."""
+    import repro.distributed.fault_tolerance as ft
+    store = CheckpointStore(str(tmp_path), keep=3)
+    store.save(3, {"a": jnp.full((4,), 1.0)})
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        # fault exactly at the publish step of the re-save: the new tmp
+        # dir is complete, the old copy has already been moved out of
+        # the way — the historical data-loss window
+        if dst == store._dir(3) and \
+                os.path.basename(src).startswith("tmp."):
+            raise OSError("injected crash mid-swap")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ft.os, "replace", boom)
+    with pytest.raises(OSError, match="injected"):
+        store.save(3, {"a": jnp.full((4,), 2.0)})
+    # pre-fix: steps() == [] here (the only copy was rmtree'd).  Now the
+    # aside is discoverable and restores the original values.
+    assert store.steps() == [3]
+    assert store.latest_step() == 3
+    q, meta = store.restore({"a": jnp.zeros((4,))}, step=3)
+    assert meta["step"] == 3 and float(q["a"][0]) == 1.0
+
+    # heal the fault: the re-save now succeeds and cleans up the aside
+    monkeypatch.undo()
+    store.save(3, {"a": jnp.full((4,), 2.0)})
+    q, _ = store.restore({"a": jnp.zeros((4,))}, step=3)
+    assert float(q["a"][0]) == 2.0
+    assert not [n for n in os.listdir(tmp_path) if ".old." in n]
+
+
+def test_resave_same_step_no_fault(tmp_path):
+    """The happy-path re-save overwrites in place and leaves no asides."""
+    store = CheckpointStore(str(tmp_path))
+    for v in (1.0, 2.0, 3.0):
+        store.save(5, {"a": jnp.full((2,), v)})
+    assert store.steps() == [5]
+    q, _ = store.restore({"a": jnp.zeros((2,))})
+    assert float(q["a"][0]) == 3.0
+    assert not [n for n in os.listdir(tmp_path) if ".old." in n]
+
+
 def test_async_checkpointer(tmp_path):
     store = CheckpointStore(str(tmp_path))
     ck = AsyncCheckpointer(store)
@@ -108,14 +161,154 @@ def test_straggler_watchdog_fake_clock():
         wd.start()
         t[0] += 1.0
         assert wd.stop(step) is None
-    # a 5x step -> flagged, EWMA unpoisoned
-    ewma_before = wd.ewma
+    # a 5x step -> flagged; the EWMA folds in the *clamped* contribution
+    # min(5.0, threshold * ewma) = 2.0, not the raw outlier
+    assert wd.ewma == 1.0
     wd.start()
     t[0] += 5.0
     ev = wd.stop(5)
     assert ev is not None and ev.step == 5 and ev.duration == 5.0
-    assert wd.ewma == ewma_before
-    # recovery not flagged
+    assert wd.ewma == pytest.approx(0.5 * 1.0 + 0.5 * 2.0)   # 1.5, not 3.0
+    # recovery not flagged (1.0 < 2.0 * 1.5)
     wd.start()
     t[0] += 1.0
     assert wd.stop(6) is None
+
+
+def test_straggler_watchdog_adapts_to_regime_shift():
+    """Regression for the frozen-EWMA bug: straggler steps used to skip
+    the EWMA update entirely, so a *permanent* slowdown (regime shift)
+    kept the baseline at the old speed and flagged every step forever.
+    With the clamped contribution the baseline tracks the new regime and
+    the flagging stops."""
+    t = [0.0]
+    wd = StragglerWatchdog(threshold=2.0, decay=0.5, warmup=2,
+                           clock=lambda: t[0])
+    for step in range(5):                       # old regime: 1.0s steps
+        wd.start()
+        t[0] += 1.0
+        assert wd.stop(step) is None
+    flagged = []
+    for step in range(5, 15):                   # new regime: 3.0s steps
+        wd.start()
+        t[0] += 3.0
+        if wd.stop(step) is not None:
+            flagged.append(step)
+    # first 3.0s step is a genuine anomaly (3 > 2*1.0) -> flagged; the
+    # clamp then walks the EWMA up (1.0 -> 1.5 -> 2.25 via clamp at
+    # 2*ewma, then toward 3.0) and the steady 3.0s steps stop flagging.
+    # Pre-fix behavior: ewma frozen at 1.0 -> all ten steps flagged.
+    assert flagged[0] == 5
+    assert len(flagged) <= 2
+    assert wd.ewma == pytest.approx(3.0, rel=0.1)
+    # the new regime is now baseline: another 3.0s step is unflagged
+    wd.start()
+    t[0] += 3.0
+    assert wd.stop(15) is None
+
+
+# --------------------------------------------------------------------------
+# straggler -> BankSchedule robustness loop (cfg.straggler_shrink)
+# --------------------------------------------------------------------------
+
+def _quad_loss(params, batch):
+    return 0.5 * jnp.sum((batch["A"] @ params["w"] - batch["b"]) ** 2)
+
+
+def _loop_fixture():
+    k1, k2 = jax.random.split(jax.random.key(0))
+    batch = {"A": jax.random.normal(k1, (12, 8)),
+             "b": jax.random.normal(k2, (12,))}
+    params = {"w": jnp.linspace(-1, 1, 8)}
+
+    class Pipe:
+        def step_batches(self, step):
+            return batch, batch
+
+    return params, Pipe()
+
+
+class _ForcedWatchdog(StragglerWatchdog):
+    """Deterministic straggler injection: flags exactly ``slow_steps``,
+    ignoring wall-clock durations."""
+
+    def __init__(self, slow_steps):
+        super().__init__()
+        self.slow = set(slow_steps)
+
+    def observe(self, step, duration):
+        if step in self.slow:
+            ev = StragglerEvent(step=step, duration=duration, ewma=0.0)
+            self.events.append(ev)
+            return ev
+        return None
+
+
+def test_bank_schedule_shrink_transition():
+    from repro.core import schedules
+    bs = schedules.BankSchedule(max_dirs=8, min_dirs=2)
+    st = bs.shrink({"rel_ema": 0.7, "n_active": 8})
+    assert st == {"rel_ema": 0.7, "n_active": 4}
+    st = bs.shrink(bs.shrink(st))
+    assert st["n_active"] == 2          # floors at min_dirs
+
+
+def test_straggler_shrink_drives_bank_through_train_loop():
+    """A sustained straggler streak (2 consecutive flagged steps) halves
+    n_active via BankSchedule.shrink; the event is logged and later
+    dispatches run the smaller bank."""
+    from repro.core.addax import AddaxConfig
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    params, pipe = _loop_fixture()
+    # thresholds chosen so the variance feedback never moves n_active —
+    # only the robustness loop acts
+    cfg = AddaxConfig(lr=1e-3, alpha=5e-4, eps=1e-3, n_dirs=4,
+                      bank_schedule="1:1e-6:1e9:0.5")
+    opt = build_optimizer("addax", _quad_loss, cfg, total_steps=10)
+    wd = _ForcedWatchdog(slow_steps={3, 4})
+    out = run_training(opt, params, pipe,
+                       TrainLoopConfig(total_steps=10, log_every=1,
+                                       straggler_shrink=2),
+                       watchdog=wd)
+    shrinks = [h for h in out["history"]
+               if h.get("reason") == "sustained_straggler"]
+    assert len(shrinks) == 1
+    assert shrinks[0]["from"] == 4 and shrinks[0]["bank_shrunk"] == 2
+    nas = {h["step"]: h["n_active"] for h in out["history"]
+           if "n_active" in h}
+    assert nas[0] == 4 and nas[9] == 2
+
+
+def test_straggler_shrink_one_isolated_event_is_ignored():
+    from repro.core.addax import AddaxConfig
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    params, pipe = _loop_fixture()
+    cfg = AddaxConfig(lr=1e-3, alpha=5e-4, eps=1e-3, n_dirs=4,
+                      bank_schedule="1:1e-6:1e9:0.5")
+    opt = build_optimizer("addax", _quad_loss, cfg, total_steps=8)
+    out = run_training(opt, params, pipe,
+                       TrainLoopConfig(total_steps=8, log_every=1,
+                                       straggler_shrink=2),
+                       watchdog=_ForcedWatchdog(slow_steps={3, 5}))
+    assert not [h for h in out["history"] if "bank_shrunk" in h]
+    nas = {h["step"]: h["n_active"] for h in out["history"]
+           if "n_active" in h}
+    assert nas[7] == 4                   # streak never reached 2
+
+
+def test_straggler_shrink_requires_bank_schedule():
+    from repro.core.addax import AddaxConfig
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    params, pipe = _loop_fixture()
+    opt = build_optimizer("addax", _quad_loss,
+                          AddaxConfig(lr=1e-3, alpha=5e-4, eps=1e-3),
+                          total_steps=2)
+    with pytest.raises(ValueError, match="straggler_shrink"):
+        run_training(opt, params, pipe,
+                     TrainLoopConfig(total_steps=2, straggler_shrink=1))
