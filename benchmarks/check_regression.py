@@ -18,15 +18,18 @@
        the committed ratio ``c``: ratios are hardware-normalized, so the
        band absorbs runner variance while catching order-of-magnitude
        regressions;
-     * **directional gates** (``fig_bank_exec``, ``fig_host_overlap``) —
-       vmap fresh-mode step time and scan chain-mode compile time must
-       stay below the unrolled path at ``n_dirs >= 4``, and the
-       streamed (prefetch+async) loop must stay below the synchronous
-       loop (with a small noise slack): the PR-committed speedup
-       claims, re-proven on every run;
+     * **directional gates** (``fig_bank_exec``, ``fig_host_overlap``,
+       ``fig_serving``) — vmap fresh-mode step time and scan chain-mode
+       compile time must stay below the unrolled path at
+       ``n_dirs >= 4``, the streamed (prefetch+async) loop must stay
+       below the synchronous loop, and slot-level refill must keep
+       beating whole-batch refill on tokens/sec (with a small noise
+       slack): the PR-committed speedup claims, re-proven on every run;
      * **live correctness gates** (``fig_dp_moments`` checksum
        uniformity, ``fig_host_overlap`` bitwise-trajectory and
-       compile-count checks) — asserted on the FRESH run, hard-fail.
+       compile-count checks, ``fig_serving`` dense-vs-paged bitwise
+       greedy streams and the decode no-retrace count) — asserted on
+       the FRESH run, hard-fail.
 
 The fresh JSONs overwrite ``benchmarks/results/`` in place — CI uploads
 them as workflow artifacts so a failed gate ships its evidence.
@@ -51,6 +54,7 @@ FIGURES = {
     "fig_dp_moments": ["--quick", "--steps", "4"],
     "fig_host_overlap": ["--quick"],
     "fig_compressed_dp": ["--quick", "--steps", "6"],
+    "fig_serving": ["--quick"],
 }
 
 
@@ -324,12 +328,73 @@ def check_compressed_dp(fresh: dict, committed: dict, tol: float,
            failures)
 
 
+def check_serving(fresh: dict, committed: dict, tol: float, slack: float,
+                  failures: list):
+    """Serving gate (docs/serving.md): the paged engine's greedy streams
+    must be BITWISE identical to the dense engine's on the same-bucket
+    parity set and the paged decode must have traced exactly once — both
+    live hard-fails on the fresh run; the trace config is exact (a
+    changed workload must update the committed artifact); the
+    whole-batch/slot-refill tokens-per-sec ratio is banded against the
+    committed run AND directionally gated: slot-level refill must keep
+    beating whole-batch refill."""
+    fp = _need(fresh, "parity", "fig_serving")
+    if not _need(fp, "streams_bitwise", "parity"):
+        raise GateFailure(
+            "fig_serving: paged greedy streams diverged from the dense "
+            "engine on the same-bucket parity set — the paged KV cache "
+            "is no longer bitwise-faithful (docs/serving.md)")
+    if _need(fp, "paged_decode_traces", "parity") != 1:
+        raise GateFailure(
+            f"fig_serving: paged decode traced "
+            f"{fp['paged_decode_traces']}x — slot refill retraced the "
+            "decode step (the no-retrace contract, docs/serving.md)")
+    fcfg = _need(fresh, "config", "fig_serving")
+    ccfg = _need(committed, "config", "fig_serving")
+    for key in ("n_requests", "capacity", "max_batch", "block_size",
+                "min_new", "max_new"):
+        _exact(f"serving config.{key}", _need(fcfg, key, "config"),
+               _need(ccfg, key, "config"), failures)
+    def rows_by_variant(s):
+        return {_need(r, "variant", "fig_serving row"): r
+                for r in _need(s, "rows", "fig_serving")}
+    fr, cr = rows_by_variant(fresh), rows_by_variant(committed)
+    for variant in cr:
+        if variant not in fr:
+            raise GateFailure(f"fig_serving: fresh run lost variant "
+                              f"{variant!r}")
+        _need(fr[variant], "tokens_per_s", variant)
+        _need(fr[variant], "p99_latency_s", variant)
+    # live: both engines must serve the whole trace (budget-exact, no
+    # EOS) — unequal token counts would make the throughput ratio vacuous
+    ftok = {v: _need(fr[v], "tokens", v) for v in fr}
+    if len(set(ftok.values())) != 1:
+        raise GateFailure(f"fig_serving: token counts diverged across "
+                          f"variants: {ftok}")
+    fratios = _need(fresh, "ratios", "fig_serving")
+    cratios = _need(committed, "ratios", "fig_serving")
+    for key in cratios:
+        _band(f"serving {key}", _need(fratios, key, "ratios"),
+              _need(cratios, key, "ratios"), tol, failures)
+    # directional: slot-level refill must keep beating whole-batch
+    val = _need(fratios, "whole_batch_vs_slot_tokens_per_s", "ratios")
+    ok = val <= slack
+    print(f"  [{'ok' if ok else 'FAIL'}] whole-batch vs slot-refill "
+          f"tokens/sec: x{val:.3f} (must be <= {slack})")
+    if not ok:
+        failures.append(
+            f"whole_batch_vs_slot_tokens_per_s: x{val:.3f} > {slack} — "
+            "slot-level continuous batching no longer beats whole-batch "
+            "refill")
+
+
 CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_sharded_bank": check_sharded,
           "fig_bank_exec": check_bank_exec,
           "fig_dp_moments": check_dp_moments,
           "fig_host_overlap": check_host_overlap,
-          "fig_compressed_dp": check_compressed_dp}
+          "fig_compressed_dp": check_compressed_dp,
+          "fig_serving": check_serving}
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,176 @@
+"""Serving benchmark: slot-level continuous batching (paged KV) vs
+whole-batch refill under a synthetic heavy-traffic arrival trace.
+
+Two engines over the SAME request trace (mixed prompt lengths across the
+bucket ladder, output budgets spread ~10x — ``repro.serve.trace``):
+
+  * ``whole_batch`` — the dense-cache engine: requests are chunked into
+    ``max_batch`` batches, each batch decodes until its *longest* member
+    finishes (head-of-line blocking: finished slots idle-decode);
+  * ``slot_refill`` — the paged engine: a finished request's KV blocks
+    are freed and its slot refilled from the queue at the next token, so
+    slot occupancy stays high for the whole trace.
+
+Recorded per variant: wall time, tokens/sec, p50/p99 per-request latency
+(request submission -> last token; the whole trace is backlogged at t=0,
+the heavy-traffic regime), plus the paged engine's mean slot occupancy
+and decode-step count.
+
+A separate **parity** section runs both engines on a same-bucket request
+set (mixed budgets + EOS) where the greedy streams are mathematically
+bitwise-comparable — dense buckets depend on batch composition, so
+mixed-bucket prompts change the attended left-padding, while same-bucket
+sets pin both engines to identical prefill shapes.  Gated hard by
+``check_regression.py``: streams must match token-for-token and the
+paged decode must have traced exactly once (no retrace on slot refill).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save_result
+
+ARCH = "tiny-100m(smoke)"
+
+
+def _engines(block_size: int, eos_id=None, max_batch: int = 4,
+             capacity: int = 192, buckets=(32, 64)):
+    import jax
+    from repro.models.registry import get_bundle
+    from repro.serve import ServeConfig, ServeEngine
+    bundle = get_bundle("tiny-100m", smoke=True)
+    params = bundle.init_params(jax.random.key(0))
+    base = dict(capacity=capacity, max_batch=max_batch,
+                prefill_buckets=buckets, eos_id=eos_id)
+    dense = ServeEngine(bundle, params, ServeConfig(**base))
+    paged = ServeEngine(bundle, params, ServeConfig(
+        **base, paged=True, block_size=block_size))
+    return bundle, dense, paged
+
+
+def _percentiles(lat: list[float]) -> tuple[float, float]:
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)))
+
+
+def run(n_requests=32, rounds=5, block_size=16, quick=False):
+    if quick:
+        n_requests, rounds = min(n_requests, 24), min(rounds, 4)
+    from repro.serve.trace import synthetic_trace
+
+    bundle, dense, paged = _engines(block_size)
+    vocab = bundle.mcfg.vocab
+
+    # ---------------------------------------------------- parity (gated)
+    # same-bucket prompts: every dense batch and every paged slot prefill
+    # at bucket 32, so the greedy streams must match bit-for-bit
+    rng = np.random.default_rng(7)
+    par_prompts = [rng.integers(0, vocab, size=int(n)).astype(np.int32)
+                   for n in rng.integers(17, 33, size=12)]
+    par_budgets = [int(b) for b in rng.integers(4, 17, size=12)]
+    _, dense_p, paged_p = _engines(block_size, eos_id=3)
+    out_d = dense_p.generate(par_prompts, par_budgets)
+    out_p = paged_p.generate(par_prompts, par_budgets)
+    streams_bitwise = (len(out_d) == len(out_p) and
+                       all(np.array_equal(a, b)
+                           for a, b in zip(out_d, out_p)))
+    parity = {
+        "n_requests": len(par_prompts),
+        "bucket": 32,
+        "streams_bitwise": bool(streams_bitwise),
+        "paged_decode_traces": paged_p.n_decode_traces,
+        "dense_decode_traces": dense_p.n_decode_traces,
+    }
+    print(f"[serving] parity: bitwise={streams_bitwise} "
+          f"paged_traces={paged_p.n_decode_traces}", flush=True)
+
+    # ------------------------------------------------- throughput (trace)
+    reqs = synthetic_trace(0, n_requests, vocab=vocab, buckets=(32, 64),
+                           min_new=2, max_new=120)
+    prompts = [r.prompt for r in reqs]
+    budgets = [r.max_new for r in reqs]
+
+    walls = {"whole_batch": [], "slot_refill": []}
+    stats = {}
+    for rnd in range(rounds + 1):            # round 0 = compile warmup
+        for variant, eng in (("whole_batch", dense),
+                             ("slot_refill", paged)):
+            t0 = time.perf_counter()
+            outs = eng.generate(prompts, budgets)
+            wall = time.perf_counter() - t0
+            if rnd == 0:
+                continue
+            walls[variant].append(wall)
+            stats[variant] = {
+                "tokens": int(sum(len(o) for o in outs)),
+                "latency_s": list(eng.last_stats["latency_s"]),
+                **({"mean_occupancy":
+                    round(eng.last_stats["mean_occupancy"], 4),
+                    "decode_steps": eng.last_stats["steps"]}
+                   if variant == "slot_refill" else {}),
+            }
+
+    rows = []
+    for variant in walls:
+        wall = min(walls[variant])
+        tokens = stats[variant]["tokens"]
+        p50, p99 = _percentiles(stats[variant]["latency_s"])
+        row = {
+            "variant": variant,
+            "wall_s": round(wall, 4),
+            "rounds_s": [round(w, 4) for w in walls[variant]],
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 2),
+            "p50_latency_s": round(p50, 4),
+            "p99_latency_s": round(p99, 4),
+        }
+        for k in ("mean_occupancy", "decode_steps"):
+            if k in stats[variant]:
+                row[k] = stats[variant][k]
+        rows.append(row)
+        print(f"[serving] {variant}: {tokens} tok in {wall:.2f}s "
+              f"({tokens / wall:.1f} tok/s) p50={p50:.2f}s "
+              f"p99={p99:.2f}s", flush=True)
+
+    by = {r["variant"]: r for r in rows}
+    ratios = {
+        # < 1 means slot-level refill serves more tokens/sec — the
+        # directional gate (check_regression) keeps it below slack
+        "whole_batch_vs_slot_tokens_per_s": round(
+            by["whole_batch"]["tokens_per_s"]
+            / by["slot_refill"]["tokens_per_s"], 4),
+        "slot_vs_whole_batch_p99_latency": round(
+            by["slot_refill"]["p99_latency_s"]
+            / max(by["whole_batch"]["p99_latency_s"], 1e-9), 4),
+    }
+    summary = {
+        "quick": quick, "arch": ARCH, "rounds": rounds,
+        "config": {"n_requests": n_requests, "capacity": 192,
+                   "max_batch": 4, "block_size": block_size,
+                   "buckets": [32, 64], "min_new": 2, "max_new": 120},
+        "parity": parity,
+        "rows": rows,
+        "ratios": ratios,
+    }
+    save_result("fig_serving", summary)
+    for key, v in ratios.items():
+        print(f"[serving] {key}: x{v}")
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--requests", type=int, default=32)
+    p.add_argument("--rounds", type=int, default=5)
+    p.add_argument("--block-size", type=int, default=16)
+    a = p.parse_args(argv)
+    run(n_requests=a.requests, rounds=a.rounds, block_size=a.block_size,
+        quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import (paged_attention_dense_ref,
+                                               paged_attention_ref)
+
+__all__ = ["paged_attention", "paged_attention_ref",
+           "paged_attention_dense_ref"]

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: paged-attention decode — one query token per slot
+against a block-pooled KV cache addressed through per-slot block tables.
+
+The serving engine (docs/serving.md) keeps KV state as fixed-size blocks
+in one shared pool; a slot's logical cache is the concatenation of the
+blocks its table names.  The kernel never materializes that
+concatenation: the *block table rides in scalar prefetch*
+(``pltpu.PrefetchScalarGridSpec``), so the k/v BlockSpec index maps
+dereference ``tables[b, j]`` to fetch physical block ``j`` of slot ``b``
+directly from the pool — the same trick the ``addax_update`` kernel uses
+for its seed/g0 vector, applied to gather addressing.
+
+Grid: (B, H, n_blk) — the block sweep innermost, so the fp32 accumulator
+and softmax stats persist in VMEM scratch across one slot-head's blocks
+(TPU grids execute sequentially), exactly the ``flash_attention``
+discipline with (q tile -> one decode token, kv tile -> one KV block).
+GQA: the k/v index maps send head h to pool head h // G.  Blocks past a
+slot's length are skipped with ``pl.when`` (their table entries point at
+the reserved trash block 0 — never read); the tail block is masked by
+position.  Sliding windows additionally skip blocks left of
+``len - window``.
+
+Softmax stats are (1, 128) lane-replicated tiles (TPU VREG layout); only
+lane 0 is meaningful.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_NEG = -1e30
+
+
+def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, block_size: int,
+                  n_blk: int, window: int | None, softcap: float | None):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Valid positions are [0, L]: position L holds the token written this
+    # step (the engine masks ``kv_pos <= cache_len``, same convention).
+    L = lens_ref[b]
+    live = j * block_size <= L
+    if window is not None:
+        live = jnp.logical_and(live, (j + 1) * block_size - 1 > L - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                    # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (1, bs)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1)
+        valid = pos <= L
+        if window is not None:
+            valid = jnp.logical_and(valid, pos > L - window)
+        s = jnp.where(valid, s, _NEG)
+
+        m_prev = m_ref[:, :1]                               # (1, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                              # (1, bs)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_blk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "interpret"))
+def paged_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, tables: jax.Array,
+                           lens: jax.Array, *, window: int | None = None,
+                           softcap: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v pool: (N, bs, K, hd) with H = K*G;
+    tables: (B, n_blk) int32 physical block ids; lens: (B,) int32 —
+    positions [0, lens[b]] are attended.  Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    _, bs, kheads, _ = k_pool.shape
+    g = h // kheads
+    n_blk = tables.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, block_size=bs, n_blk=n_blk,
+        window=window, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd),
+                         lambda bb, hh, j, tables, lens: (bb, hh, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, j, tables, lens:
+                         (tables[bb, j], 0, hh // g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda bb, hh, j, tables, lens:
+                         (tables[bb, j], 0, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda bb, hh, j, tables, lens:
+                               (bb, hh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+            pltpu.VMEM((1, _LANES), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lens, jnp.int32),
+      q, k_pool, v_pool)

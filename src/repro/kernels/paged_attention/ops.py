@@ -1,0 +1,43 @@
+"""Jitted entry point for the paged-attention decode kernel: dtype/shape
+validation and the interpret switch (CPU smoke runs the same kernel via
+the Pallas interpreter; TPU compiles it with Mosaic)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, lens: jax.Array, *,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """One decode token per slot against the paged KV pool.
+
+    q: (B, H, hd); k/v pool: (num_blocks, block_size, K, hd), H = K*G;
+    tables: (B, n_blk) int32; lens: (B,) int32 — positions
+    ``[0, lens[b]]`` of slot ``b``'s logical cache are attended (the
+    engine writes the current token at ``lens[b]`` before attending).
+    Returns (B, H, hd) pre-``wo`` attention outputs.
+    """
+    B, H, hd = q.shape
+    if k_pool.shape != v_pool.shape:
+        raise ValueError(f"k/v pool shapes differ: {k_pool.shape} vs "
+                         f"{v_pool.shape}")
+    if H % k_pool.shape[2]:
+        raise ValueError(f"n_heads {H} not a multiple of pool kv heads "
+                         f"{k_pool.shape[2]}")
+    if tables.shape[0] != B or lens.shape != (B,):
+        raise ValueError(f"tables {tables.shape} / lens {lens.shape} "
+                         f"inconsistent with batch {B}")
+    return paged_attention_pallas(
+        q, k_pool, v_pool, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(lens, jnp.int32), window=window, softcap=softcap,
+        interpret=interpret)

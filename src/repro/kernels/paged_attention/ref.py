@@ -1,0 +1,118 @@
+"""jnp references for the paged-attention decode kernel.
+
+Two oracles, two contracts (DESIGN.md §5 discipline):
+
+* ``paged_attention_ref`` — the *blockwise mirror*: the exact per-(slot,
+  head) online-softmax block sweep the kernel runs, written in jnp with
+  the same ``dot_general`` dimension numbers, the same masking, and the
+  same skipped-block semantics (``jnp.where`` on the carried stats where
+  the kernel uses ``pl.when``).  This is the **bitwise** side of the
+  jnp <-> pallas-interpret parity contract: both trace to the same
+  per-tile XLA programs.
+* ``paged_attention_dense_ref`` — the plain-softmax oracle over the
+  gathered contiguous cache, the same computation the serving engine's
+  ``impl="jnp"`` path runs.  The kernel agrees with it to fp tolerance
+  (online softmax reorders the reduction), pinning the semantics rather
+  than the bits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -1e30
+
+
+def _block_sweep(q_row, k_pool, v_pool, table, L, *, g, h_i, scale,
+                 window, softcap):
+    """One (slot, head) online-softmax sweep; mirrors ``_paged_kernel``."""
+    n_blk = table.shape[0]
+    bs = k_pool.shape[1]
+    hd = q_row.shape[-1]
+    acc = jnp.zeros((1, hd), jnp.float32)
+    m = jnp.full((1, 1), _NEG, jnp.float32)
+    l = jnp.zeros((1, 1), jnp.float32)
+    for j in range(n_blk):
+        k = k_pool[table[j], :, h_i // g].astype(jnp.float32)   # (bs, hd)
+        v = v_pool[table[j], :, h_i // g].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q_row, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale         # (1, bs)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        valid = pos <= L
+        if window is not None:
+            valid = jnp.logical_and(valid, pos > L - window)
+        s = jnp.where(valid, s, _NEG)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        live = j * bs <= L
+        if window is not None:
+            live = jnp.logical_and(live, (j + 1) * bs - 1 > L - window)
+        acc = jnp.where(live, acc_new, acc)
+        m = jnp.where(live, m_new, m)
+        l = jnp.where(live, l_new, l)
+    return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap"))
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        tables: jax.Array, lens: jax.Array, *,
+                        window: int | None = None,
+                        softcap: float | None = None) -> jax.Array:
+    """Bitwise mirror of the kernel's block sweep.  Shapes as in
+    ``paged_attention_pallas``; python loops over (B, H) — test-scale
+    only."""
+    B, H, hd = q.shape
+    kheads = k_pool.shape[2]
+    g = H // kheads
+    scale = 1.0 / np.sqrt(hd)
+    rows = []
+    for b_i in range(B):
+        heads = []
+        for h_i in range(H):
+            o = _block_sweep(
+                q[b_i, h_i:h_i + 1].astype(jnp.float32), k_pool, v_pool,
+                tables[b_i], lens[b_i], g=g, h_i=h_i, scale=scale,
+                window=window, softcap=softcap)
+            heads.append(o.astype(q.dtype))
+        rows.append(jnp.concatenate(heads, axis=0))
+    return jnp.stack(rows)
+
+
+def paged_attention_dense_ref(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, tables: jax.Array,
+                              lens: jax.Array, *,
+                              window: int | None = None,
+                              softcap: float | None = None) -> jax.Array:
+    """Plain-softmax oracle over the gathered contiguous cache — the
+    engine's ``impl="jnp"`` computation (fp-tolerance contract)."""
+    B, H, hd = q.shape
+    kheads = k_pool.shape[2]
+    g = H // kheads
+    k_all = k_pool[tables].reshape(B, -1, kheads, hd).astype(jnp.float32)
+    v_all = v_pool[tables].reshape(B, -1, kheads, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, kheads, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k_all) / np.sqrt(hd)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(k_all.shape[1])
+    valid = pos[None, :] <= lens[:, None]
+    if window is not None:
+        valid = valid & (pos[None, :] > (lens[:, None] - window))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_all)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -27,6 +27,19 @@ def main(argv=None):
     p.add_argument("--max-batch", type=int, default=8)
     p.add_argument("--capacity", type=int, default=128)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--paged", action="store_true",
+                   help="slot-level continuous batching over the paged "
+                        "KV block pool (docs/serving.md)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV block size in tokens (paged mode)")
+    p.add_argument("--decode-impl", default="jnp",
+                   choices=("jnp", "kernel"),
+                   help="paged decode attention path")
+    p.add_argument("--arrival-trace", type=int, default=None,
+                   metavar="SEED",
+                   help="drive a synthetic heavy-traffic trace (mixed "
+                        "prompt/output lengths) with this seed instead "
+                        "of uniform synthetic requests")
     args = p.parse_args(argv)
 
     from repro.models.registry import get_bundle
@@ -41,20 +54,37 @@ def main(argv=None):
 
     engine = ServeEngine(bundle, params, ServeConfig(
         capacity=args.capacity, max_batch=args.max_batch,
-        max_new_tokens=args.max_new))
+        max_new_tokens=args.max_new, paged=args.paged,
+        block_size=args.block_size, decode_impl=args.decode_impl))
 
     rng = np.random.default_rng(args.seed)
     vocab = bundle.mcfg.vocab
-    prompts = [rng.integers(0, vocab,
-                            size=rng.integers(4, args.prompt_len + 1))
-               .astype(np.int32) for _ in range(args.requests)]
+    budgets = None
+    if args.arrival_trace is not None:
+        from repro.serve.trace import synthetic_trace
+        buckets = tuple(b for b in engine.cfg.prefill_buckets
+                        if b + args.max_new <= args.capacity)
+        reqs = synthetic_trace(args.arrival_trace, args.requests,
+                               vocab=vocab, buckets=buckets,
+                               max_new=args.max_new)
+        prompts = [r.prompt for r in reqs]
+        budgets = [r.max_new for r in reqs]
+    else:
+        prompts = [rng.integers(0, vocab,
+                                size=rng.integers(4, args.prompt_len + 1))
+                   .astype(np.int32) for _ in range(args.requests)]
 
     t0 = time.time()
-    outs = engine.generate(prompts)
+    outs = engine.generate(prompts, budgets)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
-    print(f"[serve] {len(prompts)} requests, {n_tok} new tokens in "
-          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile)")
+    mode = "paged/slot-level" if args.paged else "dense/whole-batch"
+    print(f"[serve:{mode}] {len(prompts)} requests, {n_tok} new tokens "
+          f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile)")
+    if args.paged and engine.last_stats:
+        print(f"  mean slot occupancy "
+              f"{engine.last_stats['mean_occupancy']:.2f} over "
+              f"{engine.last_stats['steps']} decode steps")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: prompt_len={len(prompts[i])} -> {o[:8]}...")
     return 0

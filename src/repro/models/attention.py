@@ -314,6 +314,11 @@ def decode_attend_stacked(params: dict, x_t: jax.Array, caches: dict,
 
 def _attend_cached(params, q, k_cache, v_cache, cache_len, cfg: AttnCfg,
                    window, ctx):
+    """``cache_len`` may be a traced scalar (one shared write position —
+    the dense engine's whole-batch decode) or a (B,) vector (per-slot
+    lengths — the paged engine's slot-level decode).  The scalar branch
+    is byte-identical to the original code path, so the dense decode's
+    bits never move; the vector branch applies the same mask per row."""
     B = q.shape[0]
     K, hd, H = cfg.n_kv, cfg.head_dim, cfg.n_heads
     scale = 1.0 / np.sqrt(hd)
@@ -321,6 +326,17 @@ def _attend_cached(params, q, k_cache, v_cache, cache_len, cfg: AttnCfg,
                    preferred_element_type=jnp.float32) * scale
     s = softcap(s, cfg.softcap)
     kv_pos = jnp.arange(k_cache.shape[1])
+    if cache_len.ndim == 1:                      # per-slot lengths (B,)
+        valid = kv_pos[None, :] <= cache_len[:, None]
+        if window is not None:
+            valid = valid & (kv_pos[None, :] > cache_len[:, None] - window)
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v_cache.dtype),
+                         v_cache)
+        out = out.reshape(B, 1, H * hd)
+        y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+        return ctx.constrain(y, "batch", None, "embed")
     valid = kv_pos <= cache_len
     if window is not None:
         valid = valid & (kv_pos > cache_len - window)
@@ -361,3 +377,79 @@ def decode_attend(params: dict, x_t: jax.Array, cache: dict,
     y = _attend_cached(params, q, k_cache, v_cache, cache_len, cfg,
                        window, ctx)
     return y, {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------
+# Paged decode (block-pool KV cache, docs/serving.md)
+# --------------------------------------------------------------------------
+
+def paged_cache_specs(cfg: AttnCfg, num_blocks: int, block_size: int):
+    """One layer's shared KV block pool: ``num_blocks`` fixed-size blocks
+    of ``block_size`` tokens each.  Requests own disjoint sets of physical
+    blocks via per-slot block tables (held by the serving engine, not
+    here); block 0 is the reserved trash block that idle slots write to.
+
+    The pool's block axis carries the cache_batch rule: a serving replica
+    owns its whole pool (data axes), heads stay unsharded like the dense
+    cache."""
+    K, hd = cfg.n_kv, cfg.head_dim
+    shape = (num_blocks, block_size, K, hd)
+    axes = ("cache_batch", None, "cache_heads", None)
+    return {"k": PSpec(shape, axes, init="zeros"),
+            "v": PSpec(shape, axes, init="zeros")}
+
+
+def decode_attend_paged(params: dict, x_t: jax.Array, pool: dict,
+                        tables: jax.Array, cache_lens: jax.Array,
+                        active: jax.Array, cfg: AttnCfg, *,
+                        window=None, ctx=NULL_CTX,
+                        impl: str = "jnp", interpret: bool = True):
+    """One-token attention against a paged KV pool.
+
+    x_t: (B, 1, d); pool k/v: (num_blocks, block_size, K, hd);
+    tables: (B, max_blocks) int32 physical block ids (pad entries point
+    at trash block 0); cache_lens: (B,) int32 per-slot write positions;
+    active: (B,) bool — inactive slots have their KV write redirected to
+    the trash block so a freed slot can never scribble on blocks that
+    were reclaimed by another request.
+
+    ``impl="jnp"`` gathers the slot's blocks into a contiguous
+    (B, max_blocks*block_size, K, hd) view and runs the *same* masked
+    softmax as the dense ``decode_attend`` — bitwise-identical logits
+    for identical KV content (the serving parity contract).
+    ``impl="kernel"`` routes through the Pallas ``paged_attention``
+    decode kernel (block tables via scalar prefetch, online softmax).
+
+    Returns (y (B, 1, d), updated pool).
+    """
+    B = x_t.shape[0]
+    K, hd = cfg.n_kv, cfg.head_dim
+    block_size = pool["k"].shape[1]
+    pos = jnp.broadcast_to(cache_lens[:, None], (B, 1))
+    q, k_new, v_new = project_qkv(params, x_t, x_t, cfg, pos, pos, ctx)
+
+    rows = jnp.arange(B)
+    blk = tables[rows, cache_lens // block_size]
+    blk = jnp.where(active, blk, 0)              # trash block for idle slots
+    off = jnp.where(active, cache_lens % block_size, 0)
+    k_pool = pool["k"].at[blk, off].set(k_new[:, 0].astype(pool["k"].dtype))
+    v_pool = pool["v"].at[blk, off].set(v_new[:, 0].astype(pool["v"].dtype))
+    new_pool = {"k": k_pool, "v": v_pool}
+
+    if impl == "kernel":
+        from repro.kernels.paged_attention import paged_attention
+        H = cfg.n_heads
+        out = paged_attention(q.reshape(B, H, hd), k_pool, v_pool,
+                              tables, cache_lens, window=window,
+                              softcap=cfg.softcap, interpret=interpret)
+        out = out.reshape(B, 1, H * hd)
+        y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
+        return ctx.constrain(y, "batch", None, "embed"), new_pool
+    if impl != "jnp":
+        raise ValueError(f"unknown paged attend impl {impl!r} "
+                         "(jnp | kernel; docs/serving.md)")
+    k_all = k_pool[tables].reshape(B, -1, K, hd)
+    v_all = v_pool[tables].reshape(B, -1, K, hd)
+    y = _attend_cached(params, q, k_all, v_all, cache_lens, cfg,
+                       window, ctx)
+    return y, new_pool

@@ -197,6 +197,40 @@ class Bundle:
         return self._mod().decode_step(params, tokens, caches, cache_len,
                                        self.mcfg, ctx)
 
+    def decode_paged(self, params: Any, tokens: jax.Array, pools: Any,
+                     tables: jax.Array, cache_lens: jax.Array,
+                     active: jax.Array, ctx: ShardingCtx = NULL_CTX,
+                     impl: str = "jnp"):
+        self._check_paged()
+        return transformer.decode_step_paged(
+            params, tokens, pools, tables, cache_lens, active, self.mcfg,
+            ctx, impl=impl)
+
+    def paged_cache_specs(self, num_blocks: int, block_size: int) -> Any:
+        self._check_paged()
+        return transformer.paged_cache_specs(self.mcfg, num_blocks,
+                                             block_size)
+
+    def init_paged_caches(self, num_blocks: int, block_size: int,
+                          dtype=jnp.float32) -> Any:
+        return init_tree(self.paged_cache_specs(num_blocks, block_size),
+                         jax.random.key(0), dtype)
+
+    def _check_paged(self) -> None:
+        """Paged serving covers the plain decoder family today: encdec
+        needs a frozen cross-attention cache and hybrid/rwkv carry
+        recurrent state alongside KV — neither maps onto the block pool
+        yet (docs/serving.md)."""
+        if self.family != "decoder":
+            raise ValueError(
+                f"paged decode is decoder-family only, got "
+                f"{self.family!r} (docs/serving.md)")
+        if self.mcfg.prefix_len:
+            raise ValueError(
+                "paged decode does not support frontend-prefix decoders "
+                "yet: the prefix occupies cache positions the block "
+                "allocator would have to own (docs/serving.md)")
+
     def cache_specs(self, batch: int, capacity: int) -> Any:
         return self._mod().cache_specs(self.mcfg, batch, capacity)
 

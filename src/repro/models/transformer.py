@@ -310,6 +310,66 @@ def prefill(params: dict, batch: dict, cfg: TransformerCfg, capacity: int,
     return logits, caches
 
 
+def paged_cache_specs(cfg: TransformerCfg, num_blocks: int,
+                      block_size: int) -> dict:
+    """Per-group paged KV pools (docs/serving.md).  Only attention kinds
+    page — RWKV's recurrent state has no KV sequence to block."""
+    groups = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "rwkv":
+            raise ValueError(
+                "paged KV caches are attention-only: rwkv blocks carry "
+                "recurrent state, not a sequence cache (docs/serving.md)")
+        per = attention.paged_cache_specs(cfg.attn_cfg(), num_blocks,
+                                          block_size)
+        groups[f"{i}:{kind}"] = stack_specs(per, cfg.n_groups)
+    return groups
+
+
+def decode_step_paged(params: dict, tokens: jax.Array, pools: dict,
+                      tables: jax.Array, cache_lens: jax.Array,
+                      active: jax.Array, cfg: TransformerCfg,
+                      ctx=NULL_CTX, impl: str = "jnp"):
+    """One decode step against paged KV pools.  tokens: (B,1);
+    tables: (B, n_blk) int32; cache_lens/active: (B,) per-slot state.
+    Returns (logits (B,1,V) fp32, new pools) — the same layer math as
+    ``decode_step``, with the cache read/write swapped for the paged
+    gather/scatter (``attention.decode_attend_paged``)."""
+    h = embed_tokens(params, tokens, cfg)
+    acfg = cfg.attn_cfg()
+
+    def body(h, xs):
+        group_params, pool = xs
+        new_pools = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            gp = group_params[f"{i}:{kind}"]
+            a_in = apply_norm(gp["ln1"], h, cfg)
+            a, c1 = attention.decode_attend_paged(
+                gp["attn"], a_in, pool[f"{i}:{kind}"], tables,
+                cache_lens, active, acfg, window=cfg.window_for(kind),
+                ctx=ctx, impl=impl)
+            if cfg.post_norms:
+                a = apply_norm(gp["ln1p"], a, cfg)
+            h = h + a
+            f_in = apply_norm(gp["ln2"], h, cfg)
+            if "moe" in gp:
+                f = moe.apply(gp["moe"], f_in, cfg.moe_cfg, ctx)
+            else:
+                f = mlp.apply(gp["mlp"], f_in, cfg.mlp_cfg(), ctx)
+            if cfg.post_norms:
+                f = apply_norm(gp["ln2p"], f, cfg)
+            h = h + f
+            new_pools[f"{i}:{kind}"] = c1
+        return h, new_pools
+
+    h, new_pools = jax.lax.scan(body, h, (params["blocks"], pools))
+    h = apply_norm(params["final_norm"], h, cfg)
+    head, layout = _head(params, cfg)
+    logits = compute_logits(h, head, layout, cfg.final_softcap, ctx,
+                            true_vocab=cfg.vocab)
+    return logits, new_pools
+
+
 def decode_step(params: dict, tokens: jax.Array, caches: dict,
                 cache_len: jax.Array, cfg: TransformerCfg, ctx=NULL_CTX):
     """One decode step. tokens: (B,1). Returns (logits (B,1,V) fp32,

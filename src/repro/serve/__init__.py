@@ -1,3 +1,7 @@
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.paged_cache import (BlockAllocator, blocks_needed,
+                                     paged_decode_attend)
+from repro.serve.trace import synthetic_trace
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ServeConfig", "ServeEngine", "BlockAllocator",
+           "blocks_needed", "paged_decode_attend", "synthetic_trace"]

@@ -1,4 +1,5 @@
-"""Batched serving engine: prefill + cached greedy decode.
+"""Batched serving engine: prefill + cached greedy decode, in two cache
+regimes (docs/serving.md).
 
 Serving is the *deployment* counterpart of Addax fine-tuning (the checklist
 cells ``prefill_32k`` / ``decode_32k`` / ``long_500k`` lower exactly these
@@ -8,10 +9,22 @@ two step functions).  The engine:
   per width bucket — XLA static shapes),
 * runs a jitted one-token decode step against the KV caches,
 * supports per-request early stop (EOS) with a done-mask, and
-* admits up to ``max_batch`` concurrent requests; a simple waiting queue
-  refills *whole batches* between generations (continuous batching at
-  batch granularity — slot-level continuous batching needs paged caches,
-  out of scope and orthogonal to the paper).
+* admits up to ``max_batch`` concurrent requests.
+
+Two batching regimes:
+
+* **dense** (``paged=False``) — each slot owns a (capacity, K, hd) cache
+  row; the waiting queue refills *whole batches* between generations, so
+  one long request holds every slot hostage until the batch drains
+  (head-of-line blocking).
+* **paged** (``paged=True``) — KV lives in a shared block pool
+  (``serve/paged_cache.py``) addressed by per-slot block tables; a
+  finished request's blocks are freed and its slot refilled from the
+  queue at the *next token*.  Per-slot ``cache_len``/done/table state is
+  threaded through ONE jitted decode step (static shapes: refills never
+  retrace — ``n_decode_traces`` stays 1), and the greedy token streams
+  are **bitwise identical** to the dense engine's for the same prompts
+  (gate: ``benchmarks/check_regression.py::check_serving``).
 
 The same engine object runs on CPU smoke configs and, via ``ctx`` +
 shardings at jit time, on the production mesh.
@@ -20,6 +33,7 @@ shardings at jit time, on the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import jax
@@ -28,16 +42,37 @@ import numpy as np
 
 from repro.distributed.sharding import NULL_CTX
 from repro.models.registry import Bundle
+from repro.serve import paged_cache
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    capacity: int = 256          # KV cache length
+    capacity: int = 256          # logical KV cache length per request
     max_batch: int = 8
     max_new_tokens: int = 32
     eos_id: int | None = None
     prefill_buckets: tuple[int, ...] = (32, 64, 128)
     impl: str = "dense"          # attention impl for prefill
+    paged: bool = False          # slot-level continuous batching
+    block_size: int = 16         # KV block size (paged mode)
+    num_blocks: int | None = None    # pool size; default = worst case
+    decode_impl: str = "jnp"     # paged decode: jnp | kernel
+
+    def pool_blocks(self) -> int:
+        """Pool size: worst case (every slot at full capacity) + the
+        reserved trash block, unless overridden."""
+        if self.num_blocks is not None:
+            return self.num_blocks
+        return 1 + self.max_batch * (self.capacity // self.block_size)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: int                     # request index
+    bucket: int
+    budget: int                  # total tokens this request may emit
+    blocks: list[int]
+    t_admit: float
 
 
 class ServeEngine:
@@ -49,37 +84,121 @@ class ServeEngine:
         self.ctx = ctx
         self._prefill = {}       # bucket -> compiled fn
         self._decode = jax.jit(self._decode_impl)
+        self.n_decode_traces = 0
+        self.last_stats: dict = {}
+        if cfg.paged:
+            bundle._check_paged()
+            # fail fast on archs whose layer stack can't page (rwkv
+            # recurrent state has no KV sequence to block)
+            bundle.paged_cache_specs(cfg.pool_blocks(), cfg.block_size)
+            if cfg.capacity % cfg.block_size:
+                raise ValueError(
+                    f"capacity {cfg.capacity} must be a multiple of "
+                    f"block_size {cfg.block_size}")
+            bad = [b for b in cfg.prefill_buckets if b % cfg.block_size]
+            if bad:
+                raise ValueError(
+                    f"prefill buckets {bad} are not multiples of "
+                    f"block_size {cfg.block_size} — prompts must fill "
+                    "whole KV blocks (docs/serving.md)")
+            self._n_blk = cfg.capacity // cfg.block_size
+            self._decode_paged = jax.jit(self._decode_paged_impl)
+            self._admit_jit = jax.jit(self._admit_impl,
+                                      static_argnames=("capacity",))
 
     # ------------------------------------------------------------- compile
-    def _prefill_impl(self, params, batch):
-        return self.bundle.prefill(params, batch, self.cfg.capacity,
-                                   self.ctx, impl=self.cfg.impl)
+    def _prefill_impl(self, params, batch, capacity):
+        return self.bundle.prefill(params, batch, capacity, self.ctx,
+                                   impl=self.cfg.impl)
 
     def _decode_impl(self, params, tokens, caches, cache_len):
+        self.n_decode_traces += 1        # python side effect: trace count
         logits, caches = self.bundle.decode(params, tokens, caches,
                                             cache_len, self.ctx)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt[:, None], caches
 
-    def _prefill_for(self, width: int):
-        bucket = next((b for b in self.cfg.prefill_buckets if b >= width),
-                      self.cfg.prefill_buckets[-1])
-        if bucket not in self._prefill:
-            self._prefill[bucket] = jax.jit(self._prefill_impl)
-        return bucket, self._prefill[bucket]
+    def _decode_paged_impl(self, params, tokens, pools, state):
+        """One paged decode step.  ``state`` is the packed per-slot
+        (B, n_blk + 2) int32 array [block table | cache_len | active] —
+        one upload instead of three when the host patches it, and the
+        step advances cache_len itself so the host never re-uploads
+        between refill events."""
+        self.n_decode_traces += 1
+        n_blk = self._n_blk
+        tables = state[:, :n_blk]
+        lens = state[:, n_blk]
+        active = state[:, n_blk + 1].astype(bool)
+        logits, pools = self.bundle.decode_paged(
+            params, tokens[:, None], pools, tables, lens, active,
+            self.ctx, impl=self.cfg.decode_impl)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        state = state.at[:, n_blk].add(state[:, n_blk + 1])
+        return nxt, pools, state
+
+    def _bucket_for(self, width: int) -> int:
+        ladder = self.cfg.prefill_buckets
+        if width > ladder[-1]:
+            raise ValueError(
+                f"prompt of {width} tokens exceeds the largest prefill "
+                f"bucket (ladder: {ladder}) — refusing to truncate "
+                "silently; extend prefill_buckets or shorten the prompt")
+        return next(b for b in ladder if b >= width)
+
+    def _check_capacity(self, bucket: int, max_new: int) -> None:
+        need = self._prefill_len(bucket) + max_new
+        if need > self.cfg.capacity:
+            raise ValueError(
+                f"prefill_len({bucket}) + max_new({max_new}) = {need} "
+                f"exceeds KV capacity {self.cfg.capacity} — decode would "
+                "silently clamp onto the last cache slot; raise capacity "
+                "or lower max_new_tokens")
+
+    def _prefill_for(self, width: int, capacity: int | None = None):
+        bucket = self._bucket_for(width)
+        capacity = self.cfg.capacity if capacity is None else capacity
+        key = (bucket, capacity)
+        if key not in self._prefill:
+            self._prefill[key] = jax.jit(
+                self._prefill_impl, static_argnames=("capacity",))
+        return bucket, self._prefill[key]
 
     # -------------------------------------------------------------- public
     def generate(self, prompts: Sequence[np.ndarray],
-                 max_new: int | None = None) -> list[np.ndarray]:
+                 max_new: int | Sequence[int] | None = None
+                 ) -> list[np.ndarray]:
         """Greedy-decode a list of int32 prompt arrays; returns the new
-        tokens per request (post-EOS positions trimmed)."""
-        max_new = max_new or self.cfg.max_new_tokens
+        tokens per request (post-EOS positions trimmed).  ``max_new`` may
+        be per-request (a sequence) — the paged engine stops each slot at
+        its own budget; the dense engine runs each batch to the max and
+        trims (head-of-line blocking, measured by fig_serving)."""
+        budgets = self._budgets(len(prompts), max_new)
+        for p, budget in zip(prompts, budgets):
+            self._check_capacity(self._bucket_for(len(p)), budget)
+        if self.cfg.paged:
+            return self._generate_paged(list(prompts), budgets)
         out: list[np.ndarray] = []
+        t0 = time.perf_counter()
+        lat = []
         for lo in range(0, len(prompts), self.cfg.max_batch):
-            out.extend(self._generate_batch(
-                list(prompts[lo:lo + self.cfg.max_batch]), max_new))
+            chunk = budgets[lo:lo + self.cfg.max_batch]
+            rows = self._generate_batch(
+                list(prompts[lo:lo + self.cfg.max_batch]), max(chunk))
+            out.extend(r[:m] for r, m in zip(rows, chunk))
+            lat.extend([time.perf_counter() - t0] * len(rows))
+        self.last_stats = {"latency_s": lat, "mode": "dense"}
         return out
 
+    def _budgets(self, n: int, max_new) -> list[int]:
+        if max_new is None:
+            return [self.cfg.max_new_tokens] * n
+        if isinstance(max_new, (int, np.integer)):
+            return [int(max_new)] * n
+        if len(max_new) != n:
+            raise ValueError(f"{len(max_new)} budgets for {n} prompts")
+        return [int(m) for m in max_new]
+
+    # --------------------------------------------------- dense whole-batch
     def _generate_batch(self, prompts: list[np.ndarray],
                         max_new: int) -> list[np.ndarray]:
         b = len(prompts)
@@ -87,9 +206,9 @@ class ServeEngine:
         bucket, prefill = self._prefill_for(width)
         toks = np.zeros((b, bucket), np.int32)
         for r, p in enumerate(prompts):
-            toks[r, bucket - len(p):] = p[:bucket]  # left-pad: last == last
+            toks[r, bucket - len(p):] = p  # left-pad: last == last
         batch = self._wrap_tokens(toks)
-        logits, caches = prefill(self.params, batch)
+        logits, caches = prefill(self.params, batch, self.cfg.capacity)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
 
         cache_len = jnp.asarray(self._prefill_len(bucket), jnp.int32)
@@ -104,15 +223,180 @@ class ServeEngine:
                 if done.all():
                     break
         stacked = np.concatenate([np.asarray(g) for g in gen], axis=1)
-        results = []
-        for r in range(b):
-            row = stacked[r]
-            if self.cfg.eos_id is not None:
-                hits = np.where(row == self.cfg.eos_id)[0]
-                if hits.size:
-                    row = row[:hits[0] + 1]
-            results.append(row)
-        return results
+        return [self._trim(stacked[r]) for r in range(b)]
+
+    def _trim(self, row: np.ndarray) -> np.ndarray:
+        if self.cfg.eos_id is not None:
+            hits = np.where(row == self.cfg.eos_id)[0]
+            if hits.size:
+                row = row[:hits[0] + 1]
+        return row
+
+    # ------------------------------------------------- paged / slot-level
+    def _admit_impl(self, params, batch, pools, block_ids, capacity):
+        """Fused admission step: b=1 prefill at ``capacity=bucket`` (no
+        pad), first-token argmax, and the scatter of the fresh KV into
+        the allocated pool blocks — one dispatch per admitted request."""
+        logits, caches = self.bundle.prefill(params, batch, capacity,
+                                             self.ctx, impl=self.cfg.impl)
+        tok0 = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        pools = paged_cache.pack_prefill_caches(pools, caches, block_ids)
+        return tok0, pools
+
+    def _prefill_paged(self, prompt: np.ndarray, bucket: int,
+                       pools, block_ids: list[int]):
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, bucket - len(prompt):] = prompt
+        prompt_blocks = bucket // self.cfg.block_size
+        ids = jnp.asarray(block_ids[:prompt_blocks], jnp.int32)
+        tok0, pools = self._admit_jit(self.params, self._wrap_tokens(toks),
+                                      pools, ids, bucket)
+        return tok0, pools
+
+    def _generate_paged(self, prompts: list[np.ndarray],
+                        budgets: list[int]) -> list[np.ndarray]:
+        cfg = self.cfg
+        B, bs = cfg.max_batch, cfg.block_size
+        alloc = paged_cache.BlockAllocator(cfg.pool_blocks())
+        pools = self.bundle.init_paged_caches(cfg.pool_blocks(), bs)
+        # slot state is mirrored on the host — packed [table|len|active]
+        # rows, so a dirty step uploads ONE array — and sent to device
+        # only on steps where an admit/finish event changed it; in
+        # steady state the loop is ONE async decode dispatch per token —
+        # the decode step advances cache_len itself and ``pending`` is
+        # the previous step's output.  With eos_id=None the schedule is
+        # known host-side (budgets), so the loop never blocks except at
+        # slot-finish events (per-request latency timestamps); with EOS
+        # on, every step syncs because token values steer early stop.
+        n_blk = self._n_blk
+        state_h = np.zeros((B, n_blk + 2), np.int32)  # 0 = trash block
+        state_d = jnp.asarray(state_h)
+        pending = jnp.zeros(B, jnp.int32)  # next token to feed per slot
+        tok_patch: list[tuple[int, jax.Array]] = []  # staged first tokens
+        dirty = False
+        slots: list[_Slot | None] = [None] * B
+        occupied: list[tuple[int, int]] = []     # (slot, req), event-cached
+        sync = cfg.eos_id is not None
+
+        waiting = list(range(len(prompts)))
+        counts = [0] * len(prompts)          # tokens emitted per request
+        emitted: list[list[int]] = [[] for _ in prompts]
+        tok0s: list[tuple[int, jax.Array]] = []      # async: first tokens
+        step_log: list[tuple] = []           # async: (nxt, slot->req map)
+        latency = [0.0] * len(prompts)
+        occupancy: list[float] = []
+        t0 = time.perf_counter()
+
+        def req_done(slot: _Slot) -> bool:
+            if counts[slot.req] >= slot.budget:
+                return True
+            e = emitted[slot.req]
+            return sync and bool(e) and e[-1] == cfg.eos_id
+
+        def finish(s: int, out) -> None:
+            slot = slots[s]
+            nonlocal dirty
+            if not sync and out is not None:
+                jax.block_until_ready(out)   # true completion timestamp
+            latency[slot.req] = time.perf_counter() - t0
+            alloc.free(slot.blocks)
+            slots[s] = None
+            state_h[s, :n_blk] = paged_cache.TRASH_BLOCK
+            state_h[s, n_blk:] = 0           # cache_len, active
+            dirty = True
+
+        def admit(s: int) -> bool:
+            req = waiting[0]
+            prompt = prompts[req]
+            bucket = self._bucket_for(len(prompt))
+            need = paged_cache.blocks_needed(bucket + budgets[req], bs)
+            ids = alloc.alloc(need)
+            if ids is None:                  # pool full: stay queued
+                if not any(sl is not None for sl in slots):
+                    raise ValueError(
+                        f"request {req} needs {need} KV blocks but the "
+                        f"idle pool has {alloc.n_free} free "
+                        f"(num_blocks={cfg.pool_blocks()}) — the pool "
+                        "can never satisfy it; raise num_blocks")
+                return False
+            waiting.pop(0)
+            nonlocal pools, dirty
+            tok0, pools = self._prefill_paged(prompt, bucket, pools, ids)
+            slots[s] = _Slot(req=req, bucket=bucket, budget=budgets[req],
+                             blocks=ids, t_admit=time.perf_counter() - t0)
+            counts[req] = 1
+            if sync:
+                emitted[req].append(int(np.asarray(tok0)))
+            else:
+                tok0s.append((req, tok0))
+            if req_done(slots[s]):
+                finish(s, tok0)
+                return True
+            state_h[s, :need] = ids
+            state_h[s, need:n_blk] = paged_cache.TRASH_BLOCK
+            state_h[s, n_blk] = bucket       # cache_len
+            state_h[s, n_blk + 1] = 1        # active
+            tok_patch.append((s, tok0))
+            dirty = True
+            return True
+
+        while waiting or any(sl is not None for sl in slots):
+            # slot-level admission: freed slots are refilled *now*, i.e.
+            # before the next token, not after the batch drains
+            stuck = False
+            for s in range(B):
+                while waiting and slots[s] is None and not stuck:
+                    stuck = not admit(s)
+                if stuck:
+                    break                    # allocator exhausted: wait
+            if dirty:
+                occupied = [(s, slots[s].req) for s in range(B)
+                            if slots[s] is not None]
+                state_d = jnp.asarray(state_h)
+                if tok_patch:
+                    idx = jnp.asarray([s for s, _ in tok_patch], jnp.int32)
+                    pending = pending.at[idx].set(
+                        jnp.stack([t for _, t in tok_patch]))
+                    tok_patch.clear()
+                dirty = False
+            if not occupied:
+                continue                     # e.g. all admits emitted EOS
+            occupancy.append(len(occupied) / B)
+            nxt, pools, state_d = self._decode_paged(
+                self.params, pending, pools, state_d)
+            pending = nxt
+            state_h[:, n_blk] += state_h[:, n_blk + 1]  # mirror cache_len
+            if sync:
+                vals = np.asarray(nxt)
+                for s, req in occupied:
+                    counts[req] += 1
+                    emitted[req].append(int(vals[s]))
+            else:
+                for _, req in occupied:
+                    counts[req] += 1
+                step_log.append((nxt, occupied))
+            for s, req in occupied:
+                if slots[s] is not None and req_done(slots[s]):
+                    finish(s, nxt)
+
+        wall = time.perf_counter() - t0
+        if not sync:                         # distribute the token streams
+            for req, tok0 in tok0s:
+                emitted[req].append(int(np.asarray(tok0)))
+            if step_log:
+                rows = np.asarray(jnp.stack([n for n, _ in step_log]))
+                for (_, occupied), vals in zip(step_log, rows):
+                    for s, req in occupied:
+                        emitted[req].append(int(vals[s]))
+
+        self.last_stats = {
+            "mode": "paged", "steps": len(occupancy),
+            "wall_s": wall,
+            "occupancy": occupancy, "latency_s": latency,
+            "mean_occupancy": (float(np.mean(occupancy))
+                               if occupancy else 0.0),
+        }
+        return [np.asarray(e, np.int32) for e in emitted]
 
     # -------------------------------------------------------------- shapes
     def _wrap_tokens(self, toks: np.ndarray) -> dict:

@@ -1,0 +1,119 @@
+"""Paged KV cache: fixed-size blocks in a shared pool + per-request block
+tables (docs/serving.md).
+
+The dense serving cache is one (B, capacity, K, hd) buffer per layer —
+every slot owns ``capacity`` positions for its whole lifetime, so KV
+memory scales with the *worst case* request and whole batches must drain
+together.  The paged layout (vLLM's insight) breaks the cache into
+``block_size``-token blocks in one pool; a request owns only the blocks
+its table names, blocks return to the free list the moment the request
+finishes, and a freed slot can be refilled at the *next token*.
+
+Host-side state (this module): the ``BlockAllocator`` free list and the
+packing of a fresh b=1 prefill into pool blocks.  Device-side math lives
+in ``repro.models.attention.decode_attend_paged`` — re-exported here as
+``paged_decode_attend``, the jnp reference whose outputs are **bitwise**
+comparable to the dense ``decode_attend`` path (it gathers the table's
+blocks into the same contiguous (capacity, K, hd) view and runs the
+identical masked softmax; the serving parity contract in
+``tests/test_serve.py`` / ``benchmarks/check_regression.py`` rides on
+it).
+
+Block 0 is reserved as the *trash block*: pad table entries and inactive
+slots point at it, so a masked gather or a redirected write can never
+touch a block another request owns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attend_paged as paged_decode_attend
+
+TRASH_BLOCK = 0
+
+
+def blocks_needed(n_tokens: int, block_size: int) -> int:
+    """Blocks to hold ``n_tokens`` cache positions (ceil division)."""
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over pool blocks ``1..num_blocks-1`` (block 0
+    is the trash block and is never handed out).  Allocation order is
+    deterministic (ascending ids) so a replayed request sequence
+    produces identical tables — slot-refill determinism is testable."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 is the reserved trash "
+                             f"block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() -> lowest
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """``n`` block ids, or None if the pool can't satisfy it now."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, ids: list[int]) -> None:
+        live = set(self._free)
+        for i in ids:
+            if i == TRASH_BLOCK or i in live or not (
+                    0 < i < self.num_blocks):
+                raise ValueError(f"double/invalid free of block {i}")
+        # keep pop() == lowest id: the free list stays descending
+        self._free = sorted(set(self._free) | set(ids), reverse=True)
+
+
+def pack_prefill_caches(pools: dict, caches: dict,
+                        block_ids: jax.Array) -> dict:
+    """Scatter a b=1 prefill's per-group KV caches into pool blocks.
+
+    ``pools``: {group: {k/v: (n_groups, num_blocks, bs, K, hd)}};
+    ``caches``: {group: {k/v: (n_groups, 1, S, K, hd)}} with S an exact
+    multiple of ``bs`` (buckets are validated to be block-aligned);
+    ``block_ids``: (S // bs,) int32 destination blocks.  Pure function —
+    jit it per bucket shape (the engine does).
+    """
+    out = {}
+    for key, pool in pools.items():
+        cache = caches[key]
+        n_groups, num_blocks, bs, K, hd = pool["k"].shape
+        s = cache["k"].shape[2]
+        vals_k = cache["k"][:, 0].reshape(n_groups, s // bs, bs, K, hd)
+        vals_v = cache["v"][:, 0].reshape(n_groups, s // bs, bs, K, hd)
+        out[key] = {
+            "k": pool["k"].at[:, block_ids].set(
+                vals_k.astype(pool["k"].dtype)),
+            "v": pool["v"].at[:, block_ids].set(
+                vals_v.astype(pool["v"].dtype)),
+        }
+    return out
+
+
+def gather_slot_cache(pools: dict, table: jax.Array) -> dict:
+    """Debug/test helper: materialize one slot's contiguous logical cache
+    {group: {k/v: (n_groups, 1, n_blk*bs, K, hd)}} from its table."""
+    out = {}
+    for key, pool in pools.items():
+        n_groups, _, bs, K, hd = pool["k"].shape
+        n_blk = table.shape[0]
+        out[key] = {
+            "k": pool["k"][:, table].reshape(
+                n_groups, 1, n_blk * bs, K, hd),
+            "v": pool["v"][:, table].reshape(
+                n_groups, 1, n_blk * bs, K, hd),
+        }
+    return out
+
+
+__all__ = ["BlockAllocator", "TRASH_BLOCK", "blocks_needed",
+           "pack_prefill_caches", "gather_slot_cache",
+           "paged_decode_attend"]

@@ -59,4 +59,13 @@ def test_serve_cli_smoke():
     r = _run(["repro.launch.serve", "--arch", "tiny-100m", "--smoke",
               "--requests", "4", "--max-new", "4", "--capacity", "64"])
     assert r.returncode == 0, r.stderr[-2000:]
-    assert "[serve] 4 requests" in r.stdout
+    assert "[serve:dense/whole-batch] 4 requests" in r.stdout
+
+
+def test_serve_cli_paged_smoke():
+    r = _run(["repro.launch.serve", "--arch", "tiny-100m", "--smoke",
+              "--requests", "4", "--max-new", "4", "--capacity", "64",
+              "--paged", "--block-size", "16", "--arrival-trace", "0"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[serve:paged/slot-level] 4 requests" in r.stdout
+    assert "mean slot occupancy" in r.stdout

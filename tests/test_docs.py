@@ -35,8 +35,8 @@ def test_relative_links_resolve():
     # the whole documented surface must actually be scanned
     scanned = {os.path.relpath(p, REPO) for p in paths}
     for expected in ("README.md", "DESIGN.md", "docs/engine.md",
-                     "docs/memory-model.md", "benchmarks/README.md",
-                     "tests/README.md"):
+                     "docs/memory-model.md", "docs/serving.md",
+                     "benchmarks/README.md", "tests/README.md"):
         assert expected in scanned, f"{expected} missing from link scan"
     broken = check_links.check_files(paths)
     assert not broken, f"broken relative links: {broken}"
@@ -65,6 +65,21 @@ def test_engine_md_covers_raise_surface():
                    "moments_checksum", "spsa_bank_grad", "dir_seeds",
                    "BankSchedule", "check_moments", "shard_bank"):
         assert needle in text, needle
+
+
+def test_serving_md_covers_raise_surface():
+    """Serving error messages route users to docs/serving.md — the
+    anchors they promise must exist there."""
+    text = _read("docs/serving.md")
+    for needle in ("exceeds the largest prefill", "exceeds KV capacity",
+                   "can never satisfy", "TRASH_BLOCK", "block_size",
+                   "n_decode_traces", "decoder-family only",
+                   "paged_decode_attend", "streams_bitwise",
+                   "--arrival-trace"):
+        assert needle in text, needle
+    # linked from both entry points
+    assert "docs/serving.md" in _read("README.md")
+    assert "serving.md" in _read("docs/engine.md")
 
 
 def test_design_has_section_6():
