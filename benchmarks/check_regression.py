@@ -55,6 +55,11 @@ FIGURES = {
     "fig_host_overlap": ["--quick"],
     "fig_compressed_dp": ["--quick", "--steps", "6"],
     "fig_serving": ["--quick"],
+    # must stay LAST: it calibrates core.perf_model from the results/
+    # JSONs on disk, so a full gate validates against the fresh corpus
+    # the figures above just wrote (--only fig_plan_auto validates
+    # against the committed corpus — the CI plan-auto job)
+    "fig_plan_auto": ["--quick"],
 }
 
 
@@ -388,13 +393,80 @@ def check_serving(fresh: dict, committed: dict, tol: float, slack: float,
             "refill")
 
 
+def check_plan_auto(fresh: dict, committed: dict, tol: float, slack: float,
+                    failures: list):
+    """Perf-model gate (docs/perf-model.md): on every sweep axis the
+    measured-best knob setting must sit within the model's top-2
+    distinct predictions, and the plan-chosen executor's measured step
+    time must land within the 15% bound of the measured-best grid point
+    — both *live* hard-fails on the fresh run (they ARE the tentpole
+    claim, not a comparison).  The calibrated-executor set and the
+    distribution-driven plan geometry (the paper's FO/ZO split on a
+    deterministic synthetic corpus) are exact; the live plan-vs-best
+    ratio is additionally banded against the committed run."""
+    fa = _need(fresh, "axes", "fig_plan_auto")
+    ca = _need(committed, "axes", "fig_plan_auto")
+    for axis in ca:
+        if axis not in fa:
+            raise GateFailure(f"fig_plan_auto: fresh run lost axis "
+                              f"{axis!r}")
+    for axis, ax in fa.items():
+        if not _need(ax, "best_in_top2", axis):
+            raise GateFailure(
+                f"fig_plan_auto: axis {axis}: measured best "
+                f"{ax.get('measured_best')!r} outside the model's top-2 "
+                f"distinct predictions (ranking "
+                f"{ax.get('predicted_ranking')}) — the calibrated model "
+                "no longer ranks this sweep (docs/perf-model.md)")
+        print(f"  [ok] plan_auto axis {axis}: best "
+              f"{ax['measured_best']!r} in predicted top-2")
+    fl = _need(fresh, "live", "fig_plan_auto")
+    bound = _need(fresh, "plan_vs_best_bound", "fig_plan_auto")
+    ratio = _need(fl, "plan_vs_best_ratio", "live")
+    ok = ratio <= bound
+    print(f"  [{'ok' if ok else 'FAIL'}] plan_auto live grid: chosen "
+          f"{fl.get('plan_choice')!r} vs best {fl.get('measured_best')!r} "
+          f"x{ratio:.3f} (must be <= {bound})")
+    if not ok:
+        raise GateFailure(
+            f"fig_plan_auto: plan-chosen executor is x{ratio:.3f} of the "
+            f"measured best (> {bound}) — plan_auto's pick left the "
+            "acceptance envelope")
+    _exact("plan_auto plan_vs_best_bound", bound,
+           _need(committed, "plan_vs_best_bound", "fig_plan_auto"),
+           failures)
+    _exact("plan_auto live.n_dirs", _need(fl, "n_dirs", "live"),
+           _need(_need(committed, "live", "fig_plan_auto"), "n_dirs",
+                 "live"), failures)
+    _band("plan_auto live.plan_vs_best_ratio", ratio,
+          _need(_need(committed, "live", "fig_plan_auto"),
+                "plan_vs_best_ratio", "live"), tol, failures)
+    # the calibrated-executor set must never silently shrink
+    _exact("plan_auto calibrated executors",
+           sorted(_need(_need(fresh, "model", "fig_plan_auto"),
+                        "exec_fits", "model")),
+           sorted(_need(_need(committed, "model", "fig_plan_auto"),
+                        "exec_fits", "model")), failures)
+    # plan geometry on the deterministic synthetic distribution: the
+    # paper's FO/ZO split is corpus-independent — exact
+    fplan = _need(_need(fresh, "plan_record", "fig_plan_auto"), "plan",
+                  "plan_record")
+    cplan = _need(_need(committed, "plan_record", "fig_plan_auto"),
+                  "plan", "plan_record")
+    for key in ("k0", "k1", "s_full", "l_t", "fo_buckets", "pack",
+                "optimizer"):
+        _exact(f"plan_auto plan.{key}", _need(fplan, key, "plan"),
+               _need(cplan, key, "plan"), failures)
+
+
 CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_sharded_bank": check_sharded,
           "fig_bank_exec": check_bank_exec,
           "fig_dp_moments": check_dp_moments,
           "fig_host_overlap": check_host_overlap,
           "fig_compressed_dp": check_compressed_dp,
-          "fig_serving": check_serving}
+          "fig_serving": check_serving,
+          "fig_plan_auto": check_plan_auto}
 
 
 # --------------------------------------------------------------------------

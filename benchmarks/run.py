@@ -39,7 +39,7 @@ def main(argv=None):
     from benchmarks import (fig3_memory_vs_batch, fig4_memory_vs_seqlen,
                             fig5_k0_sweep, fig11_convergence,
                             fig_bank_exec, fig_host_overlap,
-                            fig_ndirs_sweep, fig_serving,
+                            fig_ndirs_sweep, fig_plan_auto, fig_serving,
                             roofline_report, table_accuracy_memory)
     suite = {
         "fig3_memory_vs_batch": lambda: fig3_memory_vs_batch.run(
@@ -58,6 +58,9 @@ def main(argv=None):
         "table_accuracy_memory": lambda: table_accuracy_memory.run(
             quick=quick),
         "roofline_report": lambda: roofline_report.run(),
+        # last: calibrates core.perf_model from the results/ corpus the
+        # figures above refresh (benchmarks/fig_plan_auto.py)
+        "fig_plan_auto": lambda: fig_plan_auto.run(quick=quick),
     }
     if args.only:
         suite = {k: v for k, v in suite.items() if k in args.only}

@@ -161,14 +161,29 @@ def plan_bucket_edges(lengths: np.ndarray, n_buckets: int, batch: int,
 
 def memory_model(seq_len: int, batch: int, n_layers: int, d_model: int,
                  n_heads: int, dtype_bytes: int = 2,
-                 flash: bool = True) -> int:
+                 flash: bool = True, vocab: int = 0) -> int:
     """First-order activation-memory estimate in bytes (the quantity the
     paper's Figure 4 measures empirically): per-layer residual + attention
-    internals that backprop must keep.  Used by the pipeline to auto-pick
-    (K0, K1, L_T) against a per-chip HBM budget, mirroring Appendix D.6."""
+    internals that backprop must keep, plus the vocab-head logits when
+    ``vocab`` is given.  Used by the pipeline to auto-pick (K0, K1, L_T)
+    against a per-chip HBM budget, mirroring Appendix D.6.
+
+    The logits term matters: at (B, S, V) the forward logits and their
+    softmax cotangent are two live f32 buffers that dwarf one layer's
+    residuals for realistic vocabularies — omitting them made this model
+    disagree with the compiled module's ``temp_size_in_bytes`` by >2x on
+    tiny_100m (the hlo_cost cross-check in tests/test_perf_model.py pins
+    the agreement band).  ``vocab=0`` preserves the historical
+    layers-only estimate for existing ladder callers whose HBM budgets
+    were set against it; absolute-accuracy consumers
+    (``core.perf_model``) pass the real vocab."""
     per_token = d_model * dtype_bytes
     # ~8 live d_model-sized tensors per layer under our remat policy
     act = 8 * n_layers * batch * seq_len * per_token
     if not flash:
         act += n_layers * batch * n_heads * seq_len * seq_len * dtype_bytes
+    if vocab:
+        # forward logits + backward cotangent, both f32 regardless of
+        # param dtype (the loss upcasts)
+        act += 2 * batch * seq_len * vocab * 4
     return act

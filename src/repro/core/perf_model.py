@@ -1,0 +1,547 @@
+"""One measured, calibrated performance model for the step/runtime stack.
+
+Model form (docs/perf-model.md):
+
+    t_step = [ t0(backend, bank_exec) + sec_per_flop(mode, exec) * F ]
+             * host_factor(runtime variant)
+
+i.e. *analytic* FLOPs/bytes (``CostEstimate`` — the merge of
+``launch.hlo_cost.Cost`` and ``core.assignment.memory_model``) times
+*fitted* per-(backend, bank_exec, bucket-config) overhead factors.  The
+analytic side is exact arithmetic from the paper's 6ND accounting
+(``launch.roofline.model_flops_for``); the fitted side comes from a few
+targeted probe runs plus the committed ``benchmarks/results/*.json``
+corpus:
+
+  * ``fig_bank_exec.json``  — per-(spsa_mode, bank_exec) linear fits
+    ``t(n_dirs) = t0 + sec_per_flop * F(n_dirs)`` through the n_dirs in
+    {4, 8} grid points (n_dirs==1 rows are excluded from the fit because
+    every vectorized executor falls back to unroll there — the model
+    mirrors that fallback at predict time instead);
+  * ``fig_host_overlap.json`` — multiplicative host factors per runtime
+    variant (sync / prefetch / streamed) plus the host batch-build cost;
+  * ``fig_ndirs_sweep.json``  — the end-to-end train-step wall fit
+    ``t(n_dirs) = a + b * n_dirs`` on the tiny_100m smoke cell.
+
+``plan_auto(arch, hardware, batch_distribution) -> Plan`` puts the model
+in charge: it picks the full knob vector — including the paper's FO/ZO
+batch split (K0, K1, L_T via ``assignment.choose_l_t``) — and returns a
+fully-resolved ``core.plan.Plan``.  Every knob it sets is declared
+``planned=True`` in the ``core.plan.KNOBS`` registry; a future knob must
+register there before ``plan_auto`` may touch it.
+
+This module lives in ``core`` but calibrates against launch/benchmarks
+artifacts — all such imports are call-time, keeping ``core`` free of
+module-level ``launch`` dependencies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.core import assignment
+from repro.core.plan import Plan, resolve_bank_exec
+
+# ---------------------------------------------------------------------------
+# CostEstimate: the merged analytic cost surface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Analytic cost of one step: compute + memory in one record.
+
+    Merges the two previously-partial models: ``hlo_cost.Cost`` carries
+    flops / HBM-boundary bytes / collective bytes of a *compiled*
+    module, ``assignment.memory_model`` carries the *pre-compile*
+    activation estimate.  Either source can populate a CostEstimate
+    (``from_hlo_cost`` / ``train_step_cost``), so predicted-vs-measured
+    comparisons are one dataclass diff."""
+    flops: float = 0.0
+    hbm_bytes: float = 0.0        # HBM-boundary traffic
+    coll_bytes: float = 0.0       # collective operand bytes
+    param_bytes: float = 0.0      # parameter (+opt state) footprint
+    act_bytes: float = 0.0        # live activation footprint
+    transcendentals: float = 0.0
+
+    @classmethod
+    def from_hlo_cost(cls, cost: Any, param_bytes: float = 0.0,
+                      act_bytes: float = 0.0) -> "CostEstimate":
+        """From a ``launch.hlo_cost.Cost`` (duck-typed: flops / bytes /
+        coll_bytes / transcendentals attrs)."""
+        return cls(flops=float(cost.flops), hbm_bytes=float(cost.bytes),
+                   coll_bytes=float(cost.coll_bytes),
+                   param_bytes=float(param_bytes),
+                   act_bytes=float(act_bytes),
+                   transcendentals=float(getattr(cost, "transcendentals",
+                                                 0.0)))
+
+    def add(self, other: "CostEstimate", mult: float = 1.0) -> "CostEstimate":
+        return CostEstimate(
+            *(getattr(self, f.name) + mult * getattr(other, f.name)
+              for f in dataclasses.fields(CostEstimate)))
+
+    def scale(self, mult: float) -> "CostEstimate":
+        return CostEstimate(
+            *(mult * getattr(self, f.name)
+              for f in dataclasses.fields(CostEstimate)))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepDims:
+    """Everything the analytic model needs about one train step."""
+    n_params: float               # active params (MoE-discounted)
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab: int
+    k0: int                       # ZO batch (long sequences)
+    k1: int                       # FO batch (short sequences)
+    s_full: int
+    l_t: int
+    n_dirs: int = 1
+    dtype_bytes: int = 4          # training params are f32 by default
+
+    @classmethod
+    def from_arch(cls, arch, plan: Plan) -> "StepDims":
+        from repro.launch.roofline import count_params
+        from repro.models.registry import Bundle
+        m = arch.model
+        import jax.numpy as jnp
+        return cls(
+            n_params=count_params(Bundle(arch))["active"],
+            n_layers=getattr(m, "n_layers", 1),
+            d_model=getattr(m, "d_model", 1),
+            n_heads=getattr(m, "n_heads", 1),
+            vocab=getattr(m, "vocab", 0),
+            k0=plan.k0, k1=plan.k1, s_full=plan.s_full,
+            l_t=plan.l_t if plan.l_t is not None else plan.s_full,
+            n_dirs=plan.n_dirs,
+            dtype_bytes=jnp.dtype(plan.param_dtype).itemsize)
+
+
+def train_step_cost(dims: StepDims, flash: bool = False) -> CostEstimate:
+    """Analytic Addax train-step cost (paper §3.1 / DESIGN.md §4):
+
+      flops      = 6 N (K1 L_T)        FO fwd+bwd on the short stream
+                 + 4 N (K0 S) n_dirs   2 ZO forwards per direction
+      param traffic: the FO pass reads+writes params once (3x with the
+                 gradient), each ZO direction re-reads them twice;
+      act_bytes  = memory_model of the FO stream (vocab-aware — the ZO
+                 stream stores no activations, which is the paper's
+                 whole memory argument)."""
+    n = dims.n_params
+    fo_flops = 6.0 * n * dims.k1 * dims.l_t
+    zo_flops = 4.0 * n * dims.k0 * dims.s_full * dims.n_dirs
+    pb = n * dims.dtype_bytes
+    act = assignment.memory_model(
+        dims.l_t, dims.k1, dims.n_layers, dims.d_model, dims.n_heads,
+        dtype_bytes=dims.dtype_bytes, flash=flash, vocab=dims.vocab)
+    return CostEstimate(
+        flops=fo_flops + zo_flops,
+        hbm_bytes=pb * (3.0 + 2.0 * dims.n_dirs) + 2.0 * act,
+        param_bytes=pb, act_bytes=float(act))
+
+
+# ---------------------------------------------------------------------------
+# Hardware
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops_per_s: float
+    hbm_bytes_per_s: float
+    ici_bytes_per_s: float
+    hbm_bytes: float
+    n_devices: int = 1
+
+
+def tpu_v5e(n_devices: int = 1) -> Hardware:
+    from repro.launch import roofline
+    return Hardware("tpu_v5e", roofline.PEAK_FLOPS, roofline.HBM_BW,
+                    roofline.ICI_BW, 16e9, n_devices)
+
+
+#: nominal single-host CPU — the calibration platform for the committed
+#: corpus; absolute numbers come from the fits, this only anchors
+#: cross-hardware scaling
+CPU_HOST = Hardware("cpu", 5e10, 3e10, 1e9, 64e9, 1)
+
+
+def detect_hardware() -> Hardware:
+    import jax
+    devs = jax.devices()
+    if devs[0].platform == "tpu":
+        return tpu_v5e(len(devs))
+    return dataclasses.replace(CPU_HOST, n_devices=len(devs))
+
+
+# ---------------------------------------------------------------------------
+# Batch distribution (what the paper assigns over)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchDistribution:
+    """The sequence-length distribution one step draws from."""
+    lengths: tuple[int, ...]
+    global_batch: int
+    hbm_budget_bytes: int | None = None
+
+    @classmethod
+    def from_lengths(cls, lengths, global_batch: int,
+                     hbm_budget_bytes: int | None = None):
+        return cls(tuple(int(x) for x in lengths), int(global_batch),
+                   hbm_budget_bytes)
+
+    @classmethod
+    def from_shape(cls, shape) -> "BatchDistribution":
+        """Deterministic synthetic profile for shape-only callers (the
+        dry-run): lengths spread linearly over [S/8, S] — enough shape
+        diversity to exercise the threshold/ladder logic without a
+        corpus."""
+        s = shape.seq_len
+        n = max(16, shape.global_batch * 4)
+        lengths = np.linspace(max(1, s // 8), s, n).astype(int)
+        return cls(tuple(int(x) for x in lengths), shape.global_batch)
+
+
+# ---------------------------------------------------------------------------
+# The calibrated model
+# ---------------------------------------------------------------------------
+
+_PAIRS = (("chain", "unroll"), ("chain", "scan"), ("fresh", "unroll"),
+          ("fresh", "vmap"), ("fresh", "map"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecFit:
+    """t(F) = t0 + sec_per_flop * F for one (spsa_mode, bank_exec)."""
+    t0: float
+    sec_per_flop: float
+    n_points: int
+
+    def predict(self, flops: float) -> float:
+        return self.t0 + self.sec_per_flop * flops
+
+
+def mlp_bank_flops(cfg: dict, n_dirs: int) -> float:
+    """Analytic bank FLOPs of the fig_bank_exec calibration problem: a
+    ``layers``-deep tanh MLP, 2 forwards (at +/- eps) per direction."""
+    d_in, hid = cfg["d_in"], cfg["hidden"]
+    b, layers = cfg["batch"], cfg["layers"]
+    fwd = 2.0 * b * (d_in * hid + (layers - 1) * hid * hid + hid * d_in)
+    return 2.0 * n_dirs * fwd
+
+
+class PerfModel:
+    """Fitted overhead factors over the analytic ``CostEstimate``.
+
+    Build one with ``PerfModel.calibrate(results_dir)`` (committed
+    corpus and/or fresh probe outputs — same JSON schema), or feed
+    targeted probe measurements directly via ``fit_exec`` (the probe-run
+    protocol in docs/perf-model.md)."""
+
+    def __init__(self):
+        self.exec_fits: dict[tuple[str, str], ExecFit] = {}
+        self.host_factors: dict[str, float] = {}
+        self.host_build_s_per_step: float = 0.0
+        self.train_ndirs_fit: tuple[float, float] | None = None  # (a, b)
+        self.calibration_cfg: dict = {}
+        self.calibrated_from: list[str] = []
+        self.hardware = CPU_HOST       # platform the fits are absolute on
+
+    # ------------------------------------------------------------- fitting
+    def fit_exec(self, mode: str, exec_: str,
+                 points: list[tuple[float, float]]) -> ExecFit:
+        """Fit ``t = t0 + sec_per_flop * F`` through measured
+        ``(flops, seconds)`` probe points.  Two points give the exact
+        line; a negative intercept (measurement noise at this scale)
+        falls back to the through-origin throughput fit."""
+        pts = sorted(points)
+        if len(pts) < 2:
+            f, t = pts[0]
+            fit = ExecFit(0.0, t / f, 1)
+        else:
+            (f_a, t_a), (f_b, t_b) = pts[0], pts[-1]
+            b = (t_b - t_a) / (f_b - f_a)
+            t0 = t_a - b * f_a
+            if t0 < 0 or b <= 0:
+                fit = ExecFit(0.0, t_b / f_b, len(pts))
+            else:
+                fit = ExecFit(t0, b, len(pts))
+        self.exec_fits[(mode, exec_)] = fit
+        return fit
+
+    @classmethod
+    def calibrate(cls, results_dir: str = "benchmarks/results",
+                  require: bool = True) -> "PerfModel":
+        m = cls()
+        be = os.path.join(results_dir, "fig_bank_exec.json")
+        if os.path.exists(be):
+            data = json.load(open(be))
+            m.calibration_cfg = {k: data[k]
+                                 for k in ("d_in", "hidden", "batch",
+                                           "layers")}
+            by_pair: dict[tuple[str, str], list] = {}
+            for r in data["rows"]:
+                # n_dirs==1 rows excluded: vectorized executors fall
+                # back to unroll there (core/spsa.py), so they don't
+                # measure this executor
+                if r["n_dirs"] == 1:
+                    continue
+                f = mlp_bank_flops(m.calibration_cfg, r["n_dirs"])
+                by_pair.setdefault((r["mode"], r["exec"]), []).append(
+                    (f, r["step_s"]))
+            for (mode, exec_), pts in by_pair.items():
+                m.fit_exec(mode, exec_, pts)
+            m.calibrated_from.append(be)
+        ho = os.path.join(results_dir, "fig_host_overlap.json")
+        if os.path.exists(ho):
+            data = json.load(open(ho))
+            walls = {r["variant"]: r["step_wall_s"] for r in data["rows"]}
+            base = min(walls.values())
+            m.host_factors = {v: w / base for v, w in walls.items()}
+            m.host_build_s_per_step = data.get("host_build_s_per_step",
+                                               0.0)
+            m.calibrated_from.append(ho)
+        ns = os.path.join(results_dir, "fig_ndirs_sweep.json")
+        if os.path.exists(ns):
+            data = json.load(open(ns))
+            rows = sorted(data["rows"], key=lambda r: r["n_dirs"])
+            if len(rows) >= 2:
+                (na, ta), (nb, tb) = [(r["n_dirs"],
+                                       r["wall_s"] / data["steps"])
+                                      for r in (rows[0], rows[-1])]
+                b = (tb - ta) / (nb - na)
+                m.train_ndirs_fit = (ta - b * na, b)
+            m.calibrated_from.append(ns)
+        if require and not m.exec_fits:
+            raise FileNotFoundError(
+                f"no calibration corpus under {results_dir!r} — run "
+                "benchmarks/fig_bank_exec.py or pass require=False")
+        return m
+
+    # ---------------------------------------------------------- prediction
+    def _hw_scale(self, hardware: Hardware | None) -> float:
+        if hardware is None or hardware.name == self.hardware.name:
+            return 1.0
+        return self.hardware.flops_per_s / hardware.flops_per_s
+
+    def predict_bank_s(self, mode: str, exec_: str, n_dirs: int,
+                       bank_flops: float,
+                       hardware: Hardware | None = None) -> float:
+        """Predicted seconds for one SPSA bank of ``bank_flops``.  At
+        ``n_dirs == 1`` every vectorized executor falls back to unroll
+        (mirroring ``spsa._resolve_vectorize``) — the model predicts
+        the program that actually runs."""
+        exec_eff = resolve_bank_exec(
+            "unroll" if n_dirs == 1 and exec_ != "unroll" else exec_,
+            mode, n_dirs)
+        fit = self.exec_fits.get((mode, exec_eff))
+        if fit is None:
+            raise KeyError(
+                f"executor ({mode}, {exec_eff}) not calibrated; have "
+                f"{sorted(self.exec_fits)} — add a probe run "
+                "(docs/perf-model.md)")
+        s = self._hw_scale(hardware)
+        return fit.t0 + fit.sec_per_flop * s * bank_flops
+
+    def rank_executors(self, n_dirs: int, bank_flops: float,
+                       pairs=_PAIRS) -> list[tuple[tuple[str, str], float]]:
+        """(mode, exec) pairs sorted by predicted bank seconds."""
+        preds = [(p, self.predict_bank_s(p[0], p[1], n_dirs, bank_flops))
+                 for p in pairs if (p[0], "unroll") in self.exec_fits
+                 or p in self.exec_fits]
+        return sorted(preds, key=lambda t: t[1])
+
+    def host_factor(self, prefetch: int, async_window: int) -> float:
+        """Multiplicative runtime-variant factor from fig_host_overlap:
+        sync (no prefetch, window 1) pays the full host batch-build on
+        the critical path; streamed (prefetch + window) overlaps it."""
+        if not self.host_factors:
+            return 1.0
+        if prefetch > 0 and async_window > 1:
+            key = "streamed"
+        elif prefetch > 0:
+            key = "prefetch"
+        else:
+            key = "sync"
+        return self.host_factors.get(key, 1.0)
+
+    def predict_step_s(self, dims: StepDims, plan: Plan,
+                       hardware: Hardware | None = None) -> dict:
+        """Full-step prediction: fitted FO + ZO device seconds, floored
+        by the hardware roofline, times the runtime host factor."""
+        est = train_step_cost(dims)
+        zo_flops = 4.0 * dims.n_params * dims.k0 * dims.s_full \
+            * dims.n_dirs
+        fo_flops = est.flops - zo_flops
+        try:
+            zo_s = self.predict_bank_s(plan.spsa_mode, plan.bank_exec,
+                                       dims.n_dirs, zo_flops, hardware)
+        except KeyError:       # uncalibrated model: pure roofline below
+            zo_s = 0.0
+        # FO fwd+bwd throughput ~ the chain/unroll fit (plain forwards)
+        fo_fit = self.exec_fits.get(("chain", "unroll"))
+        s = self._hw_scale(hardware)
+        fo_s = (fo_fit.t0 + fo_fit.sec_per_flop * s * fo_flops
+                if fo_fit else 0.0)
+        hw = hardware or self.hardware
+        roof_s = max(est.flops / (hw.flops_per_s * hw.n_devices),
+                     est.hbm_bytes / (hw.hbm_bytes_per_s * hw.n_devices))
+        device_s = max(zo_s + fo_s, roof_s)
+        factor = self.host_factor(plan.prefetch, plan.async_window)
+        total = device_s * factor
+        if factor > 1.0:       # un-overlapped host build rides on top
+            total += self.host_build_s_per_step
+        return {"cost": est.to_json(), "zo_s": zo_s, "fo_s": fo_s,
+                "roofline_s": roof_s, "device_s": device_s,
+                "host_factor": factor, "total_s": total}
+
+    def to_json(self) -> dict:
+        return {
+            "exec_fits": {f"{m}/{e}": dataclasses.asdict(f)
+                          for (m, e), f in sorted(self.exec_fits.items())},
+            "host_factors": self.host_factors,
+            "host_build_s_per_step": self.host_build_s_per_step,
+            "train_ndirs_fit": self.train_ndirs_fit,
+            "calibration_cfg": self.calibration_cfg,
+            "calibrated_from": self.calibrated_from,
+        }
+
+
+# ---------------------------------------------------------------------------
+# plan_auto
+# ---------------------------------------------------------------------------
+
+
+def plan_auto(arch, hardware: Hardware | None = None,
+              batch_distribution: BatchDistribution | None = None, *,
+              perf: PerfModel | None = None,
+              results_dir: str = "benchmarks/results",
+              optimizer: str = "addax", explain: bool = False,
+              **overrides):
+    """Pick the full knob vector for (arch, hardware, batch
+    distribution) and return a fully-resolved ``Plan``.
+
+    Decisions (every one a ``planned=True`` knob in ``core.plan.KNOBS``):
+
+      * **FO/ZO split** (the paper's core move): ``L_T`` is the
+        ``fo_frac`` length quantile (``assignment.choose_l_t``), K1/K0
+        split the global batch by ``arch.fo_frac``; with an HBM budget,
+        ``assignment.plan_bucket_edges`` caps the ladder instead.
+      * **FO bucket ladder**: quantile edges over the FO lengths; 3
+        buckets when the distribution is spread (L_T >= 2x the median FO
+        length), else the single paper-faithful width.
+      * **pack**: on for the decoder family when mean FO length < 60%
+        of L_T (padding waste the packer reclaims; other families
+        reject packed batches).
+      * **bank executor**: argmin of the calibrated per-executor
+        prediction at this n_dirs (chain/unroll when n_dirs == 1 —
+        nothing to vectorize).
+      * **backend**: pallas on TPU, jnp elsewhere.
+      * **host runtime**: streamed (prefetch=4, async_window=4) when
+        the calibrated host factors say overlap wins, else sync.
+
+    ``overrides`` pass through to the returned Plan (user intent beats
+    the planner).  ``explain=True`` additionally returns the decision
+    report with per-candidate predictions."""
+    if hardware is None:
+        hardware = detect_hardware()
+    if batch_distribution is None:
+        from repro.configs.base import SHAPES
+        batch_distribution = BatchDistribution.from_shape(
+            SHAPES[arch.shape_cells()[0]])
+    if perf is None:
+        perf = PerfModel.calibrate(results_dir)
+    dist = batch_distribution
+    lengths = np.asarray(dist.lengths)
+    b = dist.global_batch
+    pad = 8
+
+    # ---- the paper's FO/ZO split -------------------------------------
+    k1 = min(max(1, int(round(b * arch.fo_frac))), max(1, b - 1))
+    k0 = max(1, b - k1)
+    s_full = int(np.ceil(int(lengths.max()) / pad) * pad)
+    m = arch.model
+    if dist.hbm_budget_bytes is not None:
+        edges = assignment.plan_bucket_edges(
+            lengths, 3, k1, getattr(m, "n_layers", 1),
+            getattr(m, "d_model", 1), getattr(m, "n_heads", 1),
+            dist.hbm_budget_bytes, pad_multiple=pad)
+        l_t = edges[-1]
+    else:
+        l_t = assignment.choose_l_t(lengths, fo_fraction=arch.fo_frac)
+        l_t = min(s_full, int(np.ceil(max(1, l_t) / pad) * pad))
+        edges = None
+
+    fo_lengths = lengths[lengths <= l_t]
+    if fo_lengths.size == 0:
+        fo_lengths = np.array([l_t])
+    spread = l_t >= 2 * max(pad, float(np.median(fo_lengths)))
+    n_buckets = 3 if spread else 1
+    if edges is None:
+        edges = assignment.choose_bucket_edges(fo_lengths, n_buckets,
+                                               l_t, pad_multiple=pad)
+    pack = bool(arch.family == "decoder"
+                and float(fo_lengths.mean()) < 0.6 * l_t)
+
+    # ---- calibrated choices ------------------------------------------
+    n_dirs = int(overrides.pop("n_dirs", getattr(arch, "n_dirs", 1)))
+    dims = StepDims(
+        n_params=_active_params(arch), n_layers=getattr(m, "n_layers", 1),
+        d_model=getattr(m, "d_model", 1), n_heads=getattr(m, "n_heads", 1),
+        vocab=getattr(m, "vocab", 0), k0=k0, k1=k1, s_full=s_full,
+        l_t=l_t, n_dirs=n_dirs)
+    zo_flops = 4.0 * dims.n_params * k0 * s_full * n_dirs
+    if n_dirs == 1:
+        spsa_mode, bank_exec = "chain", "unroll"
+        ranking = ([(("chain", "unroll"),
+                     perf.predict_bank_s("chain", "unroll", 1, zo_flops,
+                                         hardware))]
+                   if ("chain", "unroll") in perf.exec_fits else [])
+    else:
+        ranking = perf.rank_executors(n_dirs, zo_flops)
+        if ranking:
+            (spsa_mode, bank_exec), _ = ranking[0]
+        else:                  # uncalibrated: the static auto rule
+            spsa_mode = "chain"
+            bank_exec = resolve_bank_exec("auto", "chain", n_dirs)
+    backend = "pallas" if hardware.name.startswith("tpu") else "jnp"
+    streamed_wins = perf.host_factor(0, 1) > 1.0
+    prefetch, async_window = (4, 4) if streamed_wins else (0, 1)
+
+    plan = Plan(**{**dict(
+        optimizer=optimizer, n_dirs=n_dirs, backend=backend,
+        bank_exec=bank_exec, spsa_mode=spsa_mode,
+        k0=k0, k1=k1, s_full=s_full, l_t=l_t, fo_buckets=tuple(edges),
+        pack=pack, prefetch=prefetch, async_window=async_window,
+        remat=getattr(m, "remat", "none")), **overrides})
+    if not explain:
+        return plan
+    report = {
+        "hardware": dataclasses.asdict(hardware),
+        "dims": dataclasses.asdict(dims),
+        "executor_ranking": [[list(p), t] for p, t in ranking],
+        "predicted": perf.predict_step_s(dims, plan, hardware),
+        "planned": {k: (list(v) if isinstance(v, tuple) else v)
+                    for k, v in plan.planned_knobs().items()},
+    }
+    return plan, report
+
+
+def _active_params(arch) -> float:
+    from repro.launch.roofline import count_params
+    from repro.models.registry import Bundle
+    return count_params(Bundle(arch))["active"]

@@ -1,0 +1,292 @@
+"""The resolved-knob ``Plan`` API and the knob registry.
+
+``launch.steps.CellOptions`` is the *request* surface: its fields encode
+"arch default" as ``""``/``0`` sentinels so a config diff only names the
+knobs it changes.  Historically every consumer re-sniffed those
+sentinels (``opts.n_dirs or getattr(arch, "n_dirs", 1)`` — once per call
+site, driftable).  ``Plan`` is the *resolved* surface: one frozen
+dataclass in which **every knob has an explicit, validated value**, and
+which ``launch/steps.py``, ``launch/train.py``, ``launch/dryrun.py`` and
+``launch/serve.py`` consume uniformly.  There are exactly two producers:
+
+  * ``CellOptions.resolve(arch[, shape])`` — sentinel -> arch/model
+    default, geometry from ``models.registry.plan_train_cell``;
+  * ``core.perf_model.plan_auto(arch, hardware, batch_distribution)`` —
+    the calibrated performance model picks the planned knobs
+    (docs/perf-model.md).
+
+``Plan.resolve()`` returns ``self`` — resolution is idempotent by
+construction (property-tested in ``tests/test_perf_model.py``).
+
+**The knob registry** (``KNOBS`` / ``register_knob``) is the single
+entry point a new knob must pass through: every ``Plan`` field must be
+registered (and vice versa — enforced at construction and by tests), so
+adding a knob without declaring its domain, consumer, and whether
+``plan_auto`` owns it is a loud failure, not a silent sentinel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+SPSA_MODES = ("chain", "fresh")
+REMAT_POLICIES = ("none", "full", "dots")
+#: concrete bank executors a resolved Plan may carry ("auto" is a
+#: CellOptions-level request; resolution picks scan/vmap by mode exactly
+#: as ``spsa._resolve_vectorize`` would at trace time)
+BANK_EXECUTORS = ("unroll", "scan", "vmap", "map")
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """Registry row for one Plan field."""
+    name: str
+    kind: str          # cell | geometry | runtime | serve
+    domain: str        # human-readable value domain
+    consumer: str      # module that reads the resolved value
+    planned: bool      # True: plan_auto picks it; False: user/arch intent
+    doc: str = ""
+
+
+#: name -> Knob; populated below via register_knob (module import order
+#: guarantees the registry is complete before any Plan is built)
+KNOBS: dict[str, Knob] = {}
+
+
+def register_knob(name: str, kind: str, domain: str, consumer: str,
+                  planned: bool, doc: str = "") -> Knob:
+    """Declare one knob.  Future knobs (estimator-zoo variants, serving
+    knobs) MUST register here before gaining a ``Plan`` field — the
+    field/registry cross-check in ``Plan.__post_init__`` (and
+    ``tests/test_perf_model.py``) fails otherwise."""
+    if name in KNOBS:
+        raise ValueError(f"knob {name!r} already registered")
+    if kind not in ("cell", "geometry", "runtime", "serve"):
+        raise ValueError(f"unknown knob kind {kind!r}")
+    k = Knob(name, kind, domain, consumer, planned, doc)
+    KNOBS[name] = k
+    return k
+
+
+for _args in [
+    # ---- cell knobs (launch/steps.py binds them to the jitted step) ----
+    ("optimizer", "cell", "engine.STEP_SPECS names", "launch/steps.py",
+     False, "which engine step runs"),
+    ("param_dtype", "cell", "jnp dtype", "launch/steps.py", False, ""),
+    ("moe_parallelism", "cell", "tp | ep", "launch/steps.py", False, ""),
+    ("shard_cache_seq", "cell", "bool", "launch/steps.py", False, ""),
+    ("cache_seq_over_data", "cell", "bool", "launch/steps.py", False, ""),
+    ("seq_shard_residual", "cell", "bool", "launch/steps.py", False, ""),
+    ("train_impl", "cell", "dense | chunked", "launch/steps.py", False,
+     ""),
+    ("prefill_impl", "cell", "dense | chunked", "launch/steps.py", False,
+     ""),
+    ("remat", "cell", "none | full | dots", "launch/steps.py", False,
+     "resolved from the model config when CellOptions leaves it ''"),
+    ("scores_f32", "cell", "bool", "launch/steps.py", False, ""),
+    ("alpha", "cell", "float", "core/engine.py", False, "ZO mixing"),
+    ("eps", "cell", "float", "core/spsa.py", False, "SPSA perturbation"),
+    ("lr", "cell", "float", "core/engine.py", False, ""),
+    ("n_dirs", "cell", "int >= 1", "core/spsa.py", False,
+     "SPSA bank size; resolved from ArchConfig.n_dirs"),
+    ("backend", "cell", "jnp | pallas | pallas_interpret",
+     "core/engine.py", True, "update-engine backend"),
+    ("bank_exec", "cell", "unroll | scan | vmap | map (concrete)",
+     "core/spsa.py", True, "bank executor; 'auto' resolves by mode"),
+    ("bank_microbatch", "cell", "int >= 0", "core/spsa.py", False, ""),
+    ("bank_schedule", "cell", "'' or 'min[:low[:high[:ema]]]'",
+     "core/schedules.py", False, "'' = fixed bank (a value, not a "
+     "sentinel)"),
+    ("grad_clip", "cell", "None or float > 0", "core/engine.py", False,
+     "None = no clipping (a value, not a sentinel)"),
+    ("spsa_mode", "cell", "chain | fresh", "core/spsa.py", True, ""),
+    ("compress_fo", "cell", "bool", "distributed/collectives.py", False,
+     "int8 FO all-reduce; needs a data-only mesh"),
+    ("fo_buckets", "geometry", "non-empty ascending tuple[int]",
+     "launch/steps.py + data/pipeline.py", True,
+     "FO width ladder; resolved to (l_t,) when CellOptions leaves it ()"),
+    ("replicate_small_kv", "cell", "bool", "launch/steps.py", False, ""),
+    ("decode_2d_tp", "cell", "bool", "launch/steps.py", False, ""),
+    # ---- geometry: the paper's FO/ZO batch split -----------------------
+    ("k0", "geometry", "int >= 1", "data/pipeline.py", True,
+     "ZO batch size (long sequences)"),
+    ("k1", "geometry", "int >= 1", "data/pipeline.py", True,
+     "FO batch size (short sequences)"),
+    ("s_full", "geometry", "int >= 1", "data/pipeline.py", False,
+     "ZO stream padded width"),
+    ("l_t", "geometry", "None (Addax-WA) or int >= 1", "data/pipeline.py",
+     True, "length threshold L_T"),
+    # ---- runtime knobs (train loop / host pipeline) --------------------
+    ("pack", "runtime", "bool", "data/pipeline.py", True,
+     "first-fit FO packing (decoder family + dense attention)"),
+    ("prefetch", "runtime", "int >= 0", "train/loop.py", True, ""),
+    ("async_window", "runtime", "int >= 1", "train/loop.py", True, ""),
+    ("sched_lag", "runtime", "int >= 1", "train/loop.py", False, ""),
+    ("dp", "runtime", "int >= 0 (0/1 = single-process)",
+     "distributed/collectives.py", False, ""),
+    ("shard_bank", "runtime", "bool", "distributed/collectives.py",
+     False, ""),
+    ("check_moments", "runtime", "bool", "distributed/collectives.py",
+     False, ""),
+    # ---- serve knobs ---------------------------------------------------
+    ("paged", "serve", "bool", "serve/engine.py", False, ""),
+    ("block_size", "serve", "int >= 1", "serve/engine.py", False, ""),
+    ("decode_impl", "serve", "jnp | kernel", "serve/engine.py", False,
+     ""),
+]:
+    register_knob(*_args)
+
+
+def _is_ascending_ints(t) -> bool:
+    return (isinstance(t, tuple) and len(t) > 0
+            and all(isinstance(e, int) and e > 0 for e in t)
+            and list(t) == sorted(set(t)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One fully-resolved knob vector.  Immutable; every field explicit.
+
+    Invariants (checked at construction — a Plan cannot exist half
+    resolved):
+
+      * ``optimizer`` names an ``engine.STEP_SPECS`` row, ``backend`` an
+        engine backend;
+      * ``bank_exec`` is concrete (never ``""``/``auto``) and compatible
+        with ``spsa_mode`` (scan needs chain; vmap/map need fresh);
+      * ``n_dirs/k0/k1/s_full >= 1``; ``fo_buckets`` is a non-empty
+        ascending width ladder; ``remat`` is a concrete policy;
+      * every field is a registered knob (``KNOBS``) and vice versa.
+
+    ``bank_schedule = ""`` and ``grad_clip = None`` are *values* (fixed
+    bank, no clipping), not sentinels — the registry rows say so.
+    """
+    # cell
+    optimizer: str = "addax"
+    param_dtype: Any = jnp.bfloat16
+    moe_parallelism: str = "tp"
+    shard_cache_seq: bool = True
+    cache_seq_over_data: bool = False
+    seq_shard_residual: bool = False
+    train_impl: str = "dense"
+    prefill_impl: str = "chunked"
+    remat: str = "none"
+    scores_f32: bool = True
+    alpha: float = 5e-4
+    eps: float = 1e-3
+    lr: float = 1e-4
+    n_dirs: int = 1
+    backend: str = "jnp"
+    bank_exec: str = "unroll"
+    bank_microbatch: int = 0
+    bank_schedule: str = ""
+    grad_clip: float | None = None
+    spsa_mode: str = "chain"
+    compress_fo: bool = False
+    fo_buckets: tuple[int, ...] = (64,)
+    replicate_small_kv: bool = True
+    decode_2d_tp: bool = False
+    # geometry
+    k0: int = 1
+    k1: int = 1
+    s_full: int = 64
+    l_t: int | None = 64
+    # runtime
+    pack: bool = False
+    prefetch: int = 0
+    async_window: int = 1
+    sched_lag: int = 1
+    dp: int = 0
+    shard_bank: bool = False
+    check_moments: bool = False
+    # serve
+    paged: bool = False
+    block_size: int = 16
+    decode_impl: str = "jnp"
+
+    def __post_init__(self):
+        from repro.core import engine    # local: keep import cheap/cycle-free
+        fields = {f.name for f in dataclasses.fields(Plan)}
+        if fields != set(KNOBS):
+            missing = fields ^ set(KNOBS)
+            raise ValueError(
+                f"Plan fields and the knob registry diverged on {missing} "
+                "— register new knobs via plan.register_knob "
+                "(docs/perf-model.md)")
+        if self.optimizer not in engine.STEP_SPECS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; one "
+                             f"of {tuple(engine.STEP_SPECS)}")
+        if self.backend not in engine.BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; one of "
+                             f"{engine.BACKENDS}")
+        if self.bank_exec not in BANK_EXECUTORS:
+            raise ValueError(
+                f"Plan.bank_exec must be concrete, one of "
+                f"{BANK_EXECUTORS}, got {self.bank_exec!r} — "
+                "CellOptions.resolve turns ''/'auto' into a concrete "
+                "executor")
+        if self.spsa_mode not in SPSA_MODES:
+            raise ValueError(f"unknown spsa_mode {self.spsa_mode!r}")
+        if self.bank_exec == "scan" and self.spsa_mode != "chain":
+            raise ValueError("bank_exec='scan' needs spsa_mode='chain' "
+                             "(docs/engine.md)")
+        if self.bank_exec in ("vmap", "map") and self.spsa_mode != "fresh":
+            raise ValueError(f"bank_exec={self.bank_exec!r} needs "
+                             "spsa_mode='fresh' (docs/engine.md)")
+        if self.remat not in REMAT_POLICIES:
+            raise ValueError(f"Plan.remat must be concrete, one of "
+                             f"{REMAT_POLICIES}, got {self.remat!r}")
+        if self.moe_parallelism not in ("tp", "ep"):
+            raise ValueError(f"unknown moe_parallelism "
+                             f"{self.moe_parallelism!r}")
+        for name in ("n_dirs", "k0", "k1", "s_full", "async_window",
+                     "sched_lag", "block_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"Plan.{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        for name in ("bank_microbatch", "prefetch", "dp"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"Plan.{name} must be >= 0, got "
+                                 f"{getattr(self, name)}")
+        if self.l_t is not None and self.l_t < 1:
+            raise ValueError(f"Plan.l_t must be None (Addax-WA) or >= 1, "
+                             f"got {self.l_t}")
+        if not _is_ascending_ints(self.fo_buckets):
+            raise ValueError(
+                "Plan.fo_buckets must be a non-empty strictly-ascending "
+                f"tuple of positive widths, got {self.fo_buckets!r}")
+        if self.grad_clip is not None and self.grad_clip <= 0:
+            raise ValueError(f"Plan.grad_clip must be None or > 0, got "
+                             f"{self.grad_clip}")
+
+    # -------------------------------------------------------------- api
+    def resolve(self, arch=None, shape=None) -> "Plan":
+        """A Plan is already resolved: idempotence is ``resolve() is
+        self`` (the property tests pin it)."""
+        return self
+
+    def planned_knobs(self) -> dict[str, Any]:
+        """The subset of knobs ``plan_auto`` owns (registry-driven)."""
+        return {n: getattr(self, n) for n, k in KNOBS.items() if k.planned}
+
+    def to_json(self) -> dict:
+        """JSON-able view (dtypes and tuples stringified where needed)."""
+        d = dataclasses.asdict(self)
+        d["param_dtype"] = jnp.dtype(self.param_dtype).name
+        d["fo_buckets"] = list(self.fo_buckets)
+        return d
+
+
+def resolve_bank_exec(bank_exec: str, spsa_mode: str, n_dirs: int) -> str:
+    """The 'auto' rule, mirrored from ``spsa._resolve_vectorize`` so a
+    resolved Plan compiles the identical program the trace-time dispatch
+    would pick: unroll at ``n_dirs == 1`` (nothing to amortize), else
+    scan for chain / vmap for fresh."""
+    if bank_exec != "auto":
+        return bank_exec
+    if n_dirs == 1:
+        return "unroll"
+    return "scan" if spsa_mode == "chain" else "vmap"

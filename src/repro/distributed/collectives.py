@@ -118,8 +118,15 @@ def make_dp_addax_step(loss_fn: Callable[[Any, Any], jax.Array],
                        mesh: Mesh, data_axes: tuple[str, ...] = ("data",),
                        compress_fo: bool = False,
                        shard_bank: bool = False, backend: str = "jnp"):
-    """Back-compat entry point: the Addax instantiation of
-    ``make_dp_step`` (a thin engine wrapper, no longer a fork)."""
+    """Deprecated: the Addax instantiation of ``make_dp_step`` (a thin
+    engine wrapper, no longer a fork).  One-release shim — call
+    ``make_dp_step(..., name="addax")`` instead; this name disappears
+    next release (docs/engine.md)."""
+    import warnings
+    warnings.warn(
+        "make_dp_addax_step is deprecated and will be removed next "
+        "release; call make_dp_step(..., name='addax') instead",
+        DeprecationWarning, stacklevel=2)
     return make_dp_step(loss_fn, cfg, lr_fn, mesh, name="addax",
                         data_axes=data_axes, compress_fo=compress_fo,
                         shard_bank=shard_bank, backend=backend)

@@ -1,0 +1,217 @@
+"""Shared CLI builders for the launch entry points.
+
+One place where a knob becomes a flag: ``train.py`` and ``serve.py``
+compose their parsers from these builders (no flag is defined twice),
+and ``--plan auto`` turns the calibrated performance model's
+``core.perf_model.plan_auto`` pick into argv defaults.  Adding a knob
+means: register it in ``core.plan.KNOBS``, give it a field on ``Plan``
+(+ ``CellOptions`` if it's a cell knob), and add its flag here — every
+launcher picks it up.
+
+``--plan auto`` never overrides a flag the user typed: a value is
+applied only where ``args.<dest>`` still equals the parser default
+(user intent beats the planner), and the executor pair
+(``spsa_mode``, ``bank_exec``) is applied atomically — half a pair can
+be an invalid combination (docs/engine.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def add_common_args(p: argparse.ArgumentParser) -> None:
+    """Flags every launcher shares."""
+    p.add_argument("--arch", default="tiny-100m")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced config (CPU-friendly)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ckpt-dir", default=None,
+                   help="checkpoint directory (train: save/resume; "
+                        "serve: restore params)")
+
+
+def add_plan_arg(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--plan", default="manual", choices=("manual", "auto"),
+                   help="auto: let the calibrated performance model "
+                        "(core.perf_model.plan_auto, docs/perf-model.md) "
+                        "pick every knob flag you did not set yourself")
+
+
+def add_train_knob_args(p: argparse.ArgumentParser) -> None:
+    """The train-step + runtime knob set (shared with the DP launcher
+    paths; every flag maps 1:1 onto a ``core.plan.Plan`` field)."""
+    from repro.core.spsa import VECTORIZE
+    p.add_argument("--optimizer", default="addax",
+                   choices=("addax", "addax-wa", "mezo", "ipsgd", "sgd",
+                            "adam", "addax-adam"))
+    p.add_argument("--k0", type=int, default=6)
+    p.add_argument("--k1", type=int, default=4)
+    p.add_argument("--l-t", type=int, default=None,
+                   help="length threshold; omit for Addax-WA")
+    p.add_argument("--buckets", type=int, default=1,
+                   help="FO width-ladder size: the short stream pads to "
+                        "its bucket's edge instead of L_T (1 = paper "
+                        "two-width split; see docs/data-pipeline.md)")
+    p.add_argument("--pack", action="store_true",
+                   help="first-fit sequence packing of the FO stream "
+                        "(segment-aware attention keeps examples "
+                        "isolated; decoder family + dense attention only)")
+    p.add_argument("--prefetch", type=int, default=0,
+                   help="background batch-prefetch depth (0 = build "
+                        "synchronously; the stream is bitwise-identical "
+                        "either way)")
+    p.add_argument("--async-window", type=int, default=1,
+                   help="max in-flight dispatched steps (1 = classic "
+                        "synchronous loop; >1 overlaps host and device "
+                        "work — the trajectory is bitwise-identical)")
+    p.add_argument("--sched-lag", type=int, default=1,
+                   help="fixed BankSchedule feedback lag in steps "
+                        "(window-independent; raise it to overlap "
+                        "scheduled-bank runs)")
+    p.add_argument("--lr", type=float, default=1e-4)
+    p.add_argument("--alpha", type=float, default=5e-4)
+    p.add_argument("--eps", type=float, default=1e-3)
+    p.add_argument("--n-dirs", type=int, default=1,
+                   help="SPSA estimator-bank size (directions per step)")
+    p.add_argument("--bank-exec", default="unroll", choices=VECTORIZE,
+                   help="bank executor: unroll (reference) | scan (chain, "
+                        "O(1) compile) | vmap (fresh, one batched fwd) | "
+                        "map (fresh, sequential lax.map) | auto")
+    p.add_argument("--bank-microbatch", type=int, default=0,
+                   help="probes per lax.map microbatch for "
+                        "--bank-exec map (0 = fully sequential)")
+    p.add_argument("--bank-schedule", default="",
+                   help="variance-adaptive bank spec "
+                        "'min[:low[:high[:ema]]]' (e.g. '1:0.5:2.0'); "
+                        "max_dirs = --n-dirs; empty = fixed bank")
+    p.add_argument("--backend", default="jnp",
+                   choices=("jnp", "pallas", "pallas_interpret"),
+                   help="update-engine backend (pallas = fused in-place "
+                        "kernel; pallas_interpret = CPU validation mode)")
+    p.add_argument("--grad-clip", type=float, default=None,
+                   help="global-norm clip on the FO gradient")
+    p.add_argument("--spsa-mode", default="chain",
+                   choices=("chain", "fresh"),
+                   help="SPSA walk: chain (paper, single live buffer) | "
+                        "fresh (bit-exact restore; ablation)")
+    p.add_argument("--dp", type=int, default=0,
+                   help="data-parallel shards: run the explicit-collective "
+                        "shard_map step over a (dp,) mesh (0 = single-"
+                        "process step; needs >= dp local devices, e.g. "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count"
+                        "=N on CPU).  Moments optimizers run under the "
+                        "replicated-(m, v) contract (docs/engine.md)")
+    p.add_argument("--shard-bank", action="store_true",
+                   help="with --dp: slice the SPSA bank across shards "
+                        "(requires --spsa-mode fresh and n-dirs %% dp == 0)")
+    p.add_argument("--check-moments", action="store_true",
+                   help="with --dp and adam/addax-adam: all-gather a "
+                        "per-shard moments checksum each step; the loop "
+                        "aborts if (m, v) replication ever diverges")
+    p.add_argument("--compress-fo", action="store_true",
+                   help="with --dp: int8-quantized FO all-reduce "
+                        "(repro.core.compression) — ~4x fewer gradient "
+                        "bytes on the wire; stateless FO optimizers only "
+                        "(moments combinations are rejected, DESIGN.md §8)")
+
+
+def add_serve_knob_args(p: argparse.ArgumentParser) -> None:
+    """The serving knob set (maps onto the ``Plan`` serve fields)."""
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--prompt-len", type=int, default=24)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--capacity", type=int, default=128)
+    p.add_argument("--paged", action="store_true",
+                   help="slot-level continuous batching over the paged "
+                        "KV block pool (docs/serving.md)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV block size in tokens (paged mode)")
+    p.add_argument("--decode-impl", default="jnp",
+                   choices=("jnp", "kernel"),
+                   help="paged decode attention path")
+    p.add_argument("--arrival-trace", type=int, default=None,
+                   metavar="SEED",
+                   help="drive a synthetic heavy-traffic trace (mixed "
+                        "prompt/output lengths) with this seed instead "
+                        "of uniform synthetic requests")
+
+
+def results_dir() -> str | None:
+    """The calibration corpus (committed benchmark JSONs), if visible
+    from here — launchers run from the repo root in the dev workflow."""
+    for base in (os.getcwd(),
+                 os.path.dirname(os.path.dirname(os.path.dirname(
+                     os.path.dirname(os.path.abspath(__file__)))))):
+        d = os.path.join(base, "benchmarks", "results")
+        if os.path.isdir(d):
+            return d
+    return None
+
+
+#: planner knob -> argv dest; (spsa_mode, bank_exec) are applied
+#: atomically (half a pair can be an invalid combination)
+_PLANNED_DESTS = ("k0", "k1", "l_t", "pack", "prefetch", "async_window",
+                  "backend")
+
+
+def apply_plan_auto(parser: argparse.ArgumentParser, args, arch,
+                    lengths) -> "object":
+    """Run ``plan_auto`` over the real corpus length distribution and
+    fold its picks into ``args`` wherever the user kept the parser
+    default.  Returns the resolved ``Plan`` (also printed, knob by
+    knob)."""
+    from repro.core import perf_model
+
+    dist = perf_model.BatchDistribution.from_lengths(
+        lengths, global_batch=args.k0 + args.k1)
+    rd = results_dir()
+    perf = (perf_model.PerfModel.calibrate(rd) if rd
+            else perf_model.PerfModel())
+    plan, report = perf_model.plan_auto(
+        arch, perf_model.detect_hardware(), dist, perf=perf,
+        optimizer=args.optimizer, n_dirs=args.n_dirs, explain=True)
+
+    picks = {d: getattr(plan, d) for d in _PLANNED_DESTS}
+    picks["buckets"] = len(plan.fo_buckets)
+    applied, kept = {}, {}
+    for dest, val in picks.items():
+        if getattr(args, dest) == parser.get_default(dest):
+            setattr(args, dest, val)
+            applied[dest] = val
+        else:
+            kept[dest] = getattr(args, dest)
+    pair = ("spsa_mode", "bank_exec")
+    if all(getattr(args, d) == parser.get_default(d) for d in pair):
+        for d in pair:
+            setattr(args, d, getattr(plan, d))
+            applied[d] = getattr(plan, d)
+    else:
+        for d in pair:
+            kept[d] = getattr(args, d)
+
+    pred = report.get("predicted", {})
+    print(f"[plan] auto ({'calibrated from ' + rd if rd else 'uncalibrated'}"
+          f"): applied {applied}")
+    if kept:
+        print(f"[plan] kept your flags: {kept}")
+    if pred:
+        print(f"[plan] predicted step: device={pred['device_s']:.4f}s "
+              f"host_factor=x{pred['host_factor']:.3f} "
+              f"total={pred['total_s']:.4f}s")
+    return plan
+
+
+def plan_from_serve_args(args, arch) -> "object":
+    """The serve launcher's uniform Plan consumption: resolve the arch
+    defaults once, then overlay the serve argv knobs — ``ServeConfig``
+    is built from explicit ``Plan`` fields, not re-sniffed flags."""
+    import dataclasses
+
+    from repro.launch.steps import CellOptions
+    plan = CellOptions().resolve(arch)
+    return dataclasses.replace(plan, paged=args.paged,
+                               block_size=args.block_size,
+                               decode_impl=args.decode_impl)

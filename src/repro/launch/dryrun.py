@@ -53,8 +53,50 @@ def _parse_opts(kvs):
     return CellOptions(**over)
 
 
+def _auto_plan(bundle, shape, chips):
+    """``--plan auto`` for one dry-run cell: the calibrated model picks
+    the knob vector against the production TPU hardware profile, except
+    ``backend`` stays jnp — this process compiles on faked CPU devices,
+    where the TPU pallas kernels cannot lower."""
+    from repro.core import perf_model as pm
+    from repro.launch import cli
+    rd = cli.results_dir()
+    perf = (pm.PerfModel.calibrate(rd) if rd else pm.PerfModel())
+    hw = pm.tpu_v5e(chips)
+    plan = pm.plan_auto(bundle.arch, hw,
+                        pm.BatchDistribution.from_shape(shape),
+                        perf=perf, backend="jnp")
+    return plan, perf, hw
+
+
+def _predicted_vs_measured(bundle, plan, perf, hw, rt) -> dict:
+    """Predicted (core.perf_model) vs measured (compiled-HLO roofline)
+    per knob-visible quantity, printed and recorded."""
+    from repro.core import perf_model as pm
+    dims = pm.StepDims.from_arch(bundle.arch, plan)
+    pred = perf.predict_step_s(dims, plan, hw)
+    measured = {"flops": rt.hlo_flops * rt.chips,
+                "hbm_bytes": rt.hlo_bytes * rt.chips,
+                "step_s": max(rt.compute_s, rt.memory_s,
+                              rt.collective_s)}
+    predicted = {"flops": pred["cost"]["flops"],
+                 "hbm_bytes": pred["cost"]["hbm_bytes"],
+                 "step_s": pred["roofline_s"]}
+    for k, v in sorted(plan.planned_knobs().items()):
+        print(f"  [plan] {k} = {v}  (planned by plan_auto)")
+    for q in ("flops", "hbm_bytes", "step_s"):
+        ratio = predicted[q] / measured[q] if measured[q] else float("inf")
+        print(f"  [plan] {q}: predicted {predicted[q]:.3e} vs "
+              f"measured {measured[q]:.3e} (x{ratio:.2f})")
+    return {"planned": {k: (list(v) if isinstance(v, tuple) else str(v))
+                        for k, v in plan.planned_knobs().items()},
+            "predicted": predicted, "measured": measured,
+            "predicted_total_s": pred["total_s"]}
+
+
 def run_cell(arch_id: str, shape_name: str, mesh_name: str, opts,
-             out_dir: str, tag: str = "baseline") -> dict:
+             out_dir: str, tag: str = "baseline",
+             plan_mode: str = "manual") -> dict:
     import jax
     from repro.configs import SHAPES
     from repro.launch import roofline
@@ -67,8 +109,13 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, opts,
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     chips = mesh.size
 
+    perf = hw = None
+    if plan_mode == "auto" and shape.kind == "train":
+        opts, perf, hw = _auto_plan(bundle, shape, chips)
+
     rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
            "tag": tag, "chips": chips, "status": "?",
+           "plan_mode": plan_mode,
            "opts": {k: str(v) for k, v in
                     dataclasses.asdict(opts).items()}}
     t0 = time.time()
@@ -84,6 +131,9 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str, opts,
                 mesh_name=mesh_name, chips=chips,
                 model_flops=roofline.model_flops_for(bundle, shape,
                                                      plan.notes))
+            if perf is not None:
+                rec["plan_auto"] = _predicted_vs_measured(
+                    bundle, opts, perf, hw, rt)
             # persist the post-SPMD HLO so cost-model improvements can be
             # re-applied without recompiling (gzip: 10-50x smaller)
             import gzip
@@ -118,6 +168,12 @@ def main(argv=None):
     p.add_argument("--tag", default="baseline")
     p.add_argument("--set", action="append", dest="overrides",
                    help="CellOptions override, e.g. optimizer=ipsgd")
+    p.add_argument("--plan", default="manual", choices=("manual", "auto"),
+                   help="auto: core.perf_model.plan_auto picks the knob "
+                        "vector for each train cell and the report gains "
+                        "predicted-vs-measured per knob "
+                        "(docs/perf-model.md); --set overrides are "
+                        "ignored for planned cells")
     p.add_argument("--skip-existing", action="store_true")
     args = p.parse_args(argv)
 
@@ -147,7 +203,8 @@ def main(argv=None):
                 print(f"[skip] {a} {s} {m}: cached ok")
                 continue
         print(f"[run ] {a} {s} {m} ...", flush=True)
-        rec = run_cell(a, s, m, opts, args.out, args.tag)
+        rec = run_cell(a, s, m, opts, args.out, args.tag,
+                       plan_mode=args.plan)
         ok = rec["status"] == "ok"
         extra = (f"compile={rec.get('compile_s')}s "
                  f"dom={rec['roofline']['dominant']}" if ok

@@ -351,6 +351,20 @@ def analyze_text(hlo_text: str) -> Cost:
     return HloModule(hlo_text).total_cost()
 
 
+def entry_param_bytes(hlo_text: str) -> int:
+    """Bytes of the ENTRY computation's ``parameter`` instructions — the
+    compiled module's own accounting of its argument footprint (params +
+    opt state + batch).  This is the hlo_cost side of the
+    parameter-byte cross-check against ``assignment.memory_model`` /
+    ``perf_model.CostEstimate.param_bytes`` (tests/test_perf_model.py):
+    the two agree *exactly* on tiny_100m, and the test keeps it that
+    way."""
+    mod = HloModule(hlo_text)
+    assert mod.entry, "no ENTRY computation found"
+    return int(sum(i.result_bytes for i in mod.order[mod.entry]
+                   if i.op == "parameter"))
+
+
 def _comp_multipliers(mod: HloModule) -> dict[str, float]:
     """HBM-boundary execution multiplier per computation: while bodies
     multiply by trip count; fusion bodies get 0 (their instructions never

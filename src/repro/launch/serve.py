@@ -16,30 +16,10 @@ import numpy as np
 
 
 def main(argv=None):
+    from repro.launch import cli
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--arch", default="tiny-100m")
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--ckpt-dir", default=None,
-                   help="restore params from a training checkpoint")
-    p.add_argument("--requests", type=int, default=16)
-    p.add_argument("--prompt-len", type=int, default=24)
-    p.add_argument("--max-new", type=int, default=16)
-    p.add_argument("--max-batch", type=int, default=8)
-    p.add_argument("--capacity", type=int, default=128)
-    p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--paged", action="store_true",
-                   help="slot-level continuous batching over the paged "
-                        "KV block pool (docs/serving.md)")
-    p.add_argument("--block-size", type=int, default=16,
-                   help="KV block size in tokens (paged mode)")
-    p.add_argument("--decode-impl", default="jnp",
-                   choices=("jnp", "kernel"),
-                   help="paged decode attention path")
-    p.add_argument("--arrival-trace", type=int, default=None,
-                   metavar="SEED",
-                   help="drive a synthetic heavy-traffic trace (mixed "
-                        "prompt/output lengths) with this seed instead "
-                        "of uniform synthetic requests")
+    cli.add_common_args(p)
+    cli.add_serve_knob_args(p)
     args = p.parse_args(argv)
 
     from repro.models.registry import get_bundle
@@ -52,10 +32,13 @@ def main(argv=None):
         params, meta = CheckpointStore(args.ckpt_dir).restore(params)
         print(f"[ckpt] restored step {meta['step']} from {args.ckpt_dir}")
 
+    # uniform Plan consumption: the serve knobs ride on one resolved
+    # core.plan.Plan, and ServeConfig reads explicit Plan fields
+    plan = cli.plan_from_serve_args(args, bundle.arch)
     engine = ServeEngine(bundle, params, ServeConfig(
         capacity=args.capacity, max_batch=args.max_batch,
-        max_new_tokens=args.max_new, paged=args.paged,
-        block_size=args.block_size, decode_impl=args.decode_impl))
+        max_new_tokens=args.max_new, paged=plan.paged,
+        block_size=plan.block_size, decode_impl=plan.decode_impl))
 
     rng = np.random.default_rng(args.seed)
     vocab = bundle.mcfg.vocab

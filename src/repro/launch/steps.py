@@ -18,9 +18,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ShapeCfg
+from repro.configs.base import SHAPES, ShapeCfg
 from repro.core import engine, schedules
 from repro.core.addax import AddaxConfig
+from repro.core.plan import Plan, resolve_bank_exec
 from repro.distributed import sharding as shd
 from repro.launch.mesh import data_axes_of
 from repro.models.registry import Bundle, plan_train_cell
@@ -78,8 +79,60 @@ class CellOptions:
                                        # 2D TP so per-step param reads shrink
                                        # 16x (beyond-paper, §Perf)
 
+    def resolve(self, arch, shape: ShapeCfg | None = None) -> Plan:
+        """Sentinels -> one fully-resolved immutable ``core.plan.Plan``.
 
-def build_ctx(bundle: Bundle, mesh, opts: CellOptions,
+        This is the ONLY place arch defaults are sniffed — every
+        downstream consumer (``plan_cell``, train/dryrun/serve CLIs)
+        reads explicit ``Plan`` fields.  ``shape`` defaults to the
+        arch's canonical train cell so ``resolve(arch)`` is total; the
+        step builders resolve against the actual shape they lower.
+
+        Resolution rules (property-tested in tests/test_perf_model.py):
+        explicitly-set fields pass through unchanged; ``n_dirs=0`` /
+        ``backend=""`` / ``bank_exec=""`` take the ``ArchConfig``
+        default; ``bank_exec="auto"`` picks the concrete executor with
+        the same rule ``spsa._resolve_vectorize`` applies at trace time
+        (so the resolved Plan compiles the identical program);
+        ``remat=""`` takes the model config's policy; ``fo_buckets=()``
+        collapses to the single ``plan_train_cell`` width; the k0/k1/
+        s_full/l_t geometry is the paper's FO/ZO split for (arch,
+        shape)."""
+        if shape is None:
+            shape = SHAPES[arch.shape_cells()[0]]
+        cell = plan_train_cell(arch, shape)
+        n_dirs = self.n_dirs or getattr(arch, "n_dirs", 1)
+        bank_exec = resolve_bank_exec(
+            self.bank_exec or getattr(arch, "bank_exec", "unroll"),
+            self.spsa_mode, n_dirs)
+        return Plan(
+            optimizer=self.optimizer,
+            param_dtype=self.param_dtype,
+            moe_parallelism=self.moe_parallelism,
+            shard_cache_seq=self.shard_cache_seq,
+            cache_seq_over_data=self.cache_seq_over_data,
+            seq_shard_residual=self.seq_shard_residual,
+            train_impl=self.train_impl,
+            prefill_impl=self.prefill_impl,
+            remat=self.remat or getattr(arch.model, "remat", "none"),
+            scores_f32=self.scores_f32,
+            alpha=self.alpha, eps=self.eps, lr=self.lr,
+            n_dirs=n_dirs,
+            backend=self.backend or getattr(arch, "backend", "jnp"),
+            bank_exec=bank_exec,
+            bank_microbatch=self.bank_microbatch,
+            bank_schedule=self.bank_schedule,
+            grad_clip=self.grad_clip,
+            spsa_mode=self.spsa_mode,
+            compress_fo=self.compress_fo,
+            fo_buckets=tuple(sorted(set(self.fo_buckets)))
+            or (cell.l_t,),
+            replicate_small_kv=self.replicate_small_kv,
+            decode_2d_tp=self.decode_2d_tp,
+            k0=cell.k0, k1=cell.k1, s_full=cell.s_full, l_t=cell.l_t)
+
+
+def build_ctx(bundle: Bundle, mesh, opts: "CellOptions | Plan",
               batch_one: bool = False) -> shd.ShardingCtx:
     data_axes = data_axes_of(mesh)
     rules = shd.default_rules(
@@ -181,33 +234,31 @@ class CellPlan:
 # --------------------------------------------------------------------------
 
 def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
-                      opts: CellOptions,
+                      opts: "CellOptions | Plan",
                       fo_widths: tuple[int, ...]) -> list[CellPlan]:
     """Shared train-cell assembly: one engine step + ONE compiled-step
     cache, lowered against one abstract batch pair per FO width.  All
     returned plans share ``jitted`` (an ``engine.StepCache``), so a
     bucketed ``batch1`` compiles once per width and never retraces —
     the streaming runtime's step-layer contract."""
-    ctx = build_ctx(bundle, mesh, opts)
+    plan = opts if isinstance(opts, Plan) else opts.resolve(bundle.arch,
+                                                            shape)
+    ctx = build_ctx(bundle, mesh, plan)
     data_axes = data_axes_of(mesh)
-    loss_fn = bundle.loss_fn(ctx=ctx, impl=opts.train_impl)
-    n_dirs = opts.n_dirs or getattr(bundle.arch, "n_dirs", 1)
-    backend = opts.backend or getattr(bundle.arch, "backend", "jnp")
-    bank_exec = opts.bank_exec or getattr(bundle.arch, "bank_exec",
-                                          "unroll")
-    acfg = AddaxConfig(lr=opts.lr, eps=opts.eps, alpha=opts.alpha,
-                       n_dirs=n_dirs, grad_clip=opts.grad_clip,
-                       spsa_mode=opts.spsa_mode, bank_exec=bank_exec,
-                       bank_microbatch=opts.bank_microbatch,
-                       bank_schedule=opts.bank_schedule)
-    lr_fn = schedules.constant(opts.lr)
+    loss_fn = bundle.loss_fn(ctx=ctx, impl=plan.train_impl)
+    acfg = AddaxConfig(lr=plan.lr, eps=plan.eps, alpha=plan.alpha,
+                       n_dirs=plan.n_dirs, grad_clip=plan.grad_clip,
+                       spsa_mode=plan.spsa_mode, bank_exec=plan.bank_exec,
+                       bank_microbatch=plan.bank_microbatch,
+                       bank_schedule=plan.bank_schedule)
+    lr_fn = schedules.constant(plan.lr)
 
     cell = plan_train_cell(bundle.arch, shape)
-    b0, _ = bundle.train_batches(shape, dtype=opts.param_dtype)
-    b1_by_width = {w: bundle._batch_struct(cell.k1, w, opts.param_dtype)
+    b0, _ = bundle.train_batches(shape, dtype=plan.param_dtype)
+    b1_by_width = {w: bundle._batch_struct(cell.k1, w, plan.param_dtype)
                    for w in fo_widths}
 
-    abstract_params = bundle.abstract_params(opts.param_dtype)
+    abstract_params = bundle.abstract_params(plan.param_dtype)
     params_sh = _sharding_tree(bundle.axes(), ctx, mesh, abstract_params)
     b0_sh = _batch_shardings(b0, mesh, data_axes)
     b1_sh = _batch_shardings(next(iter(b1_by_width.values())), mesh,
@@ -215,15 +266,15 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
 
     # every optimizer is one engine instantiation; only the arg plumbing
     # (batch arity, moments state) differs per StepSpec
-    spec = engine.STEP_SPECS.get(opts.optimizer)
+    spec = engine.STEP_SPECS.get(plan.optimizer)
     if spec is None:
-        raise ValueError(opts.optimizer)
+        raise ValueError(plan.optimizer)
     if not spec.two_stream and spec.stream == "zo":
         # ZO-only steps (mezo) never consume batch1: every FO width would
         # lower the identical signature — collapse to one plan
         fo_widths = fo_widths[:1]
         b1_by_width = {w: b1_by_width[w] for w in fo_widths}
-    if opts.compress_fo:
+    if plan.compress_fo:
         # int8 FO collectives need the *explicit* shard_map step — GSPMD
         # cannot be asked to emit a quantized all-reduce from sharding
         # annotations alone.  The explicit step replicates params over
@@ -242,12 +293,12 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
                 "the mesh (distributed/collectives.py, docs/engine.md)")
         from repro.distributed import collectives
         step = collectives.make_dp_step(
-            loss_fn, acfg, lr_fn, mesh, name=opts.optimizer,
+            loss_fn, acfg, lr_fn, mesh, name=plan.optimizer,
             data_axes=tuple(data_axes), compress_fo=True,
-            backend=backend)
+            backend=plan.backend)
     else:
-        step = engine.make_step(opts.optimizer, loss_fn, acfg, lr_fn,
-                                backend=backend)
+        step = engine.make_step(plan.optimizer, loss_fn, acfg, lr_fn,
+                                backend=plan.backend)
     idx = jax.ShapeDtypeStruct((), jnp.uint32)
 
     def batch_plumbing(b1):
@@ -292,23 +343,21 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
 
 
 def _plan_train(bundle: Bundle, shape: ShapeCfg, mesh,
-                opts: CellOptions) -> CellPlan:
+                opts: "CellOptions | Plan") -> CellPlan:
     cell = plan_train_cell(bundle.arch, shape)
     return _plan_train_cells(bundle, shape, mesh, opts, (cell.l_t,))[0]
 
 
 def plan_train_buckets(bundle: Bundle, shape: ShapeCfg, mesh,
-                       opts: CellOptions) -> list[CellPlan]:
+                       opts: "CellOptions | Plan") -> list[CellPlan]:
     """Per-bucket train cells for the streaming runtime: one ``CellPlan``
-    per FO width in ``opts.fo_buckets`` (ascending; defaults to the
-    single ``plan_train_cell`` width), all sharing one compiled-step
-    cache — compiling every bucket up front means the bucketed stream
-    never traces inside the training loop."""
-    widths = tuple(sorted(set(opts.fo_buckets))) or None
-    if widths is None:
-        cell = plan_train_cell(bundle.arch, shape)
-        widths = (cell.l_t,)
-    return _plan_train_cells(bundle, shape, mesh, opts, widths)
+    per FO width in the resolved ``Plan.fo_buckets`` ladder (ascending;
+    defaults to the single ``plan_train_cell`` width), all sharing one
+    compiled-step cache — compiling every bucket up front means the
+    bucketed stream never traces inside the training loop."""
+    plan = opts if isinstance(opts, Plan) else opts.resolve(bundle.arch,
+                                                            shape)
+    return _plan_train_cells(bundle, shape, mesh, plan, plan.fo_buckets)
 
 
 # --------------------------------------------------------------------------
@@ -316,7 +365,7 @@ def plan_train_buckets(bundle: Bundle, shape: ShapeCfg, mesh,
 # --------------------------------------------------------------------------
 
 def _plan_prefill(bundle: Bundle, shape: ShapeCfg, mesh,
-                  opts: CellOptions) -> CellPlan:
+                  opts: "CellOptions | Plan") -> CellPlan:
     ctx = build_ctx(bundle, mesh, opts)
     data_axes = data_axes_of(mesh)
     batch = bundle._batch_struct(shape.global_batch, shape.seq_len,
@@ -338,7 +387,7 @@ def _plan_prefill(bundle: Bundle, shape: ShapeCfg, mesh,
 
 
 def _plan_decode(bundle: Bundle, shape: ShapeCfg, mesh,
-                 opts: CellOptions) -> CellPlan:
+                 opts: "CellOptions | Plan") -> CellPlan:
     batch_one = shape.global_batch == 1
     ctx = build_ctx(bundle, mesh, opts, batch_one=batch_one)
     data_axes = data_axes_of(mesh)
@@ -365,20 +414,27 @@ def _plan_decode(bundle: Bundle, shape: ShapeCfg, mesh,
 
 
 def plan_cell(bundle: Bundle, shape: ShapeCfg, mesh,
-              opts: CellOptions = CellOptions()) -> CellPlan:
+              opts: "CellOptions | Plan" = CellOptions()) -> CellPlan:
+    """Lower one checklist cell from a ``CellOptions`` *request* or an
+    already-resolved ``core.plan.Plan`` — the request form is resolved
+    here exactly once, then every downstream builder reads explicit
+    ``Plan`` fields (no sentinel re-sniffing)."""
+    plan = opts if isinstance(opts, Plan) else opts.resolve(bundle.arch,
+                                                            shape)
     model_over = {}
-    if opts.remat and hasattr(bundle.mcfg, "remat"):
-        model_over["remat"] = opts.remat
-    if not opts.scores_f32 and hasattr(bundle.mcfg, "scores_f32"):
+    if (hasattr(bundle.mcfg, "remat")
+            and plan.remat != getattr(bundle.mcfg, "remat")):
+        model_over["remat"] = plan.remat
+    if not plan.scores_f32 and hasattr(bundle.mcfg, "scores_f32"):
         model_over["scores_f32"] = False
     if model_over:
         bundle = Bundle(dataclasses.replace(
             bundle.arch,
             model=dataclasses.replace(bundle.mcfg, **model_over)))
     if shape.kind == "train":
-        return _plan_train(bundle, shape, mesh, opts)
+        return _plan_train(bundle, shape, mesh, plan)
     if shape.kind == "prefill":
-        return _plan_prefill(bundle, shape, mesh, opts)
+        return _plan_prefill(bundle, shape, mesh, plan)
     if shape.kind == "decode":
-        return _plan_decode(bundle, shape, mesh, opts)
+        return _plan_decode(bundle, shape, mesh, plan)
     raise ValueError(shape.kind)

@@ -17,84 +17,12 @@ import numpy as np
 
 
 def main(argv=None):
-    from repro.core.spsa import VECTORIZE
+    from repro.launch import cli
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--arch", default="tiny-100m")
-    p.add_argument("--smoke", action="store_true",
-                   help="use the reduced config (CPU-friendly)")
-    p.add_argument("--optimizer", default="addax",
-                   choices=("addax", "addax-wa", "mezo", "ipsgd", "sgd",
-                            "adam", "addax-adam"))
+    cli.add_common_args(p)
+    cli.add_plan_arg(p)
+    cli.add_train_knob_args(p)
     p.add_argument("--steps", type=int, default=100)
-    p.add_argument("--k0", type=int, default=6)
-    p.add_argument("--k1", type=int, default=4)
-    p.add_argument("--l-t", type=int, default=None,
-                   help="length threshold; omit for Addax-WA")
-    p.add_argument("--buckets", type=int, default=1,
-                   help="FO width-ladder size: the short stream pads to "
-                        "its bucket's edge instead of L_T (1 = paper "
-                        "two-width split; see docs/data-pipeline.md)")
-    p.add_argument("--pack", action="store_true",
-                   help="first-fit sequence packing of the FO stream "
-                        "(segment-aware attention keeps examples "
-                        "isolated; decoder family + dense attention only)")
-    p.add_argument("--prefetch", type=int, default=0,
-                   help="background batch-prefetch depth (0 = build "
-                        "synchronously; the stream is bitwise-identical "
-                        "either way)")
-    p.add_argument("--async-window", type=int, default=1,
-                   help="max in-flight dispatched steps (1 = classic "
-                        "synchronous loop; >1 overlaps host and device "
-                        "work — the trajectory is bitwise-identical)")
-    p.add_argument("--sched-lag", type=int, default=1,
-                   help="fixed BankSchedule feedback lag in steps "
-                        "(window-independent; raise it to overlap "
-                        "scheduled-bank runs)")
-    p.add_argument("--lr", type=float, default=1e-4)
-    p.add_argument("--alpha", type=float, default=5e-4)
-    p.add_argument("--eps", type=float, default=1e-3)
-    p.add_argument("--n-dirs", type=int, default=1,
-                   help="SPSA estimator-bank size (directions per step)")
-    p.add_argument("--bank-exec", default="unroll", choices=VECTORIZE,
-                   help="bank executor: unroll (reference) | scan (chain, "
-                        "O(1) compile) | vmap (fresh, one batched fwd) | "
-                        "map (fresh, sequential lax.map) | auto")
-    p.add_argument("--bank-microbatch", type=int, default=0,
-                   help="probes per lax.map microbatch for "
-                        "--bank-exec map (0 = fully sequential)")
-    p.add_argument("--bank-schedule", default="",
-                   help="variance-adaptive bank spec "
-                        "'min[:low[:high[:ema]]]' (e.g. '1:0.5:2.0'); "
-                        "max_dirs = --n-dirs; empty = fixed bank")
-    p.add_argument("--backend", default="jnp",
-                   choices=("jnp", "pallas", "pallas_interpret"),
-                   help="update-engine backend (pallas = fused in-place "
-                        "kernel; pallas_interpret = CPU validation mode)")
-    p.add_argument("--grad-clip", type=float, default=None,
-                   help="global-norm clip on the FO gradient")
-    p.add_argument("--spsa-mode", default="chain",
-                   choices=("chain", "fresh"),
-                   help="SPSA walk: chain (paper, single live buffer) | "
-                        "fresh (bit-exact restore; ablation)")
-    p.add_argument("--dp", type=int, default=0,
-                   help="data-parallel shards: run the explicit-collective "
-                        "shard_map step over a (dp,) mesh (0 = single-"
-                        "process step; needs >= dp local devices, e.g. "
-                        "XLA_FLAGS=--xla_force_host_platform_device_count"
-                        "=N on CPU).  Moments optimizers run under the "
-                        "replicated-(m, v) contract (docs/engine.md)")
-    p.add_argument("--shard-bank", action="store_true",
-                   help="with --dp: slice the SPSA bank across shards "
-                        "(requires --spsa-mode fresh and n-dirs %% dp == 0)")
-    p.add_argument("--check-moments", action="store_true",
-                   help="with --dp and adam/addax-adam: all-gather a "
-                        "per-shard moments checksum each step; the loop "
-                        "aborts if (m, v) replication ever diverges")
-    p.add_argument("--compress-fo", action="store_true",
-                   help="with --dp: int8-quantized FO all-reduce "
-                        "(repro.core.compression) — ~4x fewer gradient "
-                        "bytes on the wire; stateless FO optimizers only "
-                        "(moments combinations are rejected, DESIGN.md §8)")
     p.add_argument("--preempt-flag", default=None,
                    help="preemption flag-file path: the loop checkpoints "
                         "and exits cleanly once this file exists "
@@ -115,11 +43,9 @@ def main(argv=None):
                    help="length-distribution profile (see data.synthetic)")
     p.add_argument("--n-examples", type=int, default=512)
     p.add_argument("--max-len", type=int, default=None)
-    p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--metrics", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--log-every", type=int, default=10)
-    p.add_argument("--seed", type=int, default=0)
     p.add_argument("--dtype", default="f32", choices=("f32", "bf16"))
     args = p.parse_args(argv)
 
@@ -134,19 +60,27 @@ def main(argv=None):
     if args.straggler_shrink and not args.bank_schedule:
         raise SystemExit("--straggler-shrink requires --bank-schedule "
                          "(it acts by shrinking the scheduled bank)")
-    if args.preempt_at_step is not None:
-        if not args.preempt_flag:
-            raise SystemExit("--preempt-at-step requires --preempt-flag "
-                             "(it writes that file)")
-        if args.prefetch:
-            raise SystemExit("--preempt-at-step requires --prefetch 0 "
-                             "(the hook wraps synchronous batch builds)")
 
     bundle = get_bundle(args.arch, smoke=args.smoke)
     vocab = bundle.mcfg.vocab
     corpus = make_corpus(SyntheticTaskConfig(
         name=args.profile, task=args.task, vocab=vocab,
         n_examples=args.n_examples, max_len=args.max_len, seed=args.seed))
+
+    if args.plan == "auto":
+        # plan over the *real* corpus length distribution; only flags
+        # still at their parser default are overridden (launch/cli.py)
+        cli.apply_plan_auto(p, args, bundle.arch,
+                            [len(e["tokens"]) for e in corpus])
+
+    if args.preempt_at_step is not None:
+        if not args.preempt_flag:
+            raise SystemExit("--preempt-at-step requires --preempt-flag "
+                             "(it writes that file)")
+        if args.prefetch:
+            raise SystemExit("--preempt-at-step requires --prefetch 0 "
+                             "(the hook wraps synchronous batch builds; "
+                             "with --plan auto also pass --prefetch 0)")
 
     pipe = AddaxPipeline(corpus, PipelineConfig(
         k0=args.k0, k1=args.k1, l_t=args.l_t, seed=args.seed,

@@ -48,7 +48,7 @@ def test_dp_addax_step_matches_single_device():
         from repro.core import schedules
         from repro.core.addax import AddaxConfig, make_addax_step
         from repro.distributed.collectives import (batch_sharding,
-                                                   make_dp_addax_step,
+                                                   make_dp_step,
                                                    replicated)
         from repro.launch.mesh import _mk
         from repro.models.registry import get_bundle
@@ -62,7 +62,7 @@ def test_dp_addax_step_matches_single_device():
         b1 = b.make_batch(1, 16, 32)
 
         # distributed
-        dp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh)
+        dp = make_dp_step(b.loss_fn(), cfg, lr_fn, mesh)
         pd = jax.device_put(params, replicated(mesh))
         bd0 = jax.device_put(b0, batch_sharding(mesh))
         bd1 = jax.device_put(b1, batch_sharding(mesh))
@@ -100,7 +100,7 @@ def test_dp_addax_step_bank_matches_single_device():
         from repro.core import schedules
         from repro.core.addax import AddaxConfig, make_addax_step
         from repro.distributed.collectives import (batch_sharding,
-                                                   make_dp_addax_step,
+                                                   make_dp_step,
                                                    replicated)
         from repro.launch.mesh import _mk
         from repro.models.registry import get_bundle
@@ -113,7 +113,7 @@ def test_dp_addax_step_bank_matches_single_device():
         b0 = b.make_batch(0, 16, 64)
         b1 = b.make_batch(1, 16, 32)
 
-        dp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh)
+        dp = make_dp_step(b.loss_fn(), cfg, lr_fn, mesh)
         pd = jax.device_put(params, replicated(mesh))
         bd0 = jax.device_put(b0, batch_sharding(mesh))
         bd1 = jax.device_put(b1, batch_sharding(mesh))
@@ -148,7 +148,7 @@ def test_dp_addax_step_compressed_fo():
         from repro.core import schedules
         from repro.core.addax import AddaxConfig
         from repro.distributed.collectives import (batch_sharding,
-                                                   make_dp_addax_step,
+                                                   make_dp_step,
                                                    replicated)
         from repro.launch.mesh import _mk
         from repro.models.registry import get_bundle
@@ -162,10 +162,10 @@ def test_dp_addax_step_compressed_fo():
         b0 = jax.device_put(b.make_batch(0, 16, 64), batch_sharding(mesh))
         b1 = jax.device_put(b.make_batch(1, 16, 32), batch_sharding(mesh))
 
-        exact = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh,
-                                   compress_fo=False)
-        comp = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh,
-                                  compress_fo=True)
+        exact = make_dp_step(b.loss_fn(), cfg, lr_fn, mesh,
+                             compress_fo=False)
+        comp = make_dp_step(b.loss_fn(), cfg, lr_fn, mesh,
+                            compress_fo=True)
         pe, _ = jax.jit(exact)(params, jnp.uint32(0), b0, b1)
         pc, _ = jax.jit(comp)(params, jnp.uint32(0), b0, b1)
         rel = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
@@ -232,3 +232,27 @@ def test_collective_bytes_sharded_bank_uses_ceiling(n_dirs, dp):
     # gather moves dp equal slices of the padded per-shard length
     assert out["zo_bytes"] == 4 * dp * (-(-n_dirs // dp)) + 4
     assert out["zo_bytes"] >= 4 * n_dirs + 4
+
+
+def test_make_dp_addax_step_deprecation_shim():
+    """One-release shim: the old name still builds the step but raises
+    DeprecationWarning pointing at ``make_dp_step`` (docs/engine.md)."""
+    import warnings
+
+    from repro.core import schedules
+    from repro.core.addax import AddaxConfig
+    from repro.distributed.collectives import (make_dp_addax_step,
+                                               make_dp_step)
+    from repro.launch.mesh import _mk
+    from repro.models.registry import get_bundle
+
+    mesh = _mk((1,), ("data",))
+    b = get_bundle("tiny-100m", smoke=True)
+    cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3)
+    lr_fn = schedules.constant(cfg.lr)
+    with pytest.warns(DeprecationWarning, match="make_dp_step"):
+        shim = make_dp_addax_step(b.loss_fn(), cfg, lr_fn, mesh)
+    assert callable(shim)
+    with warnings.catch_warnings():   # the routed-to builder is clean
+        warnings.simplefilter("error")
+        make_dp_step(b.loss_fn(), cfg, lr_fn, mesh, name="addax")

@@ -36,6 +36,7 @@ def test_relative_links_resolve():
     scanned = {os.path.relpath(p, REPO) for p in paths}
     for expected in ("README.md", "DESIGN.md", "docs/engine.md",
                      "docs/memory-model.md", "docs/serving.md",
+                     "docs/perf-model.md",
                      "benchmarks/README.md", "tests/README.md"):
         assert expected in scanned, f"{expected} missing from link scan"
     broken = check_links.check_files(paths)
@@ -80,6 +81,28 @@ def test_serving_md_covers_raise_surface():
     # linked from both entry points
     assert "docs/serving.md" in _read("README.md")
     assert "serving.md" in _read("docs/engine.md")
+
+
+def test_perf_model_md_covers_planner_surface():
+    """docs/perf-model.md is what perf_model/plan error messages and
+    docstrings route users to — the promised anchors must exist."""
+    text = _read("docs/perf-model.md")
+    for needle in ("CostEstimate", "PerfModel.calibrate", "plan_auto",
+                   "probe", "fig_bank_exec", "fig_host_overlap",
+                   "fig_ndirs_sweep", "fig_plan_auto", "top-2",
+                   "PLAN_VS_BEST_BOUND", "core.plan.KNOBS",
+                   "--plan auto", "sec_per_flop", "host_factor"):
+        assert needle in text, needle
+    # linked from both entry points
+    assert "docs/perf-model.md" in _read("README.md")
+    assert "perf-model.md" in _read("docs/engine.md")
+
+
+def test_engine_md_knob_table_has_planned_column():
+    text = _read("docs/engine.md")
+    assert "planned by `plan_auto`" in text
+    assert "make_dp_addax_step" in text       # deprecation notice
+    assert "DeprecationWarning" in text
 
 
 def test_design_has_section_6():
