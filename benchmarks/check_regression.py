@@ -55,6 +55,7 @@ FIGURES = {
     "fig_host_overlap": ["--quick"],
     "fig_compressed_dp": ["--quick", "--steps", "6"],
     "fig_serving": ["--quick"],
+    "fig_sparse_mezo": ["--quick"],
     # must stay LAST: it calibrates core.perf_model from the results/
     # JSONs on disk, so a full gate validates against the fresh corpus
     # the figures above just wrote (--only fig_plan_auto validates
@@ -393,6 +394,50 @@ def check_serving(fresh: dict, committed: dict, tol: float, slack: float,
             "refill")
 
 
+def check_sparse_mezo(fresh: dict, committed: dict, tol: float,
+                      slack: float, failures: list):
+    """Sparse-MeZO gate (DESIGN.md §11): the sparsity=0 dense-degeneracy
+    checks are *live* bitwise hard-fails on the fresh run (the contract
+    that makes the sparse specs a pure superset of the dense
+    optimizers); the walk-FLOP reductions are deterministic model
+    numbers — exact vs committed AND floored at the nominal sparsity;
+    the equal-FLOP g0-spread ratios are trajectory-deterministic,
+    banded against the committed run."""
+    fg = _need(fresh, "gates", "fig_sparse_mezo")
+    for key in _need(committed, "gates", "fig_sparse_mezo"):
+        if not _need(fg, key, "gates"):
+            raise GateFailure(
+                f"fig_sparse_mezo: live gate {key} failed — sparsity=0 "
+                "no longer reproduces the dense trajectory bitwise "
+                "(docs/engine.md)")
+        print(f"  [ok] sparse_mezo live gate {key}")
+    fm = _need(fresh, "model", "fig_sparse_mezo")
+    cm = _need(committed, "model", "fig_sparse_mezo")
+    for skey, crow in sorted(cm.items()):
+        frow = _need(fm, skey, "fig_sparse_mezo model")
+        red = _need(frow, "reduction", f"model[{skey}]")
+        _exact(f"sparse_mezo model[{skey}].reduction", red,
+               _need(crow, "reduction", f"model[{skey}]"), failures)
+        if red + 1e-9 < float(skey):
+            raise GateFailure(
+                f"fig_sparse_mezo: walk-FLOP reduction {red} at "
+                f"sparsity={skey} is below the nominal sparsity — the "
+                "cost model no longer credits the masked walk")
+    fv = {str(r["sparsity"]): r
+          for r in _need(fresh, "variance", "fig_sparse_mezo")}
+    for crow in _need(committed, "variance", "fig_sparse_mezo"):
+        skey = str(crow["sparsity"])
+        if skey not in fv:
+            raise GateFailure(f"fig_sparse_mezo: fresh run lost "
+                              f"sparsity={skey} variance row")
+        _exact(f"sparse_mezo s={skey} equal-FLOP bank",
+               _need(fv[skey], "n_dirs_equal_flop", skey),
+               _need(crow, "n_dirs_equal_flop", skey), failures)
+        _band(f"sparse_mezo s={skey} g0-spread ratio",
+              _need(fv[skey], "std_ratio_vs_dense", skey),
+              _need(crow, "std_ratio_vs_dense", skey), tol, failures)
+
+
 def check_plan_auto(fresh: dict, committed: dict, tol: float, slack: float,
                     failures: list):
     """Perf-model gate (docs/perf-model.md): on every sweep axis the
@@ -466,6 +511,7 @@ CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_host_overlap": check_host_overlap,
           "fig_compressed_dp": check_compressed_dp,
           "fig_serving": check_serving,
+          "fig_sparse_mezo": check_sparse_mezo,
           "fig_plan_auto": check_plan_auto}
 
 

@@ -40,7 +40,8 @@ def main(argv=None):
                             fig5_k0_sweep, fig11_convergence,
                             fig_bank_exec, fig_host_overlap,
                             fig_ndirs_sweep, fig_plan_auto, fig_serving,
-                            roofline_report, table_accuracy_memory)
+                            fig_sparse_mezo, roofline_report,
+                            table_accuracy_memory)
     suite = {
         "fig3_memory_vs_batch": lambda: fig3_memory_vs_batch.run(
             quick=quick),
@@ -52,6 +53,7 @@ def main(argv=None):
         "fig_host_overlap": lambda: fig_host_overlap.run(quick=quick),
         "fig11_convergence": lambda: fig11_convergence.run(quick=quick),
         "fig_serving": lambda: fig_serving.run(quick=quick),
+        "fig_sparse_mezo": lambda: fig_sparse_mezo.run(quick=quick),
         "fig_compressed_dp": lambda: _run_subprocess_fig(
             "benchmarks.fig_compressed_dp",
             *(("--quick",) if quick else ())),

@@ -57,9 +57,19 @@ class AddaxConfig:
     # sequential); ignored by the other executors.
     bank_microbatch: int = 0
     # Variance-adaptive bank sizing: "" = fixed n_dirs; otherwise a
-    # schedules.BankSchedule spec "min[:low[:high[:ema]]]" with
-    # max_dirs = n_dirs (the step then takes a traced n_active scalar).
+    # schedules.BankSchedule spec "min[:low[:high[:ema[:smax]]]]" with
+    # max_dirs = n_dirs (the step then takes a traced n_active scalar,
+    # plus a traced sparsity scalar when smax > 0 on a sparse spec).
     bank_schedule: str = ""
+    # Sparse-MeZO walk (arXiv 2402.15751): fraction of parameters whose
+    # perturbation is masked out, in [0, 1).  0.0 = dense walk (bitwise
+    # identical to not setting it).  Only the sparse STEP_SPECS entries
+    # (addax-sparse / addax-sparse-adam) accept a nonzero value.
+    sparsity: float = 0.0
+    # Mask calibration: "random" (counter-stream subset, zero resident
+    # bytes, any backend) | "magnitude" (per-leaf top-(1-sparsity) by
+    # |param|, materialized per step; jnp backend only).
+    mask_mode: str = "random"
 
 
 LossFn = Callable[[Any, Any], jax.Array]
@@ -72,7 +82,8 @@ def _tree_sq_norm(tree: Any) -> jax.Array:
 
 
 def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
-                 seed: jax.Array, lr: jax.Array, alpha: float) -> Any:
+                 seed: jax.Array, lr: jax.Array, alpha: float,
+                 mask_fn=None) -> Any:
     """theta <- theta - lr * (alpha * zo + (1-alpha) * fo_grads), where
     ``zo`` is ``g0 * z(seed)`` for a scalar ``g0`` and the estimator-bank
     mean ``mean_k(g0[k] * z(fold_dir(seed, k)))`` for a vector ``g0`` of
@@ -84,6 +95,11 @@ def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
     source may be ``None`` (MeZO: fo=None, IP-SGD: g0=None).  A
     one-direction bank applies ``(alpha * g0[0]) * z`` exactly like the
     scalar path — bit-identical.
+
+    ``mask_fn`` (from ``rng.tree_mask_fn``) applies the sparse walk's
+    per-step mask to every direction's z (``z * m`` before the FMA) — the
+    same mask the SPSA walk used, so the update moves only the perturbed
+    subspace.  ``None`` is the dense update, bit for bit.
     """
     ids = rng.leaf_ids(params)
     if g0 is not None:
@@ -95,8 +111,11 @@ def fused_update(params: Any, fo_grads: Any | None, g0: jax.Array | None,
     def one(leaf, lid, g1):
         upd = jnp.zeros(leaf.shape, jnp.float32)
         if g0 is not None:
+            m = mask_fn(lid, leaf.shape) if mask_fn is not None else None
             for k in range(n_dirs):
                 z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
+                if m is not None:
+                    z = z * m
                 upd = upd + (w_zo * g0v[k]) * z
         if g1 is not None:
             upd = upd + (1.0 - alpha if g0 is not None else 1.0) * \

@@ -76,6 +76,7 @@ class StepSpec:
     seed_base: int              # per-step seed namespace (rng.fold_seed)
     two_stream: bool            # consumes (batch0, batch1)?
     stream: str = "fo"          # one-stream optimizers: which stream
+    sparse: bool = False        # Sparse-MeZO masked walk (cfg.sparsity)
 
 
 STEP_SPECS: dict[str, StepSpec] = {
@@ -94,6 +95,14 @@ STEP_SPECS: dict[str, StepSpec] = {
                      0, False),
     "addax-adam": StepSpec("addax-adam", True, True, None, True, False,
                            0xADA3, True),
+    # Sparse-MeZO masked-walk variants (arXiv 2402.15751; DESIGN.md §11).
+    # Same seed namespaces as their dense twins: at cfg.sparsity = 0 the
+    # mask machinery short-circuits away entirely, so addax-sparse is
+    # *bitwise* the addax step (and addax-sparse-adam is addax-adam).
+    "addax-sparse": StepSpec("addax-sparse", True, True, None, False,
+                             False, 0xADDA, True, sparse=True),
+    "addax-sparse-adam": StepSpec("addax-sparse-adam", True, True, None,
+                                  True, False, 0xADA3, True, sparse=True),
 }
 
 
@@ -101,6 +110,74 @@ def _check_backend(backend: str):
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS} "
                          "(docs/engine.md lists the backend matrix)")
+
+
+def _check_sparse(name: str, cfg: AddaxConfig, spec: StepSpec,
+                  backend: str, sched: BankSchedule | None, *,
+                  dp: bool = False):
+    """Factory-time validation of the Sparse-MeZO knobs (the raise matrix
+    in docs/engine.md).  Combinations that cannot hold the engine's
+    bitwise contracts reject loudly here instead of drifting silently."""
+    s = float(cfg.sparsity or 0.0)
+    if not (0.0 <= s < 1.0):
+        raise ValueError(
+            f"sparsity must be in [0, 1), got {s} (sparsity=1 would mask "
+            "every element and zero the SPSA estimate)")
+    if cfg.mask_mode not in rng.MASK_MODES:
+        raise ValueError(f"unknown mask_mode {cfg.mask_mode!r}; one of "
+                         f"{rng.MASK_MODES} (see docs/engine.md)")
+    trade = sched is not None and sched.max_sparsity > 0.0
+    if s > 0.0 and not spec.sparse:
+        raise ValueError(
+            f"sparsity={s} needs a sparse optimizer (addax-sparse / "
+            f"addax-sparse-adam), got {name!r} — the dense specs' bitwise "
+            "contracts are defined over the unmasked walk (see "
+            "docs/engine.md)")
+    if trade and not spec.sparse:
+        raise ValueError(
+            f"bank_schedule={cfg.bank_schedule!r} trades sparsity "
+            f"(max_sparsity={sched.max_sparsity}) but {name!r} is not a "
+            "sparse optimizer (see docs/engine.md)")
+    if not spec.sparse:
+        return
+    if cfg.mask_mode == "magnitude":
+        if backend != "jnp":
+            raise ValueError(
+                "mask_mode='magnitude' has no Pallas path: the kernels "
+                "regenerate the random mask stream in-kernel, a "
+                "materialized magnitude mask cannot ride the "
+                "scalar-prefetch contract — use backend='jnp' or "
+                "mask_mode='random' (see docs/engine.md)")
+        if spec.moments:
+            raise ValueError(
+                f"mask_mode='magnitude' is rejected for {name!r}: the "
+                "replicated-(m, v) contract rides on fully fenced update "
+                "inputs (DESIGN.md §6), and a materialized magnitude mask "
+                "tree enters the moments arithmetic outside the fences — "
+                "use mask_mode='random' (see docs/engine.md)")
+        if dp:
+            raise ValueError(
+                "mask_mode='magnitude' is rejected under DP: the sharded "
+                "walk's bitwise equivalence contracts are fenced around "
+                "counter-regenerated streams only — use "
+                "mask_mode='random' (see docs/engine.md)")
+        if trade:
+            raise ValueError(
+                "the adaptive bank schedule can only trade sparsity in "
+                "mask_mode='random' (the magnitude top-k count shapes "
+                "the computation; see docs/engine.md)")
+    if trade:
+        if backend != "jnp":
+            raise ValueError(
+                "a sparsity-trading bank_schedule needs backend='jnp': "
+                "the scheduled sparsity is a traced scalar, but the "
+                "Pallas kernels take sparsity as a static compile-time "
+                "parameter (see docs/engine.md)")
+        if dp:
+            raise ValueError(
+                "a sparsity-trading bank_schedule is rejected under DP: "
+                "the schedule state lives on the single-host train loop "
+                "(see docs/engine.md)")
 
 
 class StepCache:
@@ -178,7 +255,8 @@ def moments_checksum(state: Any) -> jax.Array:
 
 def apply_update(params: Any, g1: Any | None, g0: jax.Array | None,
                  seed: jax.Array, lr, alpha: float, *,
-                 backend: str = "jnp") -> Any:
+                 backend: str = "jnp", mask_fn=None,
+                 sparsity: float = 0.0) -> Any:
     """Backend-dispatched fused update
     ``theta <- theta - lr (alpha/n Σ_k g0_k z_k + (1-alpha) g1)``.
 
@@ -187,17 +265,23 @@ def apply_update(params: Any, g1: Any | None, g0: jax.Array | None,
     launch per leaf, leaf ids and per-direction seeds identical to the jnp
     path, so interpret mode reproduces it bit for bit.
 
+    The sparse walk passes ``mask_fn`` (consumed by the jnp path) plus the
+    static ``sparsity`` (consumed by the pallas kernels, which regenerate
+    the same random mask stream in-kernel from ``rng.fold_mask(seed)``) —
+    ``make_step`` guarantees the two describe the same mask.
+
     Raises ``ValueError`` for an unknown ``backend`` (docs/engine.md)."""
     _check_backend(backend)
     if backend == "jnp":
-        return fused_update(params, g1, g0, seed, lr, alpha)
+        return fused_update(params, g1, g0, seed, lr, alpha, mask_fn)
     from repro.kernels.addax_update import addax_update
     interpret = backend == "pallas_interpret"
     ids = rng.leaf_ids(params)
 
     def one(leaf, lid, g):
         return addax_update(leaf, g, g0, seed, lr, leaf_id=lid,
-                            alpha=alpha, interpret=interpret)
+                            alpha=alpha, sparsity=sparsity,
+                            interpret=interpret)
 
     if g1 is None:
         return jax.tree_util.tree_map(
@@ -209,7 +293,8 @@ def apply_adam_update(params: Any, state: dict, g1: Any | None,
                       g0: jax.Array | None, seed: jax.Array, lr,
                       alpha: float, step_idx: jax.Array, *,
                       backend: str = "jnp", b1: float = 0.9,
-                      b2: float = 0.999, adam_eps: float = 1e-8):
+                      b2: float = 0.999, adam_eps: float = 1e-8,
+                      mask_fn=None, sparsity: float = 0.0):
     """Moments-aware fused update: the mixed gradient
     ``g = alpha/n Σ_k g0_k z_k + (1-alpha) g1`` feeds Adam's (m, v) and the
     bias-corrected step, all inside one streaming pass per leaf — z is
@@ -276,8 +361,16 @@ def apply_adam_update(params: Any, state: dict, g1: Any | None,
         def one(leaf, lid, gfo, m, v):
             g = jnp.zeros(leaf.shape, jnp.float32)
             if with_zo:
+                # the sparse mask multiplies z before the pinned FMA —
+                # same placement as the kernel's z * m (mask values are
+                # exact 0/1, so the multiply carries no rounding and
+                # needs no pin of its own)
+                mk = mask_fn(lid, leaf.shape) if mask_fn is not None \
+                    else None
                 for k in range(n_dirs):
                     z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
+                    if mk is not None:
+                        z = z * mk
                     g = pin(g + pin((w_zo * g0v[k]) * z))
             if gfo is not None:
                 g = pin(g + pin(w_fo * gfo.astype(jnp.float32)))
@@ -295,7 +388,7 @@ def apply_adam_update(params: Any, state: dict, g1: Any | None,
             return addax_adam_update(
                 leaf, gfo, m, v, g0, seed, lr, bc1, bc2, leaf_id=lid,
                 alpha=alpha, b1=b1, b2=b2, adam_eps=adam_eps,
-                interpret=interpret)
+                sparsity=sparsity, interpret=interpret)
 
     # unzip against the params treedef (a tree_map with
     # is_leaf=isinstance(tuple) would misfire on pytrees that contain
@@ -471,11 +564,23 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     the update (active-prefix masking — changing ``n_active`` never
     recompiles).
 
+    The sparse specs (``addax-sparse`` / ``addax-sparse-adam``) mask the
+    walk and the update with the per-step Sparse-MeZO mask at
+    ``cfg.sparsity``; a sparsity-trading schedule
+    (``bank_schedule="min[:low[:high[:ema[:smax]]]]"`` with ``smax > 0``)
+    adds a second traced scalar right after ``n_active``
+    (``step(params[, state], step_idx, n_active, sparsity, *batches)``).
+
     Raises (full matrix in docs/engine.md):
 
     * ``ValueError`` — unknown optimizer ``name`` or ``backend``;
     * ``ValueError`` (via ``bank_schedule_of``) — ``cfg.bank_schedule``
       set for an optimizer with no ZO bank, or with ``cfg.n_dirs < 2``;
+    * ``ValueError`` (via ``_check_sparse``) — ``cfg.sparsity`` outside
+      ``[0, 1)`` or nonzero on a non-sparse spec; unknown
+      ``cfg.mask_mode``; ``mask_mode='magnitude'`` on a pallas backend or
+      a moments spec; a sparsity-trading schedule on a non-sparse spec,
+      a pallas backend, or magnitude masks;
     * ``ValueError`` (via ``spsa.spsa_bank_grad`` at trace time) — a
       ``cfg.bank_exec`` executor incompatible with ``cfg.spsa_mode``
       (``scan`` needs chain, ``vmap``/``map`` need fresh)."""
@@ -486,17 +591,26 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     _check_backend(backend)
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
     sched = bank_schedule_of(cfg, spec)
+    _check_sparse(name, cfg, spec, backend, sched)
+    trade_sparsity = spec.sparse and sched is not None \
+        and sched.max_sparsity > 0.0
 
     def gradient_source(params, step_idx, batches, n_active=None,
-                        lr=None):
+                        lr=None, sparsity=None):
         seed = rng.fold_seed(spec.seed_base, step_idx)
         g0 = g1 = None
+        mask_fn = None
         metrics = {}
+        if spec.sparse:
+            sv = cfg.sparsity if sparsity is None else sparsity
+            # None at sparsity == 0: every consumer then skips the mask
+            # multiply entirely — the bitwise-equal-to-dense contract
+            mask_fn = rng.tree_mask_fn(params, seed, sv, cfg.mask_mode)
         if spec.zo:
             g0, loss0, params = spsa.spsa_bank_grad(
                 loss_fn, params, batches[0], seed, cfg.eps, cfg.n_dirs,
                 cfg.spsa_mode, vectorize=cfg.bank_exec,
-                microbatch=cfg.bank_microbatch or None)
+                microbatch=cfg.bank_microbatch or None, mask_fn=mask_fn)
             metrics["loss_zo"] = loss0
             if n_active is None:
                 metrics.update(_bank_metrics(g0, cfg.n_dirs))
@@ -515,29 +629,39 @@ def make_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                                            cfg, spec)
             metrics["loss_fo"] = loss1
             metrics.update(fo_m)
-        return params, g0, g1, seed, metrics, lr
+        return params, g0, g1, seed, metrics, lr, mask_fn
+
+    def _unpack(rest):
+        n_active = sparsity = None
+        if sched:
+            n_active, rest = rest[0], rest[1:]
+            if trade_sparsity:
+                sparsity, rest = rest[0], rest[1:]
+        return n_active, sparsity, rest
+
+    kernel_sparsity = float(cfg.sparsity or 0.0) if spec.sparse else 0.0
 
     if spec.moments:
         def step(params, state, step_idx, *rest):
-            n_active, batches = (rest[0], rest[1:]) if sched \
-                else (None, rest)
+            n_active, sparsity, batches = _unpack(rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics, lr = gradient_source(
-                params, step_idx, batches, n_active, lr)
+            params, g0, g1, seed, metrics, lr, mask_fn = gradient_source(
+                params, step_idx, batches, n_active, lr, sparsity)
             params, state = apply_adam_update(
                 params, state, g1, g0, seed, lr, alpha, step_idx,
-                backend=backend)
+                backend=backend, mask_fn=mask_fn,
+                sparsity=kernel_sparsity)
             metrics["lr"] = lr
             return params, state, metrics
     else:
         def step(params, step_idx, *rest):
-            n_active, batches = (rest[0], rest[1:]) if sched \
-                else (None, rest)
+            n_active, sparsity, batches = _unpack(rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics, lr = gradient_source(
-                params, step_idx, batches, n_active, lr)
+            params, g0, g1, seed, metrics, lr, mask_fn = gradient_source(
+                params, step_idx, batches, n_active, lr, sparsity)
             params = apply_update(params, g1, g0, seed, lr, alpha,
-                                  backend=backend)
+                                  backend=backend, mask_fn=mask_fn,
+                                  sparsity=kernel_sparsity)
             metrics["lr"] = lr
             return params, metrics
 
@@ -604,7 +728,15 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     * ``NotImplementedError`` — ``shard_bank=True`` over multiple data
       axes;
     * ``ValueError`` (via ``bank_schedule_of``) — ``cfg.bank_schedule``
-      set for an optimizer with no ZO bank or with ``n_dirs < 2``."""
+      set for an optimizer with no ZO bank or with ``n_dirs < 2``;
+    * ``ValueError`` (via ``_check_sparse``) — the single-host sparse
+      raise matrix, plus DP-specific rejections:
+      ``mask_mode='magnitude'`` (the DP bitwise contracts are fenced
+      around counter-regenerated streams only) and a sparsity-trading
+      ``bank_schedule`` (its state lives on the single-host loop).
+      ``mask_mode='random'`` at a static ``cfg.sparsity`` composes with
+      every DP shape — the mask is a pure function of ``(seed, step)``,
+      so it replicates bit-identically on every shard."""
     spec = STEP_SPECS.get(name)
     if spec is None:
         raise ValueError(f"unknown optimizer {name!r}; one of "
@@ -633,6 +765,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
             "(see docs/engine.md)")
     alpha = cfg.alpha if spec.alpha is None else spec.alpha
     sched = bank_schedule_of(cfg, spec)
+    _check_sparse(name, cfg, spec, backend, sched, dp=True)
+    kernel_sparsity = float(cfg.sparsity or 0.0) if spec.sparse else 0.0
 
     if shard_bank:
         if not spec.zo:
@@ -656,7 +790,13 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
     def gradient_source(params, step_idx, n_active, batches, lr):
         seed = rng.fold_seed(spec.seed_base, step_idx)
         g0 = g1 = None
+        mask_fn = None
         metrics = {}
+        if spec.sparse:
+            # random mode only (validated above): pure in (seed, step),
+            # so every shard regenerates the identical mask
+            mask_fn = rng.tree_mask_fn(params, seed, cfg.sparsity,
+                                       cfg.mask_mode)
 
         if spec.zo:
             b0 = batches[0]
@@ -670,7 +810,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                 g0_loc, loss0, params = spsa.spsa_bank_grad(
                     loss_fn, params, b0, seed, cfg.eps, n_local,
                     "fresh", seeds=seeds, vectorize=cfg.bank_exec,
-                    microbatch=cfg.bank_microbatch or None)
+                    microbatch=cfg.bank_microbatch or None,
+                    mask_fn=mask_fn)
                 g0 = jax.lax.all_gather(g0_loc, gather_axis, tiled=True)
                 loss0 = jax.lax.pmean(loss0, axes)
             else:
@@ -682,7 +823,8 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                 g0, loss0, params = spsa.spsa_bank_grad(
                     pmean_loss, params, b0, seed, cfg.eps, cfg.n_dirs,
                     cfg.spsa_mode, vectorize=cfg.bank_exec,
-                    microbatch=cfg.bank_microbatch or None)
+                    microbatch=cfg.bank_microbatch or None,
+                    mask_fn=mask_fn)
             metrics["loss_zo"] = loss0
             if n_active is None:
                 metrics.update(_bank_metrics(g0, cfg.n_dirs))
@@ -737,21 +879,22 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
                     params, g1, lr = jax.lax.optimization_barrier(
                         (params, g1, lr))
 
-        return params, g0, g1, seed, metrics, lr
+        return params, g0, g1, seed, metrics, lr, mask_fn
 
     if spec.moments:
         def local_step(params, state, step_idx, *rest):
             n_active, batches = (rest[0], rest[1:]) if sched \
                 else (None, rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics, lr = gradient_source(
+            params, g0, g1, seed, metrics, lr, mask_fn = gradient_source(
                 params, step_idx, n_active, batches, lr)
             # the replicated-(m, v) contract: g0/g1 were synchronized
             # above, so this fenced, deterministic update is identical on
             # every shard — no moments collective needed (DESIGN.md §6)
             params, state = apply_adam_update(
                 params, state, g1, g0, seed, lr, alpha, step_idx,
-                backend=backend)
+                backend=backend, mask_fn=mask_fn,
+                sparsity=kernel_sparsity)
             if check_moments:
                 metrics["moments_checksum"] = jax.lax.all_gather(
                     moments_checksum(state), axes)
@@ -762,10 +905,11 @@ def make_dp_local_step(name: str, loss_fn: LossFn, cfg: AddaxConfig,
             n_active, batches = (rest[0], rest[1:]) if sched \
                 else (None, rest)
             lr = lr_fn(step_idx)
-            params, g0, g1, seed, metrics, lr = gradient_source(
+            params, g0, g1, seed, metrics, lr, mask_fn = gradient_source(
                 params, step_idx, n_active, batches, lr)
             params = apply_update(params, g1, g0, seed, lr, alpha,
-                                  backend=backend)
+                                  backend=backend, mask_fn=mask_fn,
+                                  sparsity=kernel_sparsity)
             metrics["lr"] = lr
             return params, metrics
 

@@ -109,6 +109,7 @@ class StepDims:
     l_t: int
     n_dirs: int = 1
     dtype_bytes: int = 4          # training params are f32 by default
+    sparsity: float = 0.0         # Sparse-MeZO masked-walk sparsity
 
     @classmethod
     def from_arch(cls, arch, plan: Plan) -> "StepDims":
@@ -125,22 +126,29 @@ class StepDims:
             k0=plan.k0, k1=plan.k1, s_full=plan.s_full,
             l_t=plan.l_t if plan.l_t is not None else plan.s_full,
             n_dirs=plan.n_dirs,
-            dtype_bytes=jnp.dtype(plan.param_dtype).itemsize)
+            dtype_bytes=jnp.dtype(plan.param_dtype).itemsize,
+            sparsity=plan.sparsity)
 
 
 def train_step_cost(dims: StepDims, flash: bool = False) -> CostEstimate:
     """Analytic Addax train-step cost (paper §3.1 / DESIGN.md §4):
 
       flops      = 6 N (K1 L_T)        FO fwd+bwd on the short stream
-                 + 4 N (K0 S) n_dirs   2 ZO forwards per direction
+                 + 4 N (K0 S) n_dirs (1 - sparsity)
+                                       2 ZO forwards per direction; the
+                                       Sparse-MeZO mask skips the masked
+                                       fraction of the walk's work
       param traffic: the FO pass reads+writes params once (3x with the
-                 gradient), each ZO direction re-reads them twice;
+                 gradient), each ZO direction re-reads them twice (the
+                 sparse walk still streams every param — the mask is
+                 regenerated in-register, so bytes stay dense);
       act_bytes  = memory_model of the FO stream (vocab-aware — the ZO
                  stream stores no activations, which is the paper's
                  whole memory argument)."""
     n = dims.n_params
     fo_flops = 6.0 * n * dims.k1 * dims.l_t
-    zo_flops = 4.0 * n * dims.k0 * dims.s_full * dims.n_dirs
+    zo_flops = 4.0 * n * dims.k0 * dims.s_full * dims.n_dirs \
+        * (1.0 - dims.sparsity)
     pb = n * dims.dtype_bytes
     act = assignment.memory_model(
         dims.l_t, dims.k1, dims.n_layers, dims.d_model, dims.n_heads,
@@ -385,7 +393,7 @@ class PerfModel:
         by the hardware roofline, times the runtime host factor."""
         est = train_step_cost(dims)
         zo_flops = 4.0 * dims.n_params * dims.k0 * dims.s_full \
-            * dims.n_dirs
+            * dims.n_dirs * (1.0 - dims.sparsity)
         fo_flops = est.flops - zo_flops
         try:
             zo_s = self.predict_bank_s(plan.spsa_mode, plan.bank_exec,
@@ -499,12 +507,24 @@ def plan_auto(arch, hardware: Hardware | None = None,
 
     # ---- calibrated choices ------------------------------------------
     n_dirs = int(overrides.pop("n_dirs", getattr(arch, "n_dirs", 1)))
+    # Sparse-MeZO walk sparsity: a planned knob, but only sparse
+    # optimizers may carry it (engine._check_sparse rejects the rest) —
+    # a sparse optimizer defaults to the half-walk point (2x fewer walk
+    # FLOPs, well inside the variance envelope fig_sparse_mezo tracks)
+    sparsity = overrides.pop("sparsity", None)
+    if sparsity is None:
+        from repro.core import engine
+        spec = engine.STEP_SPECS.get(optimizer)
+        sparsity = 0.5 if (spec is not None
+                           and getattr(spec, "sparse", False)) else 0.0
+    sparsity = float(sparsity)
     dims = StepDims(
         n_params=_active_params(arch), n_layers=getattr(m, "n_layers", 1),
         d_model=getattr(m, "d_model", 1), n_heads=getattr(m, "n_heads", 1),
         vocab=getattr(m, "vocab", 0), k0=k0, k1=k1, s_full=s_full,
-        l_t=l_t, n_dirs=n_dirs)
-    zo_flops = 4.0 * dims.n_params * k0 * s_full * n_dirs
+        l_t=l_t, n_dirs=n_dirs, sparsity=sparsity)
+    zo_flops = 4.0 * dims.n_params * k0 * s_full * n_dirs \
+        * (1.0 - sparsity)
     if n_dirs == 1:
         spsa_mode, bank_exec = "chain", "unroll"
         ranking = ([(("chain", "unroll"),
@@ -527,6 +547,7 @@ def plan_auto(arch, hardware: Hardware | None = None,
         bank_exec=bank_exec, spsa_mode=spsa_mode,
         k0=k0, k1=k1, s_full=s_full, l_t=l_t, fo_buckets=tuple(edges),
         pack=pack, prefetch=prefetch, async_window=async_window,
+        sparsity=sparsity,
         remat=getattr(m, "remat", "none")), **overrides})
     if not explain:
         return plan

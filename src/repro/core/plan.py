@@ -97,9 +97,12 @@ for _args in [
     ("bank_exec", "cell", "unroll | scan | vmap | map (concrete)",
      "core/spsa.py", True, "bank executor; 'auto' resolves by mode"),
     ("bank_microbatch", "cell", "int >= 0", "core/spsa.py", False, ""),
-    ("bank_schedule", "cell", "'' or 'min[:low[:high[:ema]]]'",
+    ("bank_schedule", "cell", "'' or 'min[:low[:high[:ema[:smax]]]]'",
      "core/schedules.py", False, "'' = fixed bank (a value, not a "
      "sentinel)"),
+    ("sparsity", "cell", "float in [0, 1)", "core/engine.py", True,
+     "Sparse-MeZO masked-walk sparsity; 0 = dense (a value, not a "
+     "sentinel); > 0 only on sparse optimizers"),
     ("grad_clip", "cell", "None or float > 0", "core/engine.py", False,
      "None = no clipping (a value, not a sentinel)"),
     ("spsa_mode", "cell", "chain | fresh", "core/spsa.py", True, ""),
@@ -183,6 +186,7 @@ class Plan:
     bank_exec: str = "unroll"
     bank_microbatch: int = 0
     bank_schedule: str = ""
+    sparsity: float = 0.0
     grad_clip: float | None = None
     spsa_mode: str = "chain"
     compress_fo: bool = False
@@ -251,6 +255,9 @@ class Plan:
             if getattr(self, name) < 0:
                 raise ValueError(f"Plan.{name} must be >= 0, got "
                                  f"{getattr(self, name)}")
+        if not 0.0 <= self.sparsity < 1.0:
+            raise ValueError(f"Plan.sparsity must be in [0, 1), got "
+                             f"{self.sparsity}")
         if self.l_t is not None and self.l_t < 1:
             raise ValueError(f"Plan.l_t must be None (Addax-WA) or >= 1, "
                              f"got {self.l_t}")

@@ -130,30 +130,45 @@ def tree_z(seed: jax.Array, params: Any, dtype=None) -> Any:
     return jax.tree_util.tree_map(one, params, ids)
 
 
-def tree_perturb(params: Any, seed: jax.Array, scale) -> Any:
+def tree_perturb(params: Any, seed: jax.Array, scale,
+                 mask_fn: Any = None) -> Any:
     """params + scale * z(seed) — the functional analogue of MeZO's
     in-place ``PerturbParameters`` (Algorithm 3).  ``scale`` may be a python
-    scalar or traced scalar; z is regenerated, never stored across calls."""
+    scalar or traced scalar; z is regenerated, never stored across calls.
+
+    ``mask_fn`` (from ``tree_mask_fn``) restricts the perturbation to a
+    masked subset: ``z <- z * mask_fn(leaf_id, shape)`` before scaling —
+    the Sparse-MeZO walk.  ``None`` is the dense walk, bit for bit."""
     ids = leaf_ids(params)
 
     def one(leaf, lid):
         z = leaf_z(seed, lid, leaf.shape, jnp.float32)
+        if mask_fn is not None:
+            z = z * mask_fn(lid, leaf.shape)
         return (leaf.astype(jnp.float32) + scale * z).astype(leaf.dtype)
 
     return jax.tree_util.tree_map(one, params, ids)
 
 
 def tree_perturb2(params: Any, seed_a: jax.Array, scale_a,
-                  seed_b: jax.Array, scale_b) -> Any:
+                  seed_b: jax.Array, scale_b, mask_fn: Any = None) -> Any:
     """params + scale_a * z(seed_a) + scale_b * z(seed_b) in one streaming
     pass — the estimator bank's fused "restore direction k, perturb
     direction k+1" transition (chain walk ``…, +eps z_k + eps z_{k+1}, …``).
-    Halves the parameter traffic of the naive restore-then-perturb pair."""
+    Halves the parameter traffic of the naive restore-then-perturb pair.
+
+    ``mask_fn`` masks *both* directions with the same per-step mask (the
+    sparse walk shares one mask across the whole bank, so the chain's
+    arithmetic restore stays exact)."""
     ids = leaf_ids(params)
 
     def one(leaf, lid):
         za = leaf_z(seed_a, lid, leaf.shape, jnp.float32)
         zb = leaf_z(seed_b, lid, leaf.shape, jnp.float32)
+        if mask_fn is not None:
+            m = mask_fn(lid, leaf.shape)
+            za = za * m
+            zb = zb * m
         return (leaf.astype(jnp.float32)
                 + scale_a * za + scale_b * zb).astype(leaf.dtype)
 
@@ -274,3 +289,133 @@ def normalize_seeds(seeds: Any, n_dirs: int) -> list[jax.Array]:
                 f"seed {k} must be an int or integer scalar array, got "
                 f"{type(s).__name__}")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse-MeZO perturbation masks (arXiv 2402.15751; DESIGN.md §11)
+#
+# The sparse walk perturbs only a masked subset of the parameters:
+# ``z <- z * m`` everywhere z appears (both SPSA probes, the chain
+# restores, and the fused update).  Like z itself, the mask is never
+# stored — it is a pure function of ``(seed, leaf_id, row, col)`` drawn
+# from a *dedicated* threefry namespace (``fold_mask``), so mask bits
+# never collide with any direction's z bits and every consumer (jnp walk,
+# Pallas tile, oracle) regenerates identical masks.  One mask per step,
+# shared across all bank directions: that keeps the chain walk's
+# arithmetic restore exact and matches the Sparse-MeZO estimator (the
+# masked subspace is fixed while the bank averages over directions).
+
+#: Supported mask modes: "random" draws each element's keep bit from the
+#: counter stream (expected density ``1 - sparsity`` per leaf);
+#: "magnitude" keeps the top ``1 - sparsity`` fraction of each leaf by
+#: ``|param|`` (calibrated per leaf, computed once per step from the
+#: clean entry params).
+MASK_MODES = ("random", "magnitude")
+
+
+def fold_mask(seed: jax.Array) -> jax.Array:
+    """Per-step mask-stream seed: one threefry call in a namespace
+    disjoint from ``fold_seed`` (counters ``(step, 1)``) and ``fold_dir``
+    (counters ``(k, 2)``), so the mask stream never aliases a z stream."""
+    b0, _ = threefry2x32(jnp.asarray(seed, jnp.uint32), jnp.uint32(0x3A55),
+                         jnp.uint32(0), jnp.uint32(3))
+    return b0
+
+
+def mask_from_counters(mask_seed: jax.Array, leaf_id: jax.Array,
+                       rows: jax.Array, cols: jax.Array,
+                       sparsity) -> jax.Array:
+    """0/1 float32 keep-mask for a counter grid: keep iff ``u >= sparsity``
+    with ``u`` uniform in (0, 1) from the mask stream.  ``sparsity`` may be
+    a python float or a traced f32 scalar (the adaptive schedule) — the
+    comparison is the same either way, so scheduled and static masks agree
+    bit for bit at equal sparsity values."""
+    b0, _ = threefry2x32(
+        jnp.asarray(mask_seed, jnp.uint32), jnp.asarray(leaf_id, jnp.uint32),
+        jnp.asarray(rows, jnp.uint32), jnp.asarray(cols, jnp.uint32))
+    u = _bits_to_unit_open(b0)
+    return (u >= jnp.asarray(sparsity, jnp.float32)).astype(jnp.float32)
+
+
+def leaf_mask(mask_seed: jax.Array, leaf_id: int, shape: tuple[int, ...],
+              sparsity) -> jax.Array:
+    """Full-leaf random keep-mask of `shape` (pure-JAX path; the Pallas
+    tile twin is ``repro.kernels.zo_matmul.kernel.tile_mask``)."""
+    r, c = _leaf_counters(tuple(shape))
+    m = mask_from_counters(mask_seed, jnp.uint32(leaf_id), r, c, sparsity)
+    return m.reshape(shape)
+
+
+def magnitude_mask(leaf: jax.Array, sparsity: float) -> jax.Array:
+    """Per-leaf magnitude-calibrated keep-mask: keeps the largest
+    ``n - floor(sparsity * n)`` elements by ``|leaf|``.  Ties break by
+    flat index (stable argsort), so the mask is a deterministic function
+    of the leaf values alone.  ``sparsity`` must be static (python
+    float) — the keep count shapes the computation."""
+    s = float(sparsity)
+    if not (0.0 <= s < 1.0):
+        raise ValueError(f"sparsity must be in [0, 1), got {s}")
+    flat = jnp.abs(leaf.astype(jnp.float32).reshape(-1))
+    n = flat.shape[0]
+    n_keep = n - int(np.floor(s * n))
+    order = jnp.argsort(-flat)          # descending; stable => index ties
+    keep = order[:n_keep]
+    m = jnp.zeros((n,), jnp.float32).at[keep].set(1.0)
+    return m.reshape(leaf.shape)
+
+
+def tree_mask_fn(params: Any, seed: jax.Array, sparsity,
+                 mode: str = "random"):
+    """Build the sparse walk's ``mask_fn(leaf_id, shape) -> f32 0/1 mask``
+    closure, or ``None`` when ``sparsity`` is statically zero.
+
+    ``None`` is the contract that makes ``sparsity=0.0`` *bitwise* equal
+    to the dense path: consumers skip the mask multiply entirely instead
+    of multiplying by an all-ones tree.
+
+    * ``mode="random"``: the mask regenerates from counters inside every
+      consumer — zero resident bytes, works with every backend, and
+      ``sparsity`` may be traced (the adaptive schedule).
+    * ``mode="magnitude"``: per-leaf top-``(1 - sparsity)`` by ``|param|``,
+      materialized once per step from the clean entry params (the chain
+      walk perturbs in place — recomputing mid-walk would change the mask
+      and break the arithmetic restore).  Static ``sparsity`` only.
+
+    ``sparsity >= 1`` is rejected loudly: a mask that kills every element
+    makes the SPSA estimate identically zero and silently stalls training.
+    """
+    if mode not in MASK_MODES:
+        raise ValueError(
+            f"unknown mask mode {mode!r}; one of {MASK_MODES}")
+    try:                       # tracers raise ConcretizationTypeError here
+        s = float(sparsity)
+        traced = False
+    except TypeError:
+        traced = True
+    if not traced:
+        if not (0.0 <= s < 1.0):
+            raise ValueError(
+                f"sparsity must be in [0, 1), got {s} (sparsity=1 would "
+                "mask every element and zero the SPSA estimate)")
+        if s == 0.0:
+            return None
+        sparsity = s
+
+    if mode == "magnitude":
+        if traced:
+            raise ValueError(
+                "mask_mode='magnitude' needs a static sparsity (the keep "
+                "count shapes the top-k); the adaptive bank schedule can "
+                "only trade sparsity in mask_mode='random'")
+        ids = leaf_ids(params)
+        masks: dict = {}
+
+        def build(leaf, lid):
+            masks[lid] = magnitude_mask(leaf, sparsity)
+            return lid
+
+        jax.tree_util.tree_map(build, params, ids)
+        return lambda lid, shape: masks[lid]
+
+    mask_seed = fold_mask(seed)
+    return lambda lid, shape: leaf_mask(mask_seed, lid, shape, sparsity)

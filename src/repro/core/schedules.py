@@ -62,12 +62,27 @@ class BankSchedule:
     within ~1/(1-ema) steps of a restart, and keeping it out preserves
     the tiny-checkpoint story (restart state stays ``(params, step)``).
 
+    **Joint n_active × sparsity trading** (Sparse-MeZO, DESIGN.md §11):
+    with ``max_sparsity > 0`` the schedule also drives the sparse walk's
+    mask density from the same spread signal, preferring the cheap lever
+    first.  A noisy estimator densifies the walk (``sparsity`` steps
+    down by ``max_sparsity / 4``) before paying for more probes; a
+    converged one sparsifies (``sparsity`` steps up toward
+    ``max_sparsity``) before shedding probes — walk FLOPs scale with
+    ``n_active × (1 - sparsity)``, and density changes never touch the
+    probe count's compile-time shape.  ``max_sparsity = 0`` (default)
+    collapses to the pure bank-size schedule, state transitions
+    identical to the pre-sparse scheduler.
+
     Raises ``ValueError`` on construction (or from ``parse``) when
     ``1 <= min_dirs <= max_dirs`` is violated, ``low >= high`` (no
-    hysteresis band), or ``ema`` falls outside ``[0, 1)`` — and, where
+    hysteresis band), ``ema`` falls outside ``[0, 1)``, or
+    ``max_sparsity`` falls outside ``[0, 1)`` — and, where
     a schedule is attached to an optimizer,
     ``engine.bank_schedule_of`` rejects optimizers with no ZO bank and
-    banks with ``n_dirs < 2`` (the composition matrix and every
+    banks with ``n_dirs < 2``, and ``engine._check_sparse`` rejects
+    sparsity-trading schedules on non-sparse specs, pallas backends,
+    magnitude masks, and DP (the composition matrix and every
     raise-condition live in docs/engine.md).
     """
     max_dirs: int
@@ -75,6 +90,7 @@ class BankSchedule:
     low: float = 0.5
     high: float = 2.0
     ema: float = 0.8
+    max_sparsity: float = 0.0
 
     def __post_init__(self):
         if not 1 <= self.min_dirs <= self.max_dirs:
@@ -86,25 +102,31 @@ class BankSchedule:
                              f"{self.high}")
         if not 0.0 <= self.ema < 1.0:
             raise ValueError(f"ema must be in [0, 1), got {self.ema}")
+        if not 0.0 <= self.max_sparsity < 1.0:
+            raise ValueError(f"max_sparsity must be in [0, 1), got "
+                             f"{self.max_sparsity}")
 
     @classmethod
     def parse(cls, spec: str, max_dirs: int) -> "BankSchedule":
-        """``"min[:low[:high[:ema]]]"`` — e.g. ``"1"``, ``"2:0.25:1.5"``.
-        ``max_dirs`` comes from the config's ``n_dirs`` (the static bank
-        size)."""
+        """``"min[:low[:high[:ema[:smax]]]]"`` — e.g. ``"1"``,
+        ``"2:0.25:1.5"``, ``"1:0.5:2.0:0.8:0.9"``.  ``max_dirs`` comes
+        from the config's ``n_dirs`` (the static bank size); ``smax``
+        enables joint sparsity trading (sparse optimizers only)."""
         parts = spec.split(":")
-        if len(parts) > 4 or not parts[0]:
+        if len(parts) > 5 or not parts[0]:
             raise ValueError(f"bad bank-schedule spec {spec!r}; expected "
-                             "'min[:low[:high[:ema]]]'")
+                             "'min[:low[:high[:ema[:smax]]]]'")
         kw = {"max_dirs": max_dirs, "min_dirs": int(parts[0])}
-        for key, raw in zip(("low", "high", "ema"), parts[1:]):
+        for key, raw in zip(("low", "high", "ema", "max_sparsity"),
+                            parts[1:]):
             kw[key] = float(raw)
         return cls(**kw)
 
     def init(self) -> dict:
-        """Host-side scheduler state: start at the full bank (safe until
-        the spread has been measured)."""
-        return {"rel_ema": None, "n_active": self.max_dirs}
+        """Host-side scheduler state: start at the full bank and a dense
+        walk (safe until the spread has been measured)."""
+        return {"rel_ema": None, "n_active": self.max_dirs,
+                "sparsity": 0.0}
 
     def update(self, state: dict, g0_mean: float, g0_std: float) -> dict:
         """One host-side transition from this step's bank statistics.
@@ -116,11 +138,27 @@ class BankSchedule:
         rel_ema = rel if prev is None else \
             self.ema * prev + (1.0 - self.ema) * rel
         n = state["n_active"]
+        s = state.get("sparsity", 0.0)
+        s_step = self.max_sparsity / 4.0
         if rel_ema > self.high:
-            n = min(self.max_dirs, 2 * n)
+            # noisy estimator: densify the walk first (free — no shape
+            # change), only then pay for more probes
+            if s > 0.0:
+                # snap fp residue (max_sparsity - k*s_step) to exact 0 so
+                # the lever switch to probe-doubling is never off by one
+                s = max(0.0, s - s_step)
+                if s < s_step * 0.5:
+                    s = 0.0
+            else:
+                n = min(self.max_dirs, 2 * n)
         elif rel_ema < self.low:
-            n = max(self.min_dirs, n // 2)
-        return {"rel_ema": rel_ema, "n_active": n}
+            # converged: sparsify first (keeps the probe count's signal
+            # for the spread estimate), then shed probes
+            if s < self.max_sparsity:
+                s = min(self.max_sparsity, s + s_step)
+            else:
+                n = max(self.min_dirs, n // 2)
+        return {"rel_ema": rel_ema, "n_active": n, "sparsity": s}
 
     def shrink(self, state: dict) -> dict:
         """Robustness-loop transition (straggler feedback from
@@ -128,9 +166,11 @@ class BankSchedule:
         ``min_dirs`` when the watchdog reports a *sustained* slow shard —
         fewer probes per step is the one lever the loop can pull without
         recompiling.  Keeps ``rel_ema``: the variance feedback may grow
-        the bank back once step times recover."""
+        the bank back once step times recover.  Keeps ``sparsity``:
+        stragglers are a wall-clock signal, not a variance one."""
         return {"rel_ema": state["rel_ema"],
-                "n_active": max(self.min_dirs, state["n_active"] // 2)}
+                "n_active": max(self.min_dirs, state["n_active"] // 2),
+                "sparsity": state.get("sparsity", 0.0)}
 
 
 def by_name(name: str, lr: float, total_steps: int):

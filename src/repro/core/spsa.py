@@ -104,7 +104,8 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
                    seed: jax.Array, eps: float, n_dirs: int = 1,
                    mode: str = "chain", seeds: list | None = None,
                    vectorize: str = "unroll",
-                   microbatch: int | None = None):
+                   microbatch: int | None = None,
+                   mask_fn=None):
     """Multi-direction estimator bank: ``n_dirs`` independent SPSA probes
     per step (variance-reduced ZO a la Gautam et al.).  Returns
     ``(g0, loss_avg, params_restored)`` where ``g0`` has shape
@@ -150,6 +151,11 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
     Every vectorized executor falls back to the unrolled trace at
     ``n_dirs=1`` (nothing to amortize), so n_dirs=1 outputs stay
     bit-identical to the single-direction path under every setting.
+
+    ``mask_fn`` (from ``rng.tree_mask_fn``) restricts every perturbation
+    to the masked subset (the Sparse-MeZO walk) — one per-step mask shared
+    across all bank directions, applied identically by all four executors.
+    ``None`` is the dense walk, bit for bit.
     """
     if mode not in ("chain", "fresh"):
         raise ValueError(f"unknown spsa mode: {mode!r}")
@@ -157,30 +163,33 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
     vectorize = _resolve_vectorize(vectorize, mode, n_dirs)
 
     if vectorize == "scan":
-        return _bank_chain_scan(loss_fn, params, batch, seeds, eps, n_dirs)
+        return _bank_chain_scan(loss_fn, params, batch, seeds, eps, n_dirs,
+                                mask_fn)
     if vectorize in ("vmap", "map"):
         return _bank_fresh_batched(loss_fn, params, batch, seeds, eps,
-                                   n_dirs, vectorize, microbatch)
+                                   n_dirs, vectorize, microbatch, mask_fn)
 
     g0s, loss_avgs = [], []
     if mode == "chain":
-        p = rng.tree_perturb(params, seeds[0], eps)
+        p = rng.tree_perturb(params, seeds[0], eps, mask_fn)
         for k in range(n_dirs):
             l_plus = loss_fn(p, batch)
-            p = rng.tree_perturb(p, seeds[k], -2.0 * eps)
+            p = rng.tree_perturb(p, seeds[k], -2.0 * eps, mask_fn)
             l_minus = loss_fn(p, batch)
             if k + 1 < n_dirs:
-                p = rng.tree_perturb2(p, seeds[k], eps, seeds[k + 1], eps)
+                p = rng.tree_perturb2(p, seeds[k], eps, seeds[k + 1], eps,
+                                      mask_fn)
             else:
-                p = rng.tree_perturb(p, seeds[k], eps)
+                p = rng.tree_perturb(p, seeds[k], eps, mask_fn)
             g0s.append((l_plus - l_minus) / (2.0 * eps))
             loss_avgs.append(0.5 * (l_plus + l_minus))
         restored = p
     else:
         for k in range(n_dirs):
-            l_plus = loss_fn(rng.tree_perturb(params, seeds[k], eps), batch)
-            l_minus = loss_fn(rng.tree_perturb(params, seeds[k], -eps),
-                              batch)
+            l_plus = loss_fn(rng.tree_perturb(params, seeds[k], eps,
+                                              mask_fn), batch)
+            l_minus = loss_fn(rng.tree_perturb(params, seeds[k], -eps,
+                                               mask_fn), batch)
             g0s.append((l_plus - l_minus) / (2.0 * eps))
             loss_avgs.append(0.5 * (l_plus + l_minus))
         restored = params
@@ -191,7 +200,8 @@ def spsa_bank_grad(loss_fn: LossFn, params: Any, batch: Any,
 
 
 def _bank_chain_scan(loss_fn: LossFn, params: Any, batch: Any,
-                     seeds: list, eps: float, n_dirs: int):
+                     seeds: list, eps: float, n_dirs: int,
+                     mask_fn=None):
     """The chain walk as one ``lax.scan`` over direction-seed pairs.
 
     The body is the unrolled loop's iteration verbatim, made uniform: the
@@ -207,14 +217,14 @@ def _bank_chain_scan(loss_fn: LossFn, params: Any, batch: Any,
     def body(p, xs):
         s_k, s_next, is_last = xs
         l_plus = loss_fn(p, batch)
-        p = rng.tree_perturb(p, s_k, -2.0 * eps)
+        p = rng.tree_perturb(p, s_k, -2.0 * eps, mask_fn)
         l_minus = loss_fn(p, batch)
         w_next = jnp.where(is_last, 0.0, eps)
-        p = rng.tree_perturb2(p, s_k, eps, s_next, w_next)
+        p = rng.tree_perturb2(p, s_k, eps, s_next, w_next, mask_fn)
         return p, ((l_plus - l_minus) / (2.0 * eps),
                    0.5 * (l_plus + l_minus))
 
-    p0 = rng.tree_perturb(params, seeds_arr[0], eps)
+    p0 = rng.tree_perturb(params, seeds_arr[0], eps, mask_fn)
     restored, (g0s, loss_avgs) = jax.lax.scan(
         body, p0, (seeds_arr, next_seeds, last))
     g0 = g0s.astype(jnp.float32)
@@ -224,7 +234,8 @@ def _bank_chain_scan(loss_fn: LossFn, params: Any, batch: Any,
 
 def _bank_fresh_batched(loss_fn: LossFn, params: Any, batch: Any,
                         seeds: list, eps: float, n_dirs: int,
-                        vectorize: str, microbatch: int | None):
+                        vectorize: str, microbatch: int | None,
+                        mask_fn=None):
     """Fresh-mode probes, batched: the ``2 n_dirs`` (seed, ±eps) probes
     are independent given theta, so they evaluate as one ``vmap``'d
     forward (or a ``lax.map`` — sequential / microbatched — when the
@@ -237,7 +248,7 @@ def _bank_fresh_batched(loss_fn: LossFn, params: Any, batch: Any,
          jnp.full((n_dirs,), -eps, jnp.float32)])
 
     def probe(s, scale):
-        return loss_fn(rng.tree_perturb(params, s, scale), batch)
+        return loss_fn(rng.tree_perturb(params, s, scale, mask_fn), batch)
 
     if vectorize == "vmap":
         losses = jax.vmap(probe)(probe_seeds, probe_scales)
@@ -251,11 +262,13 @@ def _bank_fresh_batched(loss_fn: LossFn, params: Any, batch: Any,
     return g0, loss_avg, params
 
 
-def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any) -> Any:
+def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any,
+                       mask_fn=None) -> Any:
     """Materialize the ZO pseudo-gradient as a pytree (only used by
     baselines and tests; the fused update path regenerates z leaf-by-leaf
     instead).  Scalar ``g0``: ``g0 * z(seed)``.  Vector ``g0`` of shape
-    ``(n,)``: the bank mean ``mean_k(g0[k] * z(fold_dir(seed, k)))``."""
+    ``(n,)``: the bank mean ``mean_k(g0[k] * z(fold_dir(seed, k)))``.
+    ``mask_fn`` applies the sparse walk's per-step mask to every z."""
     ids = rng.leaf_ids(params)
     g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
     n = g0v.shape[0]
@@ -264,8 +277,10 @@ def zo_pseudo_gradient(g0: jax.Array, seed: jax.Array, params: Any) -> Any:
     def one(leaf, lid):
         acc = jnp.zeros(leaf.shape, jnp.float32)
         for k in range(n):
-            acc = acc + (g0v[k] / n) * rng.leaf_z(seeds[k], lid, leaf.shape,
-                                                  jnp.float32)
+            z = rng.leaf_z(seeds[k], lid, leaf.shape, jnp.float32)
+            if mask_fn is not None:
+                z = z * mask_fn(lid, leaf.shape)
+            acc = acc + (g0v[k] / n) * z
         return acc
 
     return jax.tree_util.tree_map(one, params, ids)

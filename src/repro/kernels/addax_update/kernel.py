@@ -38,25 +38,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.zo_matmul.kernel import tile_z
+from repro.kernels.zo_matmul.kernel import tile_mask, tile_z
 
 
 def _update_kernel(scalars_ref, theta_ref, g1_ref, o_ref, *,
                    leaf_id: int, alpha: float, n_dirs: int,
                    block_r: int, block_c: int,
-                   with_fo: bool, with_zo: bool):
+                   with_fo: bool, with_zo: bool,
+                   sparsity: float | None = None):
     i = pl.program_id(0)
     j = pl.program_id(1)
     theta = theta_ref[...].astype(jnp.float32)
     upd = jnp.zeros_like(theta)
     if with_zo:
+        # sparse layout inserts the per-step mask seed after lr:
+        # [lr, mask_seed, seed_0.., g0_0..]; one mask tile is shared by
+        # every direction (the Sparse-MeZO walk masks the whole bank)
+        base = 1 if sparsity is None else 2
+        m = None
+        if sparsity is not None:
+            m = tile_mask(scalars_ref[1], leaf_id,
+                          jnp.uint32(i * block_r), jnp.uint32(j * block_c),
+                          block_r, block_c, sparsity)
         w_zo = alpha / n_dirs        # python float: exact for n_dirs = 1
         for k in range(n_dirs):
-            seed_k = scalars_ref[1 + k]
+            seed_k = scalars_ref[base + k]
             g0_k = jax.lax.bitcast_convert_type(
-                scalars_ref[1 + n_dirs + k], jnp.float32)
+                scalars_ref[base + n_dirs + k], jnp.float32)
             z = tile_z(seed_k, leaf_id, jnp.uint32(i * block_r),
                        jnp.uint32(j * block_c), block_r, block_c)
+            if m is not None:
+                z = z * m
             upd = upd + (w_zo * g0_k) * z
     if with_fo:
         w = (1.0 - alpha) if with_zo else 1.0
@@ -65,24 +77,31 @@ def _update_kernel(scalars_ref, theta_ref, g1_ref, o_ref, *,
     o_ref[...] = (theta - lr * upd).astype(o_ref.dtype)
 
 
-def pack_scalars(seeds: jax.Array, g0: jax.Array, lr) -> jax.Array:
+def pack_scalars(seeds: jax.Array, g0: jax.Array, lr,
+                 mask_seed=None) -> jax.Array:
     """Build the kernel's uint32 scalar-prefetch vector
     ``[lr, seed_0.., g0_0..]``.  ``seeds``: (n,) uint32 (from
-    ``rng.dir_seeds``); ``g0``: (n,) fp32."""
+    ``rng.dir_seeds``); ``g0``: (n,) fp32.  A non-``None`` ``mask_seed``
+    (from ``rng.fold_mask``) selects the sparse layout
+    ``[lr, mask_seed, seed_0.., g0_0..]``."""
     lr_bits = jax.lax.bitcast_convert_type(
         jnp.asarray(lr, jnp.float32), jnp.uint32)
     g0_bits = jax.lax.bitcast_convert_type(
         jnp.asarray(g0, jnp.float32), jnp.uint32)
-    return jnp.concatenate([lr_bits.reshape(1),
-                            jnp.asarray(seeds, jnp.uint32).reshape(-1),
-                            g0_bits.reshape(-1)])
+    parts = [lr_bits.reshape(1)]
+    if mask_seed is not None:
+        parts.append(jnp.asarray(mask_seed, jnp.uint32).reshape(1))
+    parts += [jnp.asarray(seeds, jnp.uint32).reshape(-1),
+              g0_bits.reshape(-1)]
+    return jnp.concatenate(parts)
 
 
 def _adam_update_kernel(scalars_ref, theta_ref, m_ref, v_ref, g1_ref,
                         o_theta, o_m, o_v, *, leaf_id: int, alpha: float,
                         n_dirs: int, block_r: int, block_c: int,
                         with_fo: bool, with_zo: bool, b1: float,
-                        b2: float, adam_eps: float):
+                        b2: float, adam_eps: float,
+                        sparsity: float | None = None):
     """Moments-aware variant: the mixed gradient
     ``g = alpha/n Σ_k g0_k z_k + (1-alpha) g1`` is built per tile (z
     regenerated in VMEM exactly like ``_update_kernel``), folded into
@@ -91,19 +110,30 @@ def _adam_update_kernel(scalars_ref, theta_ref, m_ref, v_ref, g1_ref,
 
     Scalar layout: ``[lr, bc1, bc2, seed_0.., g0_0..]`` (fp32 bitcast;
     bias corrections are computed host-side from ``step_idx`` so the
-    kernel stays stateless)."""
+    kernel stays stateless).  Sparse variant (``sparsity`` set):
+    ``[lr, bc1, bc2, mask_seed, seed_0.., g0_0..]`` with one shared
+    ``tile_mask`` applied to every direction's z."""
     i = pl.program_id(0)
     j = pl.program_id(1)
     theta = theta_ref[...].astype(jnp.float32)
     g = jnp.zeros_like(theta)
     if with_zo:
+        base = 3 if sparsity is None else 4
+        m_keep = None
+        if sparsity is not None:
+            m_keep = tile_mask(scalars_ref[3], leaf_id,
+                               jnp.uint32(i * block_r),
+                               jnp.uint32(j * block_c),
+                               block_r, block_c, sparsity)
         w_zo = alpha / n_dirs
         for k in range(n_dirs):
-            seed_k = scalars_ref[3 + k]
+            seed_k = scalars_ref[base + k]
             g0_k = jax.lax.bitcast_convert_type(
-                scalars_ref[3 + n_dirs + k], jnp.float32)
+                scalars_ref[base + n_dirs + k], jnp.float32)
             z = tile_z(seed_k, leaf_id, jnp.uint32(i * block_r),
                        jnp.uint32(j * block_c), block_r, block_c)
+            if m_keep is not None:
+                z = z * m_keep
             g = g + (w_zo * g0_k) * z
     if with_fo:
         w = (1.0 - alpha) if with_zo else 1.0
@@ -120,21 +150,26 @@ def _adam_update_kernel(scalars_ref, theta_ref, m_ref, v_ref, g1_ref,
 
 
 def pack_adam_scalars(seeds: jax.Array, g0: jax.Array, lr, bc1,
-                      bc2) -> jax.Array:
+                      bc2, mask_seed=None) -> jax.Array:
     """uint32 scalar-prefetch vector ``[lr, bc1, bc2, seed_0.., g0_0..]``
-    for the moments kernel (length ``3 + 2 n_dirs``)."""
+    for the moments kernel (length ``3 + 2 n_dirs``); a non-``None``
+    ``mask_seed`` selects the sparse layout
+    ``[lr, bc1, bc2, mask_seed, seed_0.., g0_0..]`` (``4 + 2 n_dirs``)."""
     f32 = lambda x: jax.lax.bitcast_convert_type(
         jnp.asarray(x, jnp.float32), jnp.uint32).reshape(1)
     g0_bits = jax.lax.bitcast_convert_type(
         jnp.asarray(g0, jnp.float32), jnp.uint32)
-    return jnp.concatenate([f32(lr), f32(bc1), f32(bc2),
-                            jnp.asarray(seeds, jnp.uint32).reshape(-1),
-                            g0_bits.reshape(-1)])
+    parts = [f32(lr), f32(bc1), f32(bc2)]
+    if mask_seed is not None:
+        parts.append(jnp.asarray(mask_seed, jnp.uint32).reshape(1))
+    parts += [jnp.asarray(seeds, jnp.uint32).reshape(-1),
+              g0_bits.reshape(-1)]
+    return jnp.concatenate(parts)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "leaf_id", "alpha", "n_dirs", "block_r", "block_c", "with_fo",
-    "with_zo", "b1", "b2", "adam_eps", "interpret"))
+    "with_zo", "b1", "b2", "adam_eps", "sparsity", "interpret"))
 def addax_adam_update_pallas(theta2d: jax.Array, m2d: jax.Array,
                              v2d: jax.Array, g1_2d: jax.Array,
                              scalars: jax.Array, *, leaf_id: int,
@@ -143,17 +178,20 @@ def addax_adam_update_pallas(theta2d: jax.Array, m2d: jax.Array,
                              with_fo: bool = True, with_zo: bool = True,
                              b1: float = 0.9, b2: float = 0.999,
                              adam_eps: float = 1e-8,
+                             sparsity: float | None = None,
                              interpret: bool = False):
     """(theta, m, v) -> (theta', m', v'), all (R, C) tile-aligned; m/v
-    fp32.  ``scalars`` from ``pack_adam_scalars``."""
+    fp32.  ``scalars`` from ``pack_adam_scalars`` (sparse layout when
+    ``sparsity`` is set)."""
     r, c = theta2d.shape
     assert r % block_r == 0 and c % block_c == 0, ((r, c),
                                                    (block_r, block_c))
-    assert scalars.shape == (3 + 2 * n_dirs,), (scalars.shape, n_dirs)
+    n_sc = (3 if sparsity is None else 4) + 2 * n_dirs
+    assert scalars.shape == (n_sc,), (scalars.shape, n_dirs, sparsity)
     kernel = functools.partial(
         _adam_update_kernel, leaf_id=leaf_id, alpha=alpha, n_dirs=n_dirs,
         block_r=block_r, block_c=block_c, with_fo=with_fo, with_zo=with_zo,
-        b1=b1, b2=b2, adam_eps=adam_eps)
+        b1=b1, b2=b2, adam_eps=adam_eps, sparsity=sparsity)
     bspec = lambda: pl.BlockSpec((block_r, block_c), lambda i, j, s: (i, j))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -175,22 +213,26 @@ def addax_adam_update_pallas(theta2d: jax.Array, m2d: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "leaf_id", "alpha", "n_dirs", "block_r", "block_c", "with_fo",
-    "with_zo", "interpret"))
+    "with_zo", "sparsity", "interpret"))
 def addax_update_pallas(theta2d: jax.Array, g1_2d: jax.Array,
                         scalars: jax.Array, *, leaf_id: int, alpha: float,
                         n_dirs: int = 1, block_r: int = 256,
                         block_c: int = 256, with_fo: bool = True,
                         with_zo: bool = True,
+                        sparsity: float | None = None,
                         interpret: bool = False) -> jax.Array:
     """theta2d/g1_2d: (R, C) tile-aligned.  ``scalars``: the uint32
-    prefetch vector from ``pack_scalars`` (length ``1 + 2 n_dirs``)."""
+    prefetch vector from ``pack_scalars`` (length ``1 + 2 n_dirs`` dense,
+    ``2 + 2 n_dirs`` sparse)."""
     r, c = theta2d.shape
     assert r % block_r == 0 and c % block_c == 0, ((r, c),
                                                    (block_r, block_c))
-    assert scalars.shape == (1 + 2 * n_dirs,), (scalars.shape, n_dirs)
+    n_sc = (1 if sparsity is None else 2) + 2 * n_dirs
+    assert scalars.shape == (n_sc,), (scalars.shape, n_dirs, sparsity)
     kernel = functools.partial(
         _update_kernel, leaf_id=leaf_id, alpha=alpha, n_dirs=n_dirs,
-        block_r=block_r, block_c=block_c, with_fo=with_fo, with_zo=with_zo)
+        block_r=block_r, block_c=block_c, with_fo=with_fo, with_zo=with_zo,
+        sparsity=sparsity)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(r // block_r, c // block_c),

@@ -44,17 +44,32 @@ def _pad_tiles(x: jax.Array, br: int, bc: int):
     return x
 
 
+def _norm_sparsity(sparsity) -> float | None:
+    """Static sparsity -> kernel param: ``None`` (dense layout) at 0."""
+    s = float(sparsity or 0.0)
+    if not (0.0 <= s < 1.0):
+        raise ValueError(f"sparsity must be in [0, 1), got {s}")
+    return s if s > 0.0 else None
+
+
 @functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "block_r",
-                                             "block_c", "interpret"))
+                                             "block_c", "sparsity",
+                                             "interpret"))
 def addax_update(theta: jax.Array, g1: jax.Array | None, g0, seed, lr, *,
                  leaf_id: int, alpha: float, block_r: int = 256,
-                 block_c: int = 256, interpret: bool = False) -> jax.Array:
+                 block_c: int = 256, sparsity: float = 0.0,
+                 interpret: bool = False) -> jax.Array:
     """theta' = theta - lr*(alpha/n sum_k g0_k z_k + (1-alpha)*g1), any
-    leaf shape.  ``g0=None`` drops the ZO term, ``g1=None`` the FO term."""
+    leaf shape.  ``g0=None`` drops the ZO term, ``g1=None`` the FO term.
+    ``sparsity > 0`` applies the Sparse-MeZO keep-mask (one per-step mask
+    from ``rng.fold_mask(seed)`` shared by all directions) to every z;
+    ``sparsity=0`` is the dense kernel, bit for bit."""
     shape = theta.shape
     t2 = _as2d(theta)
     with_zo = g0 is not None
     with_fo = g1 is not None
+    sp = _norm_sparsity(sparsity) if with_zo else None
+    mask_seed = rng.fold_mask(seed) if sp is not None else None
     if with_zo:
         g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
         n_dirs = g0v.shape[0]
@@ -63,7 +78,7 @@ def addax_update(theta: jax.Array, g1: jax.Array | None, g0, seed, lr, *,
         g0v = jnp.zeros((1,), jnp.float32)
         n_dirs = 1
         seeds = jnp.zeros((1,), jnp.uint32)
-    scalars = pack_scalars(seeds, g0v, lr)
+    scalars = pack_scalars(seeds, g0v, lr, mask_seed)
     br = min(block_r, max(8, t2.shape[0]))
     bc = min(block_c, t2.shape[1])
     tp = _pad_tiles(t2, br, bc)
@@ -72,7 +87,7 @@ def addax_update(theta: jax.Array, g1: jax.Array | None, g0, seed, lr, *,
     out = addax_update_pallas(tp, gp, scalars, leaf_id=leaf_id,
                               alpha=alpha, n_dirs=n_dirs, block_r=br,
                               block_c=bc, with_fo=with_fo, with_zo=with_zo,
-                              interpret=interpret)
+                              sparsity=sp, interpret=interpret)
     return out[:t2.shape[0], :t2.shape[1]].reshape(shape)
 
 
@@ -87,24 +102,28 @@ def _bank_scalars(g0, seed):
 
 @functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "b1",
                                              "b2", "adam_eps", "block_r",
-                                             "block_c", "interpret"))
+                                             "block_c", "sparsity",
+                                             "interpret"))
 def addax_adam_update(theta: jax.Array, g1: jax.Array | None,
                       m: jax.Array, v: jax.Array, g0, seed, lr, bc1,
                       bc2, *, leaf_id: int, alpha: float, b1: float = 0.9,
                       b2: float = 0.999, adam_eps: float = 1e-8,
                       block_r: int = 256, block_c: int = 256,
-                      interpret: bool = False):
+                      sparsity: float = 0.0, interpret: bool = False):
     """Moments-aware leaf update: the mixed gradient
     ``alpha/n Σ_k g0_k z_k + (1-alpha) g1`` drives Adam's (m, v) and the
     bias-corrected step in one streaming pass.  Returns
     ``(theta', m', v')``; any leaf rank, m/v fp32.  ``bc1``/``bc2`` are
     the bias corrections ``1 - b^t`` (computed by the caller from
-    ``step_idx``)."""
+    ``step_idx``).  ``sparsity > 0`` masks every direction's z with the
+    per-step Sparse-MeZO keep-mask (``rng.fold_mask(seed)`` stream)."""
     shape = theta.shape
     t2 = _as2d(theta)
     with_fo = g1 is not None
     g0v, n_dirs, seeds, with_zo = _bank_scalars(g0, seed)
-    scalars = pack_adam_scalars(seeds, g0v, lr, bc1, bc2)
+    sp = _norm_sparsity(sparsity) if with_zo else None
+    mask_seed = rng.fold_mask(seed) if sp is not None else None
+    scalars = pack_adam_scalars(seeds, g0v, lr, bc1, bc2, mask_seed)
     br = min(block_r, max(8, t2.shape[0]))
     bc = min(block_c, t2.shape[1])
     tp = _pad_tiles(t2, br, bc)
@@ -115,7 +134,7 @@ def addax_adam_update(theta: jax.Array, g1: jax.Array | None,
     ot, om, ov = addax_adam_update_pallas(
         tp, mp, vp, gp, scalars, leaf_id=leaf_id, alpha=alpha,
         n_dirs=n_dirs, block_r=br, block_c=bc, with_fo=with_fo,
-        with_zo=with_zo, b1=b1, b2=b2, adam_eps=adam_eps,
+        with_zo=with_zo, b1=b1, b2=b2, adam_eps=adam_eps, sparsity=sp,
         interpret=interpret)
     r, c = t2.shape
     return (ot[:r, :c].reshape(shape), om[:r, :c].reshape(shape),

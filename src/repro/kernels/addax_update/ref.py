@@ -21,11 +21,16 @@ import jax.numpy as jnp
 from repro.core import rng
 
 
-@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha"))
+@functools.partial(jax.jit, static_argnames=("leaf_id", "alpha",
+                                             "sparsity"))
 def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
-                     leaf_id: int, lr, alpha: float) -> jax.Array:
+                     leaf_id: int, lr, alpha: float,
+                     sparsity: float = 0.0) -> jax.Array:
     """``g0`` may be ``None`` (IP-SGD), a scalar (single direction), or an
     ``(n_dirs,)`` vector (bank); ``g1`` may be ``None`` (MeZO).
+    ``sparsity > 0`` applies the shared per-step Sparse-MeZO keep-mask
+    (``rng.fold_mask(seed)`` stream) to every z, mirroring the kernel's
+    ``z * m`` placement.
 
     Jitted on purpose: the kernel's interpret-mode body and this oracle
     then see the same XLA simplifications (notably fma contraction), which
@@ -35,9 +40,15 @@ def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
         g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
         n_dirs = g0v.shape[0]
         seeds = rng.dir_seeds(seed, n_dirs)
+        m = None
+        if sparsity:
+            m = rng.leaf_mask(rng.fold_mask(seed), leaf_id, theta.shape,
+                              sparsity)
         w_zo = alpha / n_dirs
         for k in range(n_dirs):
             z = rng.leaf_z(seeds[k], leaf_id, theta.shape, jnp.float32)
+            if m is not None:
+                z = z * m
             upd = upd + (w_zo * g0v[k]) * z
     if g1 is not None:
         w = (1.0 - alpha) if g0 is not None else 1.0
@@ -46,24 +57,32 @@ def addax_update_ref(theta: jax.Array, g1: jax.Array | None, g0, seed,
 
 
 @functools.partial(jax.jit, static_argnames=("leaf_id", "alpha", "b1",
-                                             "b2", "adam_eps"))
+                                             "b2", "adam_eps",
+                                             "sparsity"))
 def addax_adam_update_ref(theta: jax.Array, g1: jax.Array | None,
                           m: jax.Array, v: jax.Array, g0, seed,
                           leaf_id: int, lr, bc1, bc2, alpha: float,
                           b1: float = 0.9, b2: float = 0.999,
-                          adam_eps: float = 1e-8):
+                          adam_eps: float = 1e-8, sparsity: float = 0.0):
     """Oracle for the moments kernel: mixed gradient (bank mean + FO),
     Adam (m, v) fold, bias-corrected step — op order mirrors
-    ``_adam_update_kernel`` exactly, so interpret-mode runs match bit for
-    bit.  Returns ``(theta', m', v')``."""
+    ``_adam_update_kernel`` exactly (including the sparse ``z * m``
+    placement), so interpret-mode runs match bit for bit.  Returns
+    ``(theta', m', v')``."""
     g = jnp.zeros(theta.shape, jnp.float32)
     if g0 is not None:
         g0v = jnp.atleast_1d(jnp.asarray(g0, jnp.float32))
         n_dirs = g0v.shape[0]
         seeds = rng.dir_seeds(seed, n_dirs)
+        mk = None
+        if sparsity:
+            mk = rng.leaf_mask(rng.fold_mask(seed), leaf_id, theta.shape,
+                               sparsity)
         w_zo = alpha / n_dirs
         for k in range(n_dirs):
             z = rng.leaf_z(seeds[k], leaf_id, theta.shape, jnp.float32)
+            if mk is not None:
+                z = z * mk
             g = g + (w_zo * g0v[k]) * z
     if g1 is not None:
         w = (1.0 - alpha) if g0 is not None else 1.0

@@ -68,6 +68,21 @@ def tile_z(seed, leaf_id, row0, col0, rows: int, cols: int):
         jnp.float32(2.0 * np.pi) * u2)
 
 
+def tile_mask(seed, leaf_id, row0, col0, rows: int, cols: int,
+              sparsity: float):
+    """Sparse-MeZO keep-mask tile of shape (rows, cols): 1.0 where the
+    element stays active (keep iff ``u >= sparsity``, ``u`` uniform in
+    (0, 1) from the dedicated mask stream of ``rng.fold_mask``), 0.0
+    where the perturbation is masked out.  Same global-counter discipline
+    as ``tile_z``, so kernel tiles agree bit-for-bit with
+    ``repro.core.rng.leaf_mask`` under any tiling."""
+    r = row0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    c = col0 + jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    b0, _ = _threefry2x32(jnp.uint32(seed), jnp.uint32(leaf_id), r, c)
+    u = _bits_to_unit_open(b0)
+    return (u >= jnp.float32(sparsity)).astype(jnp.float32)
+
+
 def _zo_matmul_kernel(seed_ref, x_ref, w_ref, o_ref, acc_ref, *,
                       leaf_id: int, eps: float, sign: float,
                       block_k: int, n_k: int):

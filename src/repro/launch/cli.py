@@ -45,7 +45,8 @@ def add_train_knob_args(p: argparse.ArgumentParser) -> None:
     from repro.core.spsa import VECTORIZE
     p.add_argument("--optimizer", default="addax",
                    choices=("addax", "addax-wa", "mezo", "ipsgd", "sgd",
-                            "adam", "addax-adam"))
+                            "adam", "addax-adam", "addax-sparse",
+                            "addax-sparse-adam"))
     p.add_argument("--k0", type=int, default=6)
     p.add_argument("--k1", type=int, default=4)
     p.add_argument("--l-t", type=int, default=None,
@@ -84,8 +85,14 @@ def add_train_knob_args(p: argparse.ArgumentParser) -> None:
                         "--bank-exec map (0 = fully sequential)")
     p.add_argument("--bank-schedule", default="",
                    help="variance-adaptive bank spec "
-                        "'min[:low[:high[:ema]]]' (e.g. '1:0.5:2.0'); "
-                        "max_dirs = --n-dirs; empty = fixed bank")
+                        "'min[:low[:high[:ema[:smax]]]]' (e.g. "
+                        "'1:0.5:2.0'); max_dirs = --n-dirs; empty = fixed "
+                        "bank; smax > 0 adds joint n_active x sparsity "
+                        "trading (sparse optimizers only)")
+    p.add_argument("--sparsity", type=float, default=0.0,
+                   help="Sparse-MeZO masked-walk sparsity in [0, 1) "
+                        "(addax-sparse / addax-sparse-adam only; 0 = "
+                        "dense, bit-for-bit the dense optimizer)")
     p.add_argument("--backend", default="jnp",
                    choices=("jnp", "pallas", "pallas_interpret"),
                    help="update-engine backend (pallas = fused in-place "
@@ -154,7 +161,7 @@ def results_dir() -> str | None:
 #: planner knob -> argv dest; (spsa_mode, bank_exec) are applied
 #: atomically (half a pair can be an invalid combination)
 _PLANNED_DESTS = ("k0", "k1", "l_t", "pack", "prefetch", "async_window",
-                  "backend")
+                  "backend", "sparsity")
 
 
 def apply_plan_auto(parser: argparse.ArgumentParser, args, arch,

@@ -59,7 +59,10 @@ class CellOptions:
     bank_microbatch: int = 0           # probes per lax.map microbatch
                                        # (bank_exec="map"; 0 = sequential)
     bank_schedule: str = ""            # variance-adaptive bank spec
-                                       # "min[:low[:high[:ema]]]"; "" = fixed
+                                       # "min[:low[:high[:ema[:smax]]]]";
+                                       # "" = fixed
+    sparsity: float = 0.0              # Sparse-MeZO walk sparsity in [0, 1);
+                                       # 0 = dense (sparse optimizers only)
     grad_clip: float | None = None     # global-norm clip on the FO gradient
     spsa_mode: str = "chain"           # chain (paper) | fresh (ablation;
                                        # required by DP-sharded banks)
@@ -122,6 +125,7 @@ class CellOptions:
             bank_exec=bank_exec,
             bank_microbatch=self.bank_microbatch,
             bank_schedule=self.bank_schedule,
+            sparsity=self.sparsity,
             grad_clip=self.grad_clip,
             spsa_mode=self.spsa_mode,
             compress_fo=self.compress_fo,
@@ -250,7 +254,8 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
                        n_dirs=plan.n_dirs, grad_clip=plan.grad_clip,
                        spsa_mode=plan.spsa_mode, bank_exec=plan.bank_exec,
                        bank_microbatch=plan.bank_microbatch,
-                       bank_schedule=plan.bank_schedule)
+                       bank_schedule=plan.bank_schedule,
+                       sparsity=plan.sparsity)
     lr_fn = schedules.constant(plan.lr)
 
     cell = plan_train_cell(bundle.arch, shape)
@@ -309,10 +314,15 @@ def _plan_train_cells(bundle: Bundle, shape: ShapeCfg, mesh,
         else:
             batch_args, batch_sh = (b1,), (b1_sh,)
         # a variance-adaptive bank adds the replicated traced n_active
-        # scalar right after step_idx (engine.make_step signature contract)
-        if engine.bank_schedule_of(acfg, spec):
-            batch_args = (jax.ShapeDtypeStruct((), jnp.int32),) + batch_args
-            batch_sh = (_repl(mesh),) + batch_sh
+        # scalar right after step_idx (engine.make_step signature contract);
+        # joint sparsity trading adds the traced f32 sparsity next
+        sched = engine.bank_schedule_of(acfg, spec)
+        if sched:
+            lead = (jax.ShapeDtypeStruct((), jnp.int32),)
+            if getattr(spec, "sparse", False) and sched.max_sparsity > 0.0:
+                lead = lead + (jax.ShapeDtypeStruct((), jnp.float32),)
+            batch_args = lead + batch_args
+            batch_sh = tuple(_repl(mesh) for _ in lead) + batch_sh
         return batch_args, batch_sh
 
     batch_sh = batch_plumbing(next(iter(b1_by_width.values())))[1]

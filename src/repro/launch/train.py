@@ -13,7 +13,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None):
@@ -95,7 +94,8 @@ def main(argv=None):
                        n_dirs=args.n_dirs, grad_clip=args.grad_clip,
                        spsa_mode=args.spsa_mode, bank_exec=args.bank_exec,
                        bank_microbatch=args.bank_microbatch,
-                       bank_schedule=args.bank_schedule)
+                       bank_schedule=args.bank_schedule,
+                       sparsity=args.sparsity)
     dtype = jnp.float32 if args.dtype == "f32" else jnp.bfloat16
     params = bundle.init_params(jax.random.key(args.seed), dtype)
 

@@ -273,7 +273,13 @@ def run_training(opt: OptimizerSetup, params: Any, pipeline: AddaxPipeline,
                     sched_state = sched.update(sched_state, g0_mean,
                                                g0_std)
                     sched_applied = s
-                args = (jnp.int32(sched_state["n_active"]),) + args
+                lead = (jnp.int32(sched_state["n_active"]),)
+                if sched.max_sparsity > 0.0:
+                    # joint n_active x sparsity trading: the traced
+                    # sparsity rides right after n_active (the engine's
+                    # _unpack order) so density changes never recompile
+                    lead = lead + (jnp.float32(sched_state["sparsity"]),)
+                args = lead + args
             if opt.has_state:
                 params, opt_state, metrics = step_fn(params, opt_state,
                                                      idx, *args)

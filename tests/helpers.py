@@ -1,0 +1,103 @@
+"""Shared pytree-comparison helpers for the test suite.
+
+This module is the suite's ONLY definition of the tree-compare helpers
+— the per-file ``_tree_bitwise`` / ``_tree_equal`` / ``_bitwise`` copies
+that used to live in test_bank_exec / test_dp_moments / test_engine /
+test_integration / test_elastic_resize all migrated here.  Two distinct
+equality notions are preserved on purpose (they are NOT interchangeable):
+
+* ``tree_equal`` — ``np.array_equal`` per leaf: numeric equality, so
+  ``+0.0 == -0.0`` and ``NaN != NaN``.  What most step-equivalence
+  tests mean by "the same trajectory".
+* ``tree_bitwise`` — shape + dtype + bit-pattern equality (the
+  semantics of ``benchmarks.common.tree_bitwise``, which stays separate
+  so the benchmark gates run without the test tree): ``+0.0 != -0.0``
+  (a real reordering divergence) and identical NaN payloads compare
+  equal.  What the DP replicated-(m, v) and elastic-resume contracts
+  mean by "bitwise".
+
+Both check the tree *structure* first, so comparing dicts with
+different key sets fails loudly instead of zipping mismatched leaves.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+
+def _leaves(a, b):
+    sa = jax.tree_util.tree_structure(a)
+    sb = jax.tree_util.tree_structure(b)
+    if sa != sb:
+        return None
+    return (jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+
+
+def tree_equal(a, b) -> bool:
+    """Leaf-for-leaf ``np.array_equal`` (numeric: +0 == -0, NaN != NaN)."""
+    pair = _leaves(a, b)
+    if pair is None:
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(*pair))
+
+
+def tree_bitwise(a, b) -> bool:
+    """Leaf-for-leaf bit-pattern equality (shape + dtype + bytes):
+    +0.0 vs -0.0 differ, identical NaN payloads compare equal."""
+    pair = _leaves(a, b)
+    if pair is None:
+        return False
+    for x, y in zip(*pair):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return False
+        if x.tobytes() != y.tobytes():
+            return False
+    return True
+
+
+def max_abs_diff(a, b) -> float:
+    """Max elementwise |a - b| over all leaves, in float64."""
+    pair = _leaves(a, b)
+    assert pair is not None, "tree structures differ"
+    worst = 0.0
+    for x, y in zip(*pair):
+        x = np.asarray(x).astype(np.float64)
+        y = np.asarray(y).astype(np.float64)
+        assert x.shape == y.shape, (x.shape, y.shape)
+        if x.size:
+            worst = max(worst, float(np.max(np.abs(x - y))))
+    return worst
+
+
+def tree_checksum(tree) -> str:
+    """Order-stable content digest of a pytree (leaf bytes + shapes +
+    dtypes + structure) — handy for asserting "unchanged across a
+    round-trip" without holding a deep copy."""
+    h = hashlib.sha256()
+    h.update(str(jax.tree_util.tree_structure(tree)).encode())
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str((arr.shape, str(arr.dtype))).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def assert_trees_equal(a, b, msg: str = ""):
+    assert tree_equal(a, b), msg or "trees differ (np.array_equal)"
+
+
+def assert_trees_bitwise(a, b, msg: str = ""):
+    assert tree_bitwise(a, b), msg or "trees differ (bit pattern)"
+
+
+def assert_trees_close(a, b, envelope: float, msg: str = ""):
+    """Every leaf within ``envelope`` (max-abs-diff) — the loose
+    comparison the elastic-resize fresh-vs-resumed checks use."""
+    diff = max_abs_diff(a, b)
+    assert diff <= envelope, \
+        (msg or "trees diverge") + f": max|diff|={diff:.3e} > {envelope:.3e}"

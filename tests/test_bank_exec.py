@@ -46,10 +46,7 @@ def _params(d=8):
             "w": jnp.linspace(-1, 1, d)}
 
 
-def _tree_bitwise(a, b):
-    return all(np.array_equal(np.asarray(x), np.asarray(y))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
+from helpers import tree_equal as _tree_bitwise  # noqa: E402
 
 
 # --------------------------------------------------------------------------
@@ -283,8 +280,13 @@ def test_bank_schedule_parse_and_validate():
         schedules.BankSchedule(max_dirs=4, low=2.0, high=1.0)
     with pytest.raises(ValueError, match="bad bank-schedule"):
         schedules.BankSchedule.parse("", max_dirs=4)
+    # 5 parts are legal since the sparsity-trading extension (smax)
+    bs5 = schedules.BankSchedule.parse("1:0.5:2.0:0.8:0.9", max_dirs=4)
+    assert bs5.max_sparsity == 0.9
+    with pytest.raises(ValueError, match="max_sparsity"):
+        schedules.BankSchedule.parse("1:0.5:2.0:0.8:1.5", max_dirs=4)
     with pytest.raises(ValueError, match="bad bank-schedule"):
-        schedules.BankSchedule.parse("1:2:3:4:5", max_dirs=4)
+        schedules.BankSchedule.parse("1:2:3:4:5:6", max_dirs=4)
 
 
 def test_bank_schedule_grow_shrink_clamp():

@@ -63,13 +63,7 @@ def _params(d=8):
             "w": jnp.linspace(-1, 1, d)}
 
 
-def _tree_bitwise(a, b):
-    """Bit-level equality (catches signed-zero differences too)."""
-    return all(
-        np.array_equal(np.asarray(x).view(np.uint32),
-                       np.asarray(y).view(np.uint32))
-        for x, y in zip(jax.tree_util.tree_leaves(a),
-                        jax.tree_util.tree_leaves(b)))
+from helpers import tree_bitwise as _tree_bitwise  # noqa: E402
 
 
 def _dp1_mesh():

@@ -23,7 +23,6 @@ Each phase is a ``python -m repro.launch.train`` subprocess with its own
 ``xla_force_host_platform_device_count``.
 """
 
-import json
 import os
 import shutil
 import subprocess
@@ -69,16 +68,8 @@ def _load_ckpt(ckpt_dir, step, sub=""):
         return {k: z[k] for k in z.files}
 
 
-def _bitwise(a, b):
-    assert a.keys() == b.keys()
-    return all(a[k].tobytes() == b[k].tobytes() for k in a)
-
-
-def _max_abs_diff(a, b):
-    assert a.keys() == b.keys()
-    return max(float(np.max(np.abs(a[k].astype(np.float64)
-                                   - b[k].astype(np.float64))))
-               for k in a)
+from helpers import max_abs_diff as _max_abs_diff  # noqa: E402
+from helpers import tree_bitwise as _bitwise  # noqa: E402
 
 
 def _preempt_then_resume(tmp_path, opt_args, tag):

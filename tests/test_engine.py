@@ -51,10 +51,7 @@ def _params(d=8):
             "w": jnp.linspace(-1, 1, d)}
 
 
-def _tree_bitwise(a, b):
-    return all(np.array_equal(np.asarray(x), np.asarray(y))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
+from helpers import tree_equal as _tree_bitwise  # noqa: E402
 
 
 # --------------------------------------------------------------------------

@@ -248,7 +248,7 @@ def test_bank_schedule_shrink_transition():
     from repro.core import schedules
     bs = schedules.BankSchedule(max_dirs=8, min_dirs=2)
     st = bs.shrink({"rel_ema": 0.7, "n_active": 8})
-    assert st == {"rel_ema": 0.7, "n_active": 4}
+    assert st == {"rel_ema": 0.7, "n_active": 4, "sparsity": 0.0}
     st = bs.shrink(bs.shrink(st))
     assert st["n_active"] == 2          # floors at min_dirs
 

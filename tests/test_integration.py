@@ -32,10 +32,7 @@ def _setup(arch="tiny-100m", n_examples=64, optimizer="addax",
     return bundle, corpus, pipe, opt, params
 
 
-def _tree_equal(a, b):
-    return all(np.array_equal(np.asarray(x), np.asarray(y))
-               for x, y in zip(jax.tree_util.tree_leaves(a),
-                               jax.tree_util.tree_leaves(b)))
+from helpers import tree_equal as _tree_equal  # noqa: E402
 
 
 def test_train_loop_runs_and_logs(tmp_path):

@@ -134,6 +134,7 @@ def test_plan_validation_raises_loudly():
         Plan(fo_buckets=(64, 32))
 
 
+@pytest.mark.slow
 def test_plan_path_bitwise_identical_10_steps():
     """The redesign's acceptance bar: a fully-specified CellOptions,
     resolved to a Plan, constructs the same step as the pre-refactor

@@ -1,0 +1,482 @@
+"""Sparse-MeZO masked-perturbation estimator (DESIGN.md §11):
+
+* **mask generator** — property tests (``_hypothesis_compat``):
+  deterministic in ``(seed, step)``, density tracks ``1 - sparsity``
+  (exact keep count in magnitude mode), ``sparsity=0`` collapses to
+  ``None`` (the consumers-skip-the-multiply contract), ``sparsity>=1``
+  and unknown modes rejected loudly;
+* **tile twin** — ``zo_matmul.kernel.tile_mask`` reproduces
+  ``rng.leaf_mask`` bit for bit at any tile offset (global counters =>
+  tiling invariance), and the sparse update kernels match their jitted
+  oracles bitwise;
+* **sparsity=0 contract** — ``addax-sparse`` / ``addax-sparse-adam``
+  at ``sparsity=0.0`` are bitwise-identical (params + opt_state, 10
+  steps) to the dense ``addax`` / ``addax-adam`` steps across all four
+  bank executors;
+* **backend parity** — full sparse steps (``sparsity>0``) reproduce
+  jnp <-> pallas_interpret bit for bit, like every other kernel;
+* **raise matrix** — the ``engine._check_sparse`` rejections
+  (docs/engine.md): sparsity on non-sparse specs, magnitude x pallas /
+  moments / trading, trading schedules on non-sparse specs or pallas;
+* **joint trading** — ``BankSchedule`` with ``max_sparsity > 0``
+  sparsifies before shedding probes and densifies before paying for
+  more, ``shrink`` preserves sparsity, ``max_sparsity=0`` keeps the
+  pre-sparse transitions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from helpers import tree_equal
+
+from repro.core import engine, rng, schedules
+from repro.core.addax import AddaxConfig
+from repro.core.adam import init_adam_state
+
+
+def quad_loss(params, batch):
+    p = params["w"]
+    return 0.5 * jnp.sum((batch["A"] @ p - batch["b"]) ** 2) + \
+        0.1 * jnp.sum(params["a"] ** 2)
+
+
+def _batch(n=12, d=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"A": jax.random.normal(k1, (n, d)),
+            "b": jax.random.normal(k2, (n,))}
+
+
+def _params(d=8):
+    return {"a": jnp.linspace(-0.5, 0.5, 96).reshape(8, 12),
+            "w": jnp.linspace(-1, 1, d)}
+
+
+def _run(name, cfg, backend="jnp", n_steps=3, d=8):
+    lr_fn = schedules.constant(cfg.lr)
+    step = jax.jit(engine.make_step(name, quad_loss, cfg, lr_fn,
+                                    backend=backend))
+    spec = engine.STEP_SPECS[name]
+    params, batch = _params(d), _batch(d=d)
+    state = init_adam_state(params) if spec.moments else None
+    metrics = None
+    for t in range(n_steps):
+        args = (batch, batch) if spec.two_stream else (batch,)
+        if spec.moments:
+            params, state, metrics = step(params, state, jnp.uint32(t),
+                                          *args)
+        else:
+            params, metrics = step(params, jnp.uint32(t), *args)
+    return params, state, metrics
+
+
+# --------------------------------------------------------------------------
+# mask generator properties
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(base=st.integers(min_value=0, max_value=2**31),
+       step=st.integers(min_value=0, max_value=500))
+def test_mask_deterministic_in_seed_and_step(base, step):
+    seed = rng.fold_seed(jnp.uint32(base), jnp.uint32(step))
+    m1 = rng.leaf_mask(rng.fold_mask(seed), 3, (17, 9), 0.5)
+    m2 = rng.leaf_mask(rng.fold_mask(seed), 3, (17, 9), 0.5)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    # a different step folds a different mask stream
+    other = rng.fold_seed(jnp.uint32(base), jnp.uint32(step + 1))
+    m3 = rng.leaf_mask(rng.fold_mask(other), 3, (17, 9), 0.5)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m3))
+
+
+@settings(max_examples=8, deadline=None)
+@given(sparsity=st.sampled_from([0.1, 0.25, 0.5, 0.75, 0.9]),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_random_mask_density_tracks_sparsity(sparsity, seed):
+    shape = (64, 64)
+    m = np.asarray(rng.leaf_mask(rng.fold_mask(jnp.uint32(seed)), 1,
+                                 shape, sparsity))
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    n = m.size
+    density = m.sum() / n
+    # binomial(n, 1-s): 6 sigma band around the expectation
+    tol = 6.0 * np.sqrt(sparsity * (1 - sparsity) / n)
+    assert abs(density - (1.0 - sparsity)) < tol, (density, sparsity)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sparsity=st.sampled_from([0.1, 0.3, 0.5, 0.9]),
+       shape=st.sampled_from([(7,), (5, 8), (3, 4, 6)]))
+def test_magnitude_mask_exact_keep_count(sparsity, shape):
+    leaf = jnp.asarray(np.random.RandomState(0).randn(*shape), jnp.float32)
+    m = np.asarray(rng.magnitude_mask(leaf, sparsity))
+    n = leaf.size
+    assert m.sum() == n - int(np.floor(sparsity * n))
+    # kept entries dominate dropped entries by |value|
+    kept = np.abs(np.asarray(leaf))[m.astype(bool)]
+    dropped = np.abs(np.asarray(leaf))[~m.astype(bool)]
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max()
+
+
+def test_sparsity_zero_returns_none_mask_fn():
+    params = _params()
+    assert rng.tree_mask_fn(params, jnp.uint32(3), 0.0) is None
+    assert rng.tree_mask_fn(params, jnp.uint32(3), 0.0,
+                            mode="magnitude") is None
+
+
+@pytest.mark.parametrize("bad", [1.0, 1.5, -0.1])
+def test_sparsity_out_of_range_rejected(bad):
+    with pytest.raises(ValueError, match="sparsity"):
+        rng.tree_mask_fn(_params(), jnp.uint32(0), bad)
+
+
+def test_unknown_mask_mode_rejected():
+    with pytest.raises(ValueError, match="mask mode"):
+        rng.tree_mask_fn(_params(), jnp.uint32(0), 0.5, mode="topk")
+
+
+def test_magnitude_needs_static_sparsity():
+    def traced(s):
+        return rng.tree_mask_fn(_params(), jnp.uint32(0), s,
+                                mode="magnitude")
+    with pytest.raises(ValueError, match="static"):
+        jax.jit(traced)(jnp.float32(0.5))
+
+
+def test_traced_sparsity_matches_static_random_mask():
+    params = _params()
+    seed = jnp.uint32(11)
+
+    @jax.jit
+    def build(s):
+        fn = rng.tree_mask_fn(params, seed, s)
+        return fn(0, (8, 12))
+
+    static_fn = rng.tree_mask_fn(params, seed, 0.4)
+    np.testing.assert_array_equal(np.asarray(build(jnp.float32(0.4))),
+                                  np.asarray(static_fn(0, (8, 12))))
+
+
+def test_mask_stream_disjoint_from_z_stream():
+    """fold_mask lives in its own counter namespace: the mask bits never
+    reproduce the z bits of any direction at the same (leaf, element)."""
+    seed = rng.fold_seed(0xADDA, jnp.uint32(7))
+    mask_seed = rng.fold_mask(seed)
+    assert int(mask_seed) != int(seed)
+    dir_seeds = rng.dir_seeds(seed, 4)
+    assert int(mask_seed) not in {int(s) for s in dir_seeds}
+
+
+# --------------------------------------------------------------------------
+# kernel twins
+# --------------------------------------------------------------------------
+
+def test_tile_mask_matches_leaf_mask_any_tiling():
+    from repro.kernels.zo_matmul.kernel import tile_mask
+    ms = rng.fold_mask(jnp.uint32(77))
+    full = np.asarray(rng.leaf_mask(ms, 5, (40, 48), 0.35))
+    for r0, c0, br, bc in [(0, 0, 40, 48), (16, 32, 8, 16), (24, 0, 16, 48)]:
+        tile = np.asarray(tile_mask(ms, 5, jnp.uint32(r0), jnp.uint32(c0),
+                                    br, bc, 0.35))
+        np.testing.assert_array_equal(tile, full[r0:r0 + br, c0:c0 + bc])
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+@pytest.mark.parametrize("n_dirs", [1, 3])
+def test_sparse_update_kernel_matches_oracle_bitwise(sparsity, n_dirs):
+    from repro.kernels.addax_update import (addax_update, addax_update_ref)
+    kt, kg = jax.random.split(jax.random.key(2))
+    th = jax.random.normal(kt, (64, 48))
+    g1 = jax.random.normal(kg, (64, 48))
+    g0 = jnp.linspace(-1.0, 1.0, n_dirs).astype(jnp.float32)
+    seed, lr = jnp.uint32(9), jnp.float32(1e-3)
+    out = addax_update(th, g1, g0, seed, lr, leaf_id=2, alpha=0.3,
+                       sparsity=sparsity, interpret=True)
+    ref = addax_update_ref(th, g1, g0, seed, 2, lr, 0.3, sparsity=sparsity)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+def test_sparse_adam_kernel_matches_oracle_bitwise(sparsity):
+    from repro.kernels.addax_update import (addax_adam_update,
+                                            addax_adam_update_ref)
+    kt, kg, km, kv = jax.random.split(jax.random.key(1), 4)
+    th = jax.random.normal(kt, (64, 48))
+    g1 = jax.random.normal(kg, (64, 48))
+    m = 0.1 * jax.random.normal(km, (64, 48))
+    v = jnp.abs(0.01 * jax.random.normal(kv, (64, 48)))
+    g0 = jnp.linspace(-1.0, 1.0, 3).astype(jnp.float32)
+    seed, lr = jnp.uint32(7), jnp.float32(1e-3)
+    bc1, bc2 = jnp.float32(0.1), jnp.float32(0.001)
+    out = addax_adam_update(th, g1, m, v, g0, seed, lr, bc1, bc2,
+                            leaf_id=4, alpha=0.2, sparsity=sparsity,
+                            interpret=True)
+    ref = addax_adam_update_ref(th, g1, m, v, g0, seed, 4, lr, bc1, bc2,
+                                alpha=0.2, sparsity=sparsity)
+    for o, r in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+
+
+def test_sparse_kernel_scalar_layout_rejects_dense_vector():
+    """The sparse scalar layout inserts the mask seed: handing a dense
+    vector to a sparse-configured kernel fails the length assert instead
+    of silently misreading seeds."""
+    from repro.kernels.addax_update.kernel import (addax_update_pallas,
+                                                  pack_scalars)
+    th = jnp.zeros((8, 128), jnp.float32)
+    seeds = jnp.arange(2, dtype=jnp.uint32)
+    scalars = pack_scalars(seeds, jnp.ones((2,), jnp.float32), 1e-3)
+    with pytest.raises(AssertionError):
+        addax_update_pallas(th, th, scalars, leaf_id=0, alpha=0.5,
+                            n_dirs=2, block_r=8, block_c=128,
+                            sparsity=0.5, interpret=True)
+
+
+# --------------------------------------------------------------------------
+# sparsity=0 contract: sparse specs == dense specs, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("exec_,mode", [("unroll", "chain"),
+                                        ("scan", "chain"),
+                                        ("vmap", "fresh"),
+                                        ("map", "fresh")])
+def test_sparse0_bitwise_dense_all_executors(exec_, mode):
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=3,
+                      bank_exec=exec_, spsa_mode=mode)
+    scfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=3,
+                       bank_exec=exec_, spsa_mode=mode, sparsity=0.0)
+    pd, _, _ = _run("addax", cfg, n_steps=10)
+    ps, _, _ = _run("addax-sparse", scfg, n_steps=10)
+    assert tree_equal(pd, ps)
+    pd, std, _ = _run("addax-adam", cfg, n_steps=10)
+    ps, sts, _ = _run("addax-sparse-adam", scfg, n_steps=10)
+    assert tree_equal(pd, ps)
+    assert tree_equal(std, sts)
+
+
+@pytest.mark.parametrize("name", ["addax-sparse", "addax-sparse-adam"])
+@pytest.mark.parametrize("sparsity", [0.3, 0.7])
+def test_sparse_step_backend_parity_bitwise(name, sparsity):
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2,
+                      sparsity=sparsity)
+    outs = {b: _run(name, cfg, backend=b, n_steps=3)
+            for b in ("jnp", "pallas_interpret")}
+    pj, stj, mj = outs["jnp"]
+    pp, stp, mp = outs["pallas_interpret"]
+    assert tree_equal(pj, pp)
+    if stj is not None:
+        assert tree_equal(stj, stp)
+    for k in mj:
+        np.testing.assert_array_equal(np.asarray(mj[k]), np.asarray(mp[k]))
+
+
+def test_sparse_step_differs_from_dense_at_nonzero_sparsity():
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2)
+    scfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2,
+                       sparsity=0.6)
+    pd, _, _ = _run("addax", cfg)
+    ps, _, _ = _run("addax-sparse", scfg)
+    assert not tree_equal(pd, ps)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(ps))
+
+
+def test_magnitude_mode_runs_and_differs_from_random():
+    base = dict(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2, sparsity=0.5)
+    pr, _, _ = _run("addax-sparse", AddaxConfig(**base))
+    pm, _, _ = _run("addax-sparse",
+                    AddaxConfig(**base, mask_mode="magnitude"))
+    assert not tree_equal(pr, pm)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(pm))
+
+
+# --------------------------------------------------------------------------
+# raise matrix (docs/engine.md)
+# --------------------------------------------------------------------------
+
+def _make(name, cfg, backend="jnp"):
+    return engine.make_step(name, quad_loss, cfg,
+                            schedules.constant(cfg.lr), backend=backend)
+
+
+def test_sparsity_on_non_sparse_spec_rejected():
+    for name in ("addax", "mezo", "addax-adam"):
+        with pytest.raises(ValueError, match="sparse"):
+            _make(name, AddaxConfig(sparsity=0.5))
+
+
+def test_sparse_cfg_sparsity_out_of_range_rejected():
+    with pytest.raises(ValueError, match="sparsity"):
+        _make("addax-sparse", AddaxConfig(sparsity=1.0))
+
+
+def test_magnitude_rejections():
+    cfg = AddaxConfig(n_dirs=2, sparsity=0.5, mask_mode="magnitude")
+    with pytest.raises(ValueError, match="magnitude"):
+        _make("addax-sparse", cfg, backend="pallas_interpret")
+    with pytest.raises(ValueError, match="magnitude"):
+        _make("addax-sparse-adam", cfg)
+
+
+def test_trading_schedule_rejections():
+    trade = AddaxConfig(n_dirs=4, bank_schedule="1:0.5:2.0:0.8:0.9")
+    with pytest.raises(ValueError, match="sparse"):
+        _make("addax", trade)
+    with pytest.raises(ValueError, match="jnp"):
+        _make("addax-sparse", trade, backend="pallas_interpret")
+    with pytest.raises(ValueError, match="magnitude"):
+        _make("addax-sparse",
+              AddaxConfig(n_dirs=4, bank_schedule="1:0.5:2.0:0.8:0.9",
+                          mask_mode="magnitude"))
+
+
+def test_dp_sparse_rules():
+    from repro.core.engine import make_dp_local_step
+    with pytest.raises(ValueError, match="magnitude"):
+        make_dp_local_step(
+            "addax-sparse", quad_loss,
+            AddaxConfig(n_dirs=2, sparsity=0.5, mask_mode="magnitude"),
+            schedules.constant(1e-2), "data")
+    with pytest.raises(ValueError, match="DP"):
+        make_dp_local_step(
+            "addax-sparse", quad_loss,
+            AddaxConfig(n_dirs=4, bank_schedule="1:0.5:2.0:0.8:0.9"),
+            schedules.constant(1e-2), "data")
+    # random + static sparsity IS supported under DP
+    make_dp_local_step("addax-sparse", quad_loss,
+                       AddaxConfig(n_dirs=2, sparsity=0.5),
+                       schedules.constant(1e-2), "data")
+
+
+@pytest.mark.parametrize("name", ["addax-sparse", "addax-sparse-adam"])
+def test_dp1_sparse_matches_single_host(name):
+    """DP + random static sparsity (the supported composition,
+    docs/engine.md): the dp=1 shard_map step reproduces the single-host
+    sparse step bitwise — the counter-regenerated mask is identical on
+    every shard."""
+    from repro.distributed.collectives import (batch_sharding,
+                                               make_dp_step, replicated)
+    from repro.launch.mesh import _mk
+
+    mesh = _mk((1,), ("data",))
+    cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=2,
+                      sparsity=0.5)
+    lr_fn = schedules.constant(cfg.lr)
+    spec = engine.STEP_SPECS[name]
+    params, batch = _params(), _batch()
+    host = jax.jit(engine.make_step(name, quad_loss, cfg, lr_fn))
+    dp = jax.jit(make_dp_step(quad_loss, cfg, lr_fn, mesh, name=name))
+    pd = jax.device_put(params, replicated(mesh))
+    bd = jax.device_put(batch, batch_sharding(mesh))
+    if spec.moments:
+        state = init_adam_state(params)
+        std = jax.device_put(state, replicated(mesh))
+        ph, sth, _ = host(params, state, jnp.uint32(3), batch, batch)
+        pdp, stdp, _ = dp(pd, std, jnp.uint32(3), bd, bd)
+        assert tree_equal(sth, stdp)
+    else:
+        ph, _ = host(params, jnp.uint32(3), batch, batch)
+        pdp, _ = dp(pd, jnp.uint32(3), bd, bd)
+    assert tree_equal(ph, pdp)
+
+
+# --------------------------------------------------------------------------
+# joint n_active x sparsity trading
+# --------------------------------------------------------------------------
+
+def test_schedule_sparsify_before_shedding_probes():
+    bs = schedules.BankSchedule(max_dirs=8, min_dirs=2, low=0.5, high=2.0,
+                                ema=0.0, max_sparsity=0.8)
+    st_ = bs.init()
+    assert st_ == {"rel_ema": None, "n_active": 8, "sparsity": 0.0}
+    # converged signal: sparsity climbs in smax/4 steps, n_active holds
+    for expect_s in (0.2, 0.4, 0.6, 0.8):
+        st_ = bs.update(st_, g0_mean=1.0, g0_std=0.01)
+        assert st_["n_active"] == 8
+        assert abs(st_["sparsity"] - expect_s) < 1e-12
+    # only at max sparsity do probes shed
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=0.01)
+    assert st_["n_active"] == 4 and abs(st_["sparsity"] - 0.8) < 1e-12
+
+
+def test_schedule_densify_before_paying_probes():
+    bs = schedules.BankSchedule(max_dirs=8, min_dirs=2, low=0.5, high=2.0,
+                                ema=0.0, max_sparsity=0.8)
+    st_ = {"rel_ema": None, "n_active": 4, "sparsity": 0.8}
+    # noisy signal: densify first
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["n_active"] == 4 and abs(st_["sparsity"] - 0.6) < 1e-12
+    for _ in range(3):
+        st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["sparsity"] == 0.0 and st_["n_active"] == 4
+    # walk fully dense: now pay for probes
+    st_ = bs.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["n_active"] == 8
+
+
+def test_schedule_shrink_preserves_sparsity():
+    bs = schedules.BankSchedule(max_dirs=8, min_dirs=2, max_sparsity=0.8)
+    st_ = {"rel_ema": 1.0, "n_active": 8, "sparsity": 0.4}
+    out = bs.shrink(st_)
+    assert out == {"rel_ema": 1.0, "n_active": 4, "sparsity": 0.4}
+
+
+def test_schedule_max_sparsity_zero_is_pre_sparse_behavior():
+    dense = schedules.BankSchedule(max_dirs=8, min_dirs=2, low=0.5,
+                                   high=2.0, ema=0.0)
+    st_ = dense.init()
+    st_ = dense.update(st_, g0_mean=1.0, g0_std=0.01)
+    assert st_["n_active"] == 4 and st_["sparsity"] == 0.0
+    st_ = dense.update(st_, g0_mean=1.0, g0_std=100.0)
+    assert st_["n_active"] == 8 and st_["sparsity"] == 0.0
+
+
+def test_traded_sparsity_step_matches_static_at_equal_value():
+    """The traced-sparsity step (trading schedule signature) at s is
+    bitwise the static cfg.sparsity=s step: the scheduled walk never
+    pays a retrace or drifts from the static path."""
+    sched_cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                            bank_schedule="1:0.5:2.0:0.8:0.8")
+    lr_fn = schedules.constant(sched_cfg.lr)
+    step = jax.jit(engine.make_step("addax-sparse", quad_loss, sched_cfg,
+                                    lr_fn))
+    params, batch = _params(), _batch()
+    for s in (0.0, 0.4):
+        static_cfg = AddaxConfig(lr=1e-2, alpha=5e-3, eps=1e-3, n_dirs=4,
+                                 sparsity=s)
+        sstep = jax.jit(engine.make_step("addax-sparse", quad_loss,
+                                         static_cfg, lr_fn))
+        pt, _ = step(params, jnp.uint32(2), jnp.int32(4), jnp.float32(s),
+                     batch, batch)
+        ps, _ = sstep(params, jnp.uint32(2), batch, batch)
+        assert tree_equal(pt, ps), f"traced sparsity {s} drifted"
+
+
+@pytest.mark.slow
+def test_train_loop_trades_sparsity(tmp_path):
+    """End-to-end: a sparsity-trading schedule drives the loop's traced
+    (n_active, sparsity) dispatch args without recompiling per change."""
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+    from repro.models.registry import get_bundle
+    from repro.data.pipeline import AddaxPipeline, PipelineConfig
+    from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+
+    bundle = get_bundle("tiny-100m", smoke=True)
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=32, min_len=12, max_len=48))
+    pipe = AddaxPipeline(corpus, PipelineConfig(k0=2, k1=2, l_t=24))
+    cfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, k0=2, k1=2,
+                      n_dirs=4, bank_schedule="1:0.5:2.0:0.0:0.8")
+    opt = build_optimizer("addax-sparse", bundle.loss_fn(), cfg)
+    params = bundle.init_params(jax.random.key(0))
+    out = run_training(opt, params, pipe,
+                       TrainLoopConfig(total_steps=6, log_every=1))
+    assert out["step"] == 5
+    assert out["n_compiles"] == 1      # density changes never recompile
+    losses = [h["loss_fo"] for h in out["history"] if "loss_fo" in h]
+    assert losses and all(np.isfinite(losses))

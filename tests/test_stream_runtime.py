@@ -62,7 +62,7 @@ def _pipe(corpus, l_t=32, n_buckets=1, pack=False, seed=0, k0=2, k1=2):
 
 # the bit-pattern comparator shared with the fig_host_overlap live gate
 # (pytest runs from the repo root, so the benchmarks package is on path)
-from benchmarks.common import tree_bitwise as _tree_bitwise  # noqa: E402
+from helpers import tree_bitwise as _tree_bitwise  # noqa: E402
 
 
 def _run(optimizer, corpus, *, prefetch=0, window=1, sched="", lag=1,
