@@ -19,17 +19,21 @@
        band absorbs runner variance while catching order-of-magnitude
        regressions;
      * **directional gates** (``fig_bank_exec``, ``fig_host_overlap``,
-       ``fig_serving``) — vmap fresh-mode step time and scan chain-mode
-       compile time must stay below the unrolled path at
-       ``n_dirs >= 4``, the streamed (prefetch+async) loop must stay
-       below the synchronous loop, and slot-level refill must keep
-       beating whole-batch refill on tokens/sec (with a small noise
-       slack): the PR-committed speedup claims, re-proven on every run;
+       ``fig_serving``, ``fig_packed_attn``) — vmap fresh-mode step time
+       and scan chain-mode compile time must stay below the unrolled
+       path at ``n_dirs >= 4``, the streamed (prefetch+async) loop must
+       stay below the synchronous loop, slot-level refill must keep
+       beating whole-batch refill on tokens/sec, block-skip must keep
+       beating the dense-masked ablation, and the packed ZO stream must
+       keep at least the unpacked tokens/sec (with a small noise slack):
+       the PR-committed speedup claims, re-proven on every run;
      * **live correctness gates** (``fig_dp_moments`` checksum
        uniformity, ``fig_host_overlap`` bitwise-trajectory and
        compile-count checks, ``fig_serving`` dense-vs-paged bitwise
-       greedy streams and the decode no-retrace count) — asserted on
-       the FRESH run, hard-fail.
+       greedy streams and the decode no-retrace count,
+       ``fig_packed_attn`` kernel-vs-mirror / skip-vs-masked /
+       stream-purity bitwise parity) — asserted on the FRESH run,
+       hard-fail.
 
 The fresh JSONs overwrite ``benchmarks/results/`` in place — CI uploads
 them as workflow artifacts so a failed gate ships its evidence.
@@ -56,6 +60,7 @@ FIGURES = {
     "fig_compressed_dp": ["--quick", "--steps", "6"],
     "fig_serving": ["--quick"],
     "fig_sparse_mezo": ["--quick"],
+    "fig_packed_attn": ["--quick"],
     # must stay LAST: it calibrates core.perf_model from the results/
     # JSONs on disk, so a full gate validates against the fresh corpus
     # the figures above just wrote (--only fig_plan_auto validates
@@ -438,6 +443,78 @@ def check_sparse_mezo(fresh: dict, committed: dict, tol: float,
               _need(crow, "std_ratio_vs_dense", skey), tol, failures)
 
 
+def check_packed_attn(fresh: dict, committed: dict, tol: float,
+                      slack: float, failures: list):
+    """Packed-attention gate (DESIGN.md §12): the bitwise parity bools
+    (kernel vs mirror, skip vs dense-masked, pack_zo-off stream purity,
+    packed replay) are *live* hard-fails on the fresh run; the block-pair
+    counts and the ZO token counts are deterministic integers — exact vs
+    committed AND the table must match the analytic brute force; the
+    skip/masked step-time ratios and the unpacked/packed tokens-per-sec
+    ratio are banded against the committed run and directionally gated
+    (block skip must keep beating the dense-masked ablation, the packed
+    stream must keep delivering at least the unpacked tokens/sec)."""
+    fp = _need(fresh, "parity", "fig_packed_attn")
+    for key in ("kernel_vs_mirror_bitwise", "skip_vs_masked_bitwise",
+                "pack_zo_off_stream_bitwise", "pack_zo_replay_bitwise"):
+        if not _need(fp, key, "parity"):
+            raise GateFailure(
+                f"fig_packed_attn: live parity gate {key} failed — the "
+                "packed attention paths or the ZO stream no longer "
+                "reproduce the pinned bits (docs/engine.md)")
+        print(f"  [ok] packed_attn live parity {key}")
+    _need(fp, "mirror_vs_dense_max_abs", "parity")
+    fs, cs = _need(fresh, "skip", "fig_packed_attn"), \
+        _need(committed, "skip", "fig_packed_attn")
+    fl = _need(fs, "flash", "skip")
+    if _need(fl, "n_live", "skip.flash") != \
+            _need(fl, "analytic_n_live", "skip.flash"):
+        raise GateFailure(
+            f"fig_packed_attn: block_live_table count {fl['n_live']} != "
+            f"analytic brute-force count {fl['analytic_n_live']} — the "
+            "skip table is no longer exact")
+    for impl, keys in (("flash", ("n_pairs", "n_live", "analytic_n_live")),
+                       ("chunked", ("n_causal_pairs", "n_live_scanned"))):
+        fi, ci = _need(fs, impl, "skip"), _need(cs, impl, "skip")
+        for key in keys:
+            _exact(f"packed_attn skip.{impl}.{key}",
+                   _need(fi, key, impl), _need(ci, key, impl), failures)
+        _band(f"packed_attn {impl} skip/masked step ratio",
+              _need(fi, "ratio", impl), _need(ci, "ratio", impl), tol,
+              failures)
+        # directional: the skip table must keep beating the dense-masked
+        # ablation at the same packed batch
+        val = _need(fi, "ratio", impl)
+        ok = val <= slack
+        print(f"  [{'ok' if ok else 'FAIL'}] packed_attn {impl} "
+              f"skip vs masked: x{val:.3f} (must be <= {slack})")
+        if not ok:
+            failures.append(
+                f"packed_attn {impl} skip/masked: x{val:.3f} > {slack} — "
+                "the block-skip path no longer beats the dense-masked "
+                "ablation")
+    fz = _need(fresh, "pack_zo", "fig_packed_attn")
+    cz = _need(committed, "pack_zo", "fig_packed_attn")
+    for variant in ("packed", "unpacked"):
+        _exact(f"packed_attn pack_zo.{variant}.zo_tokens_total",
+               _need(_need(fz, variant, "pack_zo"), "zo_tokens_total",
+                     variant),
+               _need(_need(cz, variant, "pack_zo"), "zo_tokens_total",
+                     variant), failures)
+    val = _need(fz, "ratio_unpacked_vs_packed_tok_per_s", "pack_zo")
+    _band("packed_attn unpacked/packed tok_per_s", val,
+          _need(cz, "ratio_unpacked_vs_packed_tok_per_s", "pack_zo"),
+          tol, failures)
+    ok = val <= slack
+    print(f"  [{'ok' if ok else 'FAIL'}] packed_attn unpacked vs packed "
+          f"tokens/sec: x{val:.3f} (must be <= {slack})")
+    if not ok:
+        failures.append(
+            f"packed_attn unpacked_vs_packed tok/s: x{val:.3f} > {slack}"
+            " — the packed ZO stream no longer delivers at least the "
+            "unpacked throughput at equal data")
+
+
 def check_plan_auto(fresh: dict, committed: dict, tol: float, slack: float,
                     failures: list):
     """Perf-model gate (docs/perf-model.md): on every sweep axis the
@@ -512,6 +589,7 @@ CHECKS = {"fig_ndirs_sweep": check_ndirs,
           "fig_compressed_dp": check_compressed_dp,
           "fig_serving": check_serving,
           "fig_sparse_mezo": check_sparse_mezo,
+          "fig_packed_attn": check_packed_attn,
           "fig_plan_auto": check_plan_auto}
 
 

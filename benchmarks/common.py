@@ -42,6 +42,34 @@ def tree_bitwise(a, b) -> bool:
     return True
 
 
+def interleaved_min_rounds(bench_fns: dict, rounds: int = 3) -> dict:
+    """Interleaved min-over-rounds timing (the fig_bank_exec recipe,
+    shared by fig_host_overlap and fig_packed_attn).
+
+    ``bench_fns`` maps a variant name to a zero-arg callable returning
+    ``(seconds, extra)``.  One full pass over *all* variants per round;
+    the reduced number is ``min`` over rounds.  Interleaving matters on
+    a shared 2-core container: the gated numbers are cross-variant
+    ratios, and consecutive timing windows would let one burst of
+    background load masquerade as one variant's regression.  Callables
+    may close over mutable state (donated-buffer threading etc.) — they
+    are invoked exactly ``rounds`` times each, in dict order.
+
+    Returns ``{name: {"best_s": float, "rounds_s": [float, ...],
+    "extra": <last extra>}}``.
+    """
+    out = {name: {"best_s": float("inf"), "rounds_s": [], "extra": None}
+           for name in bench_fns}
+    for _ in range(rounds):
+        for name, fn in bench_fns.items():
+            secs, extra = fn()
+            rec = out[name]
+            rec["rounds_s"].append(secs)
+            rec["best_s"] = min(rec["best_s"], secs)
+            rec["extra"] = extra
+    return out
+
+
 def save_result(name: str, payload) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

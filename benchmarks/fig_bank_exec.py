@@ -80,15 +80,16 @@ def _compile_one(loss_fn, params, batch, mode, exec_, n_dirs):
 
 
 def _bench_group(loss_fn, params, batch, n_dirs, reps, rounds=3):
-    """Compile every executor for one bank size, then time them in
-    interleaved rounds (min over rounds).  Interleaving matters on a
-    shared 2-core container: the gated numbers are cross-executor step
-    ratios, and consecutive timing windows would let one burst of
-    background load masquerade as one executor's regression."""
+    """Compile every executor for one bank size, then time them with
+    ``common.interleaved_min_rounds`` (interleaved rounds, min reduce —
+    see its docstring for why interleaving matters on a shared
+    container)."""
     import jax
     import jax.numpy as jnp
 
-    entries = []
+    from benchmarks.common import interleaved_min_rounds
+
+    entries = {}
     for mode, exec_ in EXECUTORS:
         compiled, row = _compile_one(loss_fn, params, batch, mode, exec_,
                                      n_dirs)
@@ -96,24 +97,29 @@ def _bench_group(loss_fn, params, batch, n_dirs, reps, rounds=3):
         p = jax.tree_util.tree_map(jnp.array, params)
         g0, _, p = compiled(p, batch, jnp.uint32(7))    # warm
         jax.block_until_ready(g0)
-        entries.append({"row": row, "compiled": compiled, "p": p,
-                        "g0": g0, "step_s": float("inf")})
+        entries[f"{mode}/{exec_}"] = {"row": row, "compiled": compiled,
+                                      "p": p, "g0": g0}
 
     seed = jnp.uint32(7)
-    for _ in range(rounds):
-        for e in entries:
+
+    def bench(e):
+        def fn():
             compiled, p = e["compiled"], e["p"]
             t0 = time.perf_counter()
             for _ in range(reps):
                 g0, _, p = compiled(p, batch, seed)
             jax.block_until_ready(g0)
-            e["step_s"] = min(e["step_s"],
-                              (time.perf_counter() - t0) / reps)
+            secs = (time.perf_counter() - t0) / reps
             e["p"], e["g0"] = p, g0
+            return secs, None
+        return fn
+
+    timed = interleaved_min_rounds(
+        {name: bench(e) for name, e in entries.items()}, rounds)
 
     rows = []
-    for e in entries:
-        r = dict(e["row"], step_s=round(e["step_s"], 6),
+    for name, e in entries.items():
+        r = dict(e["row"], step_s=round(timed[name]["best_s"], 6),
                  g0_mean=float(np.mean(np.asarray(e["g0"]))))
         rows.append(r)
         print(f"[bank_exec] {r['mode']:5s}/{r['exec']:6s} n={n_dirs} "

@@ -17,8 +17,9 @@ equal, and this figure verifies that live):
 Step time is measured *inside* each run from the loop's own drain
 timestamps (steady state: records after a warmup window, so compile and
 cache-population are excluded), with the variants **interleaved over
-rounds and reduced by min** (the fig_bank_exec recipe) — a noise spike
-on a 2-core CI runner degrades one round, not the committed ratio.
+rounds and reduced by min** (``common.interleaved_min_rounds``, shared
+with fig_bank_exec and fig_packed_attn) — a noise spike on a 2-core CI
+runner degrades one round, not the committed ratio.
 
 A fourth, bucketed run exercises the FO width ladder and records the
 per-bucket compiled-step cache's exact compile count — the no-retrace
@@ -34,7 +35,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import save_result, tree_bitwise
+from benchmarks.common import (interleaved_min_rounds, save_result,
+                               tree_bitwise)
 
 #: variant -> (prefetch, async_window)
 VARIANTS = {"sync": (0, 1), "prefetch": (4, 1), "streamed": (4, 4)}
@@ -88,29 +90,33 @@ def run(steps=40, warmup=8, rounds=3, quick=False):
         steps, warmup = min(steps, 24), min(warmup, 5)
     bundle, corpus = _setup(quick)
 
-    walls = {v: [] for v in VARIANTS}
-    host_params, compiles = {}, {}
-    for _ in range(rounds):
-        for variant, (prefetch, window) in VARIANTS.items():
+    def bench(prefetch, window):
+        def fn():
             step_wall, out, host, pipe = _run_variant(
                 bundle, corpus, prefetch=prefetch, window=window,
                 steps=steps, warmup=warmup)
-            walls[variant].append(step_wall)
-            host_params[variant] = host      # identical every round
-            compiles[variant] = out["n_compiles"]
+            # host params are identical every round (bitwise-checked
+            # below); keeping the last is keeping any
+            return step_wall, (host, out["n_compiles"])
+        return fn
 
-    rows = []
+    timed = interleaved_min_rounds(
+        {v: bench(p, w) for v, (p, w) in VARIANTS.items()}, rounds)
+
+    rows, host_params = [], {}
     for variant, (prefetch, window) in VARIANTS.items():
-        step_wall = min(walls[variant])
+        rec = timed[variant]
+        step_wall = rec["best_s"]
+        host_params[variant], n_compiles = rec["extra"]
         rows.append({
             "variant": variant, "prefetch": prefetch,
             "async_window": window,
             "step_wall_s": round(step_wall, 5),
-            "rounds_ms": [round(w * 1e3, 2) for w in walls[variant]],
-            "n_compiles": compiles[variant],
+            "rounds_ms": [round(w * 1e3, 2) for w in rec["rounds_s"]],
+            "n_compiles": n_compiles,
         })
         print(f"[host_overlap] {variant}: step={step_wall * 1e3:.2f}ms "
-              f"(min of {rounds}) compiles={compiles[variant]}",
+              f"(min of {rounds}) compiles={n_compiles}",
               flush=True)
 
     # live correctness: prefetch/async reorder host work, never values —

@@ -1,0 +1,386 @@
+"""Packed-batch attention benchmark: the segment-aware block-skip win
+and the packed ZO stream's reclaimed padding (DESIGN.md §12).
+
+Three sections, all regression-gated (``benchmarks/check_regression.py``):
+
+* **parity** (live hard-fails) — the interpret-mode kernel vs the jitted
+  blockwise jnp mirror is *bitwise* on a packed batch; ``skip=True`` vs
+  the dense-masked ablation (``skip=False``) is bitwise (the table may
+  drop work, never bits); the mirror vs the dense-softmax oracle is
+  fp-tolerance; ``pack_zo=False`` leaves the historical ``(seed, step)``
+  stream bitwise-untouched (pinned against an inline reimplementation of
+  the unpacked draw) and the packed stream replays deterministically.
+
+* **skip** — exact block-pair counts (total / live / analytic brute
+  force: deterministic integers, gated exactly) and the timing claim:
+  with the skip table on, the chunked path (``lax.cond`` pair skip) and
+  the flash path (prefetched-table ``pl.when``) both beat the
+  dense-masked ablation at the same packed batch.  Variants are timed
+  with ``common.interleaved_min_rounds`` (shared with fig_bank_exec and
+  fig_host_overlap).
+
+* **pack_zo** — the throughput claim behind the ``--pack-zo`` knob: on a
+  short-document corpus the packed ZO stream carries strictly more real
+  tokens per ``(K0, s_full)`` batch at the same compiled step, so real
+  tokens/sec goes up at equal data.  Token counts are deterministic
+  integers (same seed, same stream), gated exactly; the tokens/sec ratio
+  is gated directionally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import (interleaved_min_rounds, save_result,
+                               tree_bitwise)
+
+
+# --------------------------------------------------------------------------
+# deterministic packed layouts
+# --------------------------------------------------------------------------
+
+def _packed_segments(rng, b: int, s: int, lo: int, hi: int) -> np.ndarray:
+    """Row-contiguous 1-based segment ids from doc lengths ~ U[lo, hi]
+    (the packer's layout, ``data.pipeline._packed_lm_batch``)."""
+    segs = np.zeros((b, s), np.int32)
+    for r in range(b):
+        off, sid = 0, 1
+        while off < s:
+            n = min(int(rng.integers(lo, hi + 1)), s - off)
+            segs[r, off:off + n] = sid
+            off += n
+            sid += 1
+    return segs
+
+
+def _positions_from(segs: np.ndarray) -> np.ndarray:
+    b, s = segs.shape
+    idx = np.arange(s)
+    change = np.concatenate(
+        [np.ones((b, 1), bool), segs[:, 1:] != segs[:, :-1]], axis=1)
+    starts = np.maximum.accumulate(np.where(change, idx[None], -1), axis=1)
+    return (idx[None] - starts).astype(np.int32)
+
+
+def _brute_live(segs: np.ndarray, bq: int, bkv: int,
+                window: int | None) -> np.ndarray:
+    """Position-sweep oracle for ``block_live_table`` — the analytic
+    count the exact gate pins the table against."""
+    b, s = segs.shape
+    q = np.arange(s)
+    mask = q[:, None] >= q[None, :]
+    if window is not None:
+        mask &= (q[:, None] - q[None, :]) < window
+    full = mask[None] & (segs[:, :, None] == segs[:, None, :])
+    return full.reshape(b, s // bq, bq, s // bkv, bkv) \
+               .any(axis=(2, 4)).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# section 1: parity (live hard-gates)
+# --------------------------------------------------------------------------
+
+def _parity() -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import (attention_ref,
+                                               flash_attention,
+                                               flash_attention_blockwise_ref)
+
+    interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(0)
+    b, h, kh, s, hd, blk = 2, 4, 2, 64, 16, 16
+    q = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, hd)), jnp.float32)
+    segs = jnp.asarray(_packed_segments(rng, b, s, 6, 20))
+
+    def flash_hm(**kw):
+        # ops.flash_attention takes (B, S, H, hd); refs are head-major
+        out = flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), segments=segs,
+                              block_q=blk, block_kv=blk,
+                              interpret=interpret, **kw)
+        return jnp.swapaxes(out, 1, 2)
+
+    out_k = flash_hm(skip=True)
+    out_masked = flash_hm(skip=False)
+    out_m = flash_attention_blockwise_ref(q, k, v, segments=segs,
+                                          block_q=blk, block_kv=blk)
+    out_d = attention_ref(q, k, v, segments=segs)
+    return {
+        "kernel_vs_mirror_bitwise": tree_bitwise(out_k, out_m),
+        "skip_vs_masked_bitwise": tree_bitwise(out_k, out_masked),
+        "mirror_vs_dense_max_abs": float(
+            np.max(np.abs(np.asarray(out_m) - np.asarray(out_d)))),
+    }
+
+
+def _stream_parity(steps: int = 6) -> dict:
+    """``pack_zo=False`` == the historical draw, bitwise; ``pack_zo=True``
+    replays bit-for-bit from ``(seed, step)``."""
+    from repro.data.pipeline import AddaxPipeline, PipelineConfig, _lm_batch
+
+    corpus, cfg = _zo_corpus()
+    off = AddaxPipeline(corpus, PipelineConfig(
+        **{**cfg.__dict__, "pack_zo": False}))
+    ok_off = True
+    for step in range(steps):
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
+        i0 = rng.choice(off.assignment.d0, size=cfg.k0, replace=True)
+        pool, width = off._draw_fo(rng)
+        b0 = _lm_batch(corpus, i0, off.s_full)
+        i1 = rng.choice(pool, size=cfg.k1, replace=True)
+        b1 = _lm_batch(corpus, i1, width)
+        ok_off &= tree_bitwise((b0, b1), off.step_batches(step))
+
+    on = AddaxPipeline(corpus, cfg)
+    ok_replay = all(tree_bitwise(on.step_batches(s), on.step_batches(s))
+                    for s in range(steps))
+    return {"pack_zo_off_stream_bitwise": bool(ok_off),
+            "pack_zo_replay_bitwise": bool(ok_replay)}
+
+
+# --------------------------------------------------------------------------
+# section 2: block-skip — exact counts + step time vs the masked ablation
+# --------------------------------------------------------------------------
+
+def _skip_section(reps: int, rounds: int) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import (block_live_table,
+                                               flash_attention)
+    from repro.models import attention
+    from repro.models.common import init_tree
+
+    interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(1)
+
+    # flash: direct kernel calls, docs span ~1 block of 64 so most of the
+    # (n_q x n_kv) grid is dead — skip=False computes every pair (the
+    # dense-masked ablation), skip=True only the live band
+    fb, fh, fkh, fs, fhd, fblk = 2, 2, 2, 256, 32, 64
+    fq = jnp.asarray(rng.normal(size=(fb, fs, fh, fhd)), jnp.float32)
+    fk = jnp.asarray(rng.normal(size=(fb, fs, fkh, fhd)), jnp.float32)
+    fv = jnp.asarray(rng.normal(size=(fb, fs, fkh, fhd)), jnp.float32)
+    fsegs_np = _packed_segments(rng, fb, fs, 32, 72)
+    fsegs = jnp.asarray(fsegs_np)
+    fn_blk = fs // fblk
+    ftable = np.asarray(block_live_table(fsegs, fblk, fblk))
+    fbrute = _brute_live(fsegs_np, fblk, fblk, None)
+    flash_counts = {
+        "n_pairs": int(fb * fn_blk * fn_blk),
+        "n_live": int(ftable.sum()),
+        "analytic_n_live": int(fbrute.sum()),
+    }
+
+    def flash_fn(skip):
+        def fn():
+            out = flash_attention(fq, fk, fv, segments=fsegs,
+                                  block_q=fblk, block_kv=fblk, skip=skip,
+                                  interpret=interpret)
+            jax.block_until_ready(out)       # warm/compiled by round 1
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = flash_attention(fq, fk, fv, segments=fsegs,
+                                      block_q=fblk, block_kv=fblk,
+                                      skip=skip, interpret=interpret)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / reps, None
+        return fn
+
+    # chunked: model-layer path, lax.cond over the static causal pair
+    # list — skip=False runs every causal pair's tile body
+    cb, cs, cblk = 4, 512, 64
+    cfg = attention.AttnCfg(d_model=128, n_heads=4, n_kv=2, head_dim=32)
+    params = init_tree(attention.specs(cfg), jax.random.key(0),
+                       jnp.float32)
+    cx = jnp.asarray(rng.normal(size=(cb, cs, 128)), jnp.float32)
+    csegs_np = _packed_segments(rng, cb, cs, 32, 72)
+    csegs = jnp.asarray(csegs_np)
+    cpos = jnp.asarray(_positions_from(csegs_np))
+    cn_blk = cs // cblk
+    cpairs = attention._causal_pairs(cn_blk, cn_blk, cblk, cblk, None)
+    ctable = np.asarray(block_live_table(csegs, cblk, cblk))
+    clive = (ctable != 0).any(axis=0)[cpairs[:, 0], cpairs[:, 1]]
+    chunked_counts = {
+        "n_causal_pairs": int(len(cpairs)),
+        "n_live_scanned": int(clive.sum()),
+    }
+
+    def chunked_fn(skip):
+        jitted = jax.jit(lambda p, x, sg, ps: attention.attention_chunked(
+            p, x, cfg, block_q=cblk, block_kv=cblk, segments=sg,
+            positions=ps, skip=skip), static_argnames=())
+        def fn():
+            out = jitted(params, cx, csegs, cpos)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = jitted(params, cx, csegs, cpos)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / reps, None
+        return fn
+
+    timed = interleaved_min_rounds(
+        {"flash/skip": flash_fn(True), "flash/masked": flash_fn(False),
+         "chunked/skip": chunked_fn(True),
+         "chunked/masked": chunked_fn(False)}, rounds)
+
+    def pack(impl, counts, shape):
+        sk = timed[f"{impl}/skip"]
+        mk = timed[f"{impl}/masked"]
+        rec = dict(counts, shape=shape,
+                   skip_ms=round(sk["best_s"] * 1e3, 4),
+                   masked_ms=round(mk["best_s"] * 1e3, 4),
+                   rounds_skip_ms=[round(x * 1e3, 4)
+                                   for x in sk["rounds_s"]],
+                   rounds_masked_ms=[round(x * 1e3, 4)
+                                     for x in mk["rounds_s"]],
+                   ratio=round(sk["best_s"] / mk["best_s"], 4))
+        print(f"[packed_attn] {impl}: skip={rec['skip_ms']:.3f}ms "
+              f"masked={rec['masked_ms']:.3f}ms x{rec['ratio']} "
+              f"(live {counts.get('n_live', counts.get('n_live_scanned'))}"
+              f"/{counts.get('n_pairs', counts.get('n_causal_pairs'))})",
+              flush=True)
+        return rec
+
+    return {
+        "flash": pack("flash", flash_counts,
+                      {"b": fb, "h": fh, "kh": fkh, "s": fs, "hd": fhd,
+                       "block": fblk}),
+        "chunked": pack("chunked", chunked_counts,
+                        {"b": cb, "s": cs, "d_model": 128, "h": 4,
+                         "kh": 2, "block": cblk}),
+    }
+
+
+# --------------------------------------------------------------------------
+# section 3: packed ZO stream — real tokens/sec at equal data
+# --------------------------------------------------------------------------
+
+def _zo_corpus():
+    from repro.data.pipeline import PipelineConfig
+    from repro.data.synthetic import SyntheticTaskConfig, make_corpus
+    from repro.models.registry import get_bundle
+
+    vocab = get_bundle("tiny-100m", smoke=True).mcfg.vocab
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=vocab, n_examples=96,
+        min_len=40, max_len=70, seed=0))
+    corpus += make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=vocab, n_examples=8,
+        min_len=180, max_len=200, seed=9))
+    corpus += make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=vocab, n_examples=24,
+        min_len=8, max_len=24, seed=5))
+    cfg = PipelineConfig(k0=4, k1=2, l_t=32, pack_zo=True, seed=0)
+    return corpus, cfg
+
+
+def _zo_tokens_per_step(pipe, steps: int) -> int:
+    """Real (supervised) ZO tokens the stream delivers — deterministic
+    given ``(seed, steps)``, so the gate pins it exactly."""
+    return int(sum(int(np.asarray(pipe.step_batches(s)[0]["mask"]).sum())
+                   for s in range(steps)))
+
+
+def _pack_zo_section(steps: int, warmup: int, rounds: int) -> dict:
+    import jax
+    from repro.core.addax import AddaxConfig
+    from repro.data.pipeline import AddaxPipeline, PipelineConfig
+    from repro.models.registry import get_bundle
+    from repro.train.loop import TrainLoopConfig, run_training
+    from repro.train.state import build_optimizer
+
+    bundle = get_bundle("tiny-100m", smoke=True)
+    corpus, cfg = _zo_corpus()
+    acfg = AddaxConfig(lr=1e-3, alpha=1e-3, eps=1e-3, n_dirs=1)
+
+    def bench(pack_zo):
+        pcfg = PipelineConfig(**{**cfg.__dict__, "pack_zo": pack_zo})
+        def fn():
+            pipe = AddaxPipeline(corpus, pcfg)
+            opt = build_optimizer("addax", bundle.loss_fn(), acfg)
+            params = bundle.init_params(jax.random.key(0))
+            out = run_training(opt, params, pipe,
+                               TrainLoopConfig(total_steps=steps,
+                                               log_every=1))
+            ts = [h["t"] for h in out["history"] if "t" in h]
+            step_wall = (ts[-1] - ts[warmup]) / (len(ts) - 1 - warmup)
+            return step_wall, pipe
+        return fn
+
+    timed = interleaved_min_rounds(
+        {"packed": bench(True), "unpacked": bench(False)}, rounds)
+
+    rows = {}
+    for variant in ("packed", "unpacked"):
+        rec = timed[variant]
+        tokens = _zo_tokens_per_step(rec["extra"], steps)
+        tok_per_s = tokens / steps / rec["best_s"]
+        rows[variant] = {
+            "zo_tokens_total": tokens,
+            "step_wall_s": round(rec["best_s"], 5),
+            "rounds_ms": [round(x * 1e3, 2) for x in rec["rounds_s"]],
+            "tok_per_s": round(tok_per_s, 1),
+        }
+        print(f"[packed_attn] pack_zo {variant}: "
+              f"{tokens} zo tokens / {steps} steps, "
+              f"step={rec['best_s'] * 1e3:.1f}ms, "
+              f"{tok_per_s:.0f} tok/s", flush=True)
+
+    ratio = round(rows["unpacked"]["tok_per_s"]
+                  / rows["packed"]["tok_per_s"], 4)
+    return {"steps": steps, "warmup": warmup, "k0": cfg.k0,
+            "packed": rows["packed"], "unpacked": rows["unpacked"],
+            "ratio_unpacked_vs_packed_tok_per_s": ratio}
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def run(steps=16, warmup=3, reps=None, rounds=3, quick=False):
+    if quick:
+        steps, warmup, rounds = min(steps, 10), min(warmup, 2), \
+            min(rounds, 2)
+    if reps is None:
+        reps = 8 if quick else 20
+
+    parity = _parity()
+    parity.update(_stream_parity())
+    for key, val in parity.items():
+        print(f"[packed_attn] parity {key}: {val}", flush=True)
+
+    skip = _skip_section(reps, rounds)
+    pack_zo = _pack_zo_section(steps, warmup, rounds)
+
+    summary = {"quick": quick, "reps": reps, "rounds": rounds,
+               "arch": "tiny-100m(smoke)", "parity": parity,
+               "skip": skip, "pack_zo": pack_zo}
+    save_result("fig_packed_attn", summary)
+    print(f"[packed_attn] flash skip/masked x{skip['flash']['ratio']} "
+          f"chunked x{skip['chunked']['ratio']} "
+          f"pack_zo unpacked/packed tok/s "
+          f"x{pack_zo['ratio_unpacked_vs_packed_tok_per_s']}")
+    return summary
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--steps", type=int, default=16)
+    p.add_argument("--warmup", type=int, default=3)
+    p.add_argument("--reps", type=int, default=None)
+    p.add_argument("--rounds", type=int, default=3)
+    a = p.parse_args(argv)
+    run(steps=a.steps, warmup=a.warmup, reps=a.reps, rounds=a.rounds,
+        quick=a.quick)
+
+
+if __name__ == "__main__":
+    main()

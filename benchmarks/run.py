@@ -39,9 +39,9 @@ def main(argv=None):
     from benchmarks import (fig3_memory_vs_batch, fig4_memory_vs_seqlen,
                             fig5_k0_sweep, fig11_convergence,
                             fig_bank_exec, fig_host_overlap,
-                            fig_ndirs_sweep, fig_plan_auto, fig_serving,
-                            fig_sparse_mezo, roofline_report,
-                            table_accuracy_memory)
+                            fig_ndirs_sweep, fig_packed_attn,
+                            fig_plan_auto, fig_serving, fig_sparse_mezo,
+                            roofline_report, table_accuracy_memory)
     suite = {
         "fig3_memory_vs_batch": lambda: fig3_memory_vs_batch.run(
             quick=quick),
@@ -54,6 +54,7 @@ def main(argv=None):
         "fig11_convergence": lambda: fig11_convergence.run(quick=quick),
         "fig_serving": lambda: fig_serving.run(quick=quick),
         "fig_sparse_mezo": lambda: fig_sparse_mezo.run(quick=quick),
+        "fig_packed_attn": lambda: fig_packed_attn.run(quick=quick),
         "fig_compressed_dp": lambda: _run_subprocess_fig(
             "benchmarks.fig_compressed_dp",
             *(("--quick",) if quick else ())),

@@ -455,6 +455,11 @@ def plan_auto(arch, hardware: Hardware | None = None,
       * **pack**: on for the decoder family when mean FO length < 60%
         of L_T (padding waste the packer reclaims; other families
         reject packed batches).
+      * **pack_zo**: same rule on the ZO stream — on for the decoder
+        family when the mean D0 length < 60% of ``s_full`` (the 2 x
+        n_dirs SPSA forwards amplify any padding reclaimed there; the
+        segment-aware chunked/flash paths then block-skip the packed
+        rows).
       * **bank executor**: argmin of the calibrated per-executor
         prediction at this n_dirs (chain/unroll when n_dirs == 1 —
         nothing to vectorize).
@@ -504,6 +509,11 @@ def plan_auto(arch, hardware: Hardware | None = None,
                                                l_t, pad_multiple=pad)
     pack = bool(arch.family == "decoder"
                 and float(fo_lengths.mean()) < 0.6 * l_t)
+    zo_lengths = lengths[lengths > l_t]
+    if zo_lengths.size == 0:
+        zo_lengths = lengths
+    pack_zo = bool(arch.family == "decoder"
+                   and float(zo_lengths.mean()) < 0.6 * s_full)
 
     # ---- calibrated choices ------------------------------------------
     n_dirs = int(overrides.pop("n_dirs", getattr(arch, "n_dirs", 1)))
@@ -546,7 +556,8 @@ def plan_auto(arch, hardware: Hardware | None = None,
         optimizer=optimizer, n_dirs=n_dirs, backend=backend,
         bank_exec=bank_exec, spsa_mode=spsa_mode,
         k0=k0, k1=k1, s_full=s_full, l_t=l_t, fo_buckets=tuple(edges),
-        pack=pack, prefetch=prefetch, async_window=async_window,
+        pack=pack, pack_zo=pack_zo, prefetch=prefetch,
+        async_window=async_window,
         sparsity=sparsity,
         remat=getattr(m, "remat", "none")), **overrides})
     if not explain:

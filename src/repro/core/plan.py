@@ -113,6 +113,10 @@ for _args in [
      "FO width ladder; resolved to (l_t,) when CellOptions leaves it ()"),
     ("replicate_small_kv", "cell", "bool", "launch/steps.py", False, ""),
     ("decode_2d_tp", "cell", "bool", "launch/steps.py", False, ""),
+    ("attn_skip", "cell", "bool", "models/attention.py", False,
+     "packed batches: skip fully-masked (q, kv) block pairs in the "
+     "chunked/flash impls (exact block_live_table; False = mask only — "
+     "the fig_packed_attn ablation)"),
     # ---- geometry: the paper's FO/ZO batch split -----------------------
     ("k0", "geometry", "int >= 1", "data/pipeline.py", True,
      "ZO batch size (long sequences)"),
@@ -124,7 +128,11 @@ for _args in [
      True, "length threshold L_T"),
     # ---- runtime knobs (train loop / host pipeline) --------------------
     ("pack", "runtime", "bool", "data/pipeline.py", True,
-     "first-fit FO packing (decoder family + dense attention)"),
+     "first-fit FO packing (decoder family; dense or segment-aware "
+     "chunked/flash attention)"),
+    ("pack_zo", "runtime", "bool", "data/pipeline.py", True,
+     "first-fit ZO-stream packing: short D0 leftovers behind long "
+     "documents at s_full (the SPSA walk's 2*n_dirs forwards)"),
     ("prefetch", "runtime", "int >= 0", "train/loop.py", True, ""),
     ("async_window", "runtime", "int >= 1", "train/loop.py", True, ""),
     ("sched_lag", "runtime", "int >= 1", "train/loop.py", False, ""),
@@ -193,6 +201,7 @@ class Plan:
     fo_buckets: tuple[int, ...] = (64,)
     replicate_small_kv: bool = True
     decode_2d_tp: bool = False
+    attn_skip: bool = True
     # geometry
     k0: int = 1
     k1: int = 1
@@ -200,6 +209,7 @@ class Plan:
     l_t: int | None = 64
     # runtime
     pack: bool = False
+    pack_zo: bool = False
     prefetch: int = 0
     async_window: int = 1
     sched_lag: int = 1

@@ -25,6 +25,10 @@ purity is what makes the streaming features free of state:
     gains ``segments`` (1-based example id per token, 0 = padding) and
     ``positions`` (per-example restart) so segment-aware attention keeps
     examples isolated (see ``docs/data-pipeline.md``);
+  * **ZO packing** (``pack_zo=True``): the same first-fit applied to the
+    ZO stream — short D0 leftovers packed behind long documents at
+    ``s_full``, cutting the padding waste of the SPSA walk's
+    ``2 * n_dirs`` forwards per step (the step-cost hotspot);
   * **prefetch** (``stream(..., prefetch=N)``): a background thread
     builds batches into a bounded queue.  Because ``step_batches`` is a
     pure function of ``(seed, step)``, the prefetched stream is
@@ -55,6 +59,8 @@ class PipelineConfig:
     pad_multiple: int = 8        # align padded lengths (TPU lanes)
     n_buckets: int = 1           # FO width-ladder size (1 = paper split)
     pack: bool = False           # first-fit packing of the FO stream
+    pack_zo: bool = False        # first-fit packing of the ZO stream
+                                 # (the SPSA walk's 2*n_dirs forwards)
 
 
 def _pad_len(n: int, mult: int) -> int:
@@ -200,8 +206,28 @@ class AddaxPipeline:
         return placements
 
     def step_batches(self, step: int) -> tuple[dict, dict]:
-        """(batch0 ZO @ s_full, batch1 FO @ bucket edge) for one step."""
+        """(batch0 ZO @ s_full, batch1 FO @ bucket edge) for one step.
+
+        ``pack_zo=True`` builds batch0 by the same deterministic
+        first-fit the FO stream uses — short D0 leftovers packed behind
+        long documents at ``s_full`` width, with segments/positions for
+        the segment-aware attention impls.  The SPSA walk replays a
+        packed stream from ``(seed, step)`` exactly like the unpacked
+        one; with ``pack_zo=False`` the draw order is untouched, so the
+        existing stream is bitwise-identical
+        (``tests/test_packed_attention.py``)."""
         rng = self._rng(step)
+        if self.cfg.pack_zo:
+            p0 = self._pack_placements(rng, self.assignment.d0,
+                                       self.cfg.k0, self.s_full)
+            b0 = _packed_lm_batch(self.corpus, p0, self.s_full)
+            pool, width = self._draw_fo(rng)
+            if self.cfg.pack:
+                placements = self._pack_placements(rng, pool, self.cfg.k1,
+                                                   width)
+                return b0, _packed_lm_batch(self.corpus, placements, width)
+            i1 = rng.choice(pool, size=self.cfg.k1, replace=True)
+            return b0, _lm_batch(self.corpus, i1, width)
         i0 = rng.choice(self.assignment.d0, size=self.cfg.k0, replace=True)
         pool, width = self._draw_fo(rng)
         b0 = _lm_batch(self.corpus, i0, self.s_full)

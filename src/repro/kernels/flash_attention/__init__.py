@@ -1,4 +1,9 @@
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import (attention_ref,
+                                               flash_attention_blockwise_ref)
+from repro.kernels.flash_attention.segments import (block_live_table,
+                                                    segment_run_starts)
 
-__all__ = ["flash_attention", "attention_ref"]
+__all__ = ["flash_attention", "attention_ref",
+           "flash_attention_blockwise_ref", "block_live_table",
+           "segment_run_starts"]

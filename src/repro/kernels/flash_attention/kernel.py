@@ -17,6 +17,15 @@ cost is zero; their prefetch is the standard TPU flash trade.
 
 Softmax stats are kept as (block_q, 128) lane-replicated tiles (TPU VREG
 layout); only lane 0 is meaningful.
+
+**Packed batches** (``segments`` given): the grid runs a sibling kernel
+whose per-(row, q-block, kv-block) liveness comes from an *exact*
+host-precomputed skip table (``segments.block_live_table``) riding in
+scalar prefetch — the same pattern as the paged-attention block table —
+so tiles that are fully masked (cross-segment and/or out of causal/
+window range) cost zero compute; live tiles additionally mask
+``seg_q != seg_kv`` entries to -inf next to the causal/window mask.
+``segments=None`` takes the original code path, bit for bit.
 """
 
 from __future__ import annotations
@@ -28,6 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.segments import block_live_table
 
 _LANES = 128
 _NEG = -1e30
@@ -98,15 +109,86 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                        jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def _flash_seg_kernel(live_ref, q_ref, k_ref, v_ref, sq_ref, sk_ref,
+                      o_ref, acc_ref, m_ref, l_ref, *, scale: float,
+                      block_q: int, block_kv: int, n_kv: int,
+                      window: int | None, softcap: float | None):
+    """Segment-aware sibling of ``_flash_kernel``: liveness reads the
+    prefetched skip table (exact — ``segments.block_live_table``), live
+    tiles add the ``seg_q == seg_kv`` mask.  Always causal."""
+    bb = pl.program_id(0)
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = i * block_q
+    k0 = j * block_kv
+    live = live_ref[bb, i, j] != 0
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bkv)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q0 + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        rel = qpos - kpos
+        mask = rel >= 0
+        if window is not None:
+            mask = jnp.logical_and(mask, rel < window)
+        mask = jnp.logical_and(mask,
+                               sq_ref[0][:, None] == sk_ref[0][None, :])
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]                               # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)           # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                              # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "window", "softcap", "causal", "block_q", "block_kv", "interpret"))
+    "window", "softcap", "causal", "block_q", "block_kv", "skip",
+    "interpret"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           segments: jax.Array | None = None,
                            window: int | None = None,
                            softcap: float | None = None,
                            causal: bool = True, block_q: int = 512,
-                           block_kv: int = 512,
+                           block_kv: int = 512, skip: bool = True,
                            interpret: bool = False) -> jax.Array:
-    """q: (B, H, S, hd); k/v: (B, K, S, hd); H = K*G.  S must tile."""
+    """q: (B, H, S, hd); k/v: (B, K, S, hd); H = K*G.  S must tile.
+
+    ``segments``: optional (B, S) int32 row-contiguous packed-example
+    ids — adds the same-segment mask and (``skip=True``) the exact
+    block-skip table via scalar prefetch; requires ``causal=True``.
+    ``skip=False`` keeps the mask but marks every tile live (the
+    dense-masked ablation ``fig_packed_attn`` times against)."""
     b, h, s, hd = q.shape
     kheads = k.shape[1]
     g = h // kheads
@@ -115,6 +197,52 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
     n_q, n_kv = s // block_q, s // block_kv
     scale = 1.0 / np.sqrt(hd)
+
+    if segments is not None:
+        if not causal:
+            raise ValueError("packed segments require causal attention "
+                             "(see docs/engine.md)")
+        if skip:
+            live = block_live_table(segments, block_q, block_kv,
+                                    window=window)
+        else:
+            live = jnp.ones((b, n_q, n_kv), jnp.int32)
+        kernel = functools.partial(
+            _flash_seg_kernel, scale=scale, block_q=block_q,
+            block_kv=block_kv, n_kv=n_kv, window=window, softcap=softcap)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, n_q, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, hd),
+                             lambda bb, hh, i, j, live: (bb, hh, i, 0)),
+                pl.BlockSpec((1, 1, block_kv, hd),
+                             lambda bb, hh, i, j, live:
+                             (bb, hh // g, j, 0)),
+                pl.BlockSpec((1, 1, block_kv, hd),
+                             lambda bb, hh, i, j, live:
+                             (bb, hh // g, j, 0)),
+                pl.BlockSpec((1, block_q),
+                             lambda bb, hh, i, j, live: (bb, i)),
+                pl.BlockSpec((1, block_kv),
+                             lambda bb, hh, i, j, live: (bb, j)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                                   lambda bb, hh, i, j, live:
+                                   (bb, hh, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, hd), jnp.float32),
+                pltpu.VMEM((block_q, _LANES), jnp.float32),
+                pltpu.VMEM((block_q, _LANES), jnp.float32),
+            ],
+        )
+        segs = jnp.asarray(segments, jnp.int32)
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+            interpret=interpret,
+        )(live, q, k, v, segs, segs)
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,

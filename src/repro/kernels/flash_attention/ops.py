@@ -13,17 +13,27 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "window", "softcap", "causal", "block_q", "block_kv", "interpret"))
+    "window", "softcap", "causal", "block_q", "block_kv", "skip",
+    "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    segments: jax.Array | None = None,
                     window: int | None = None,
                     softcap: float | None = None, causal: bool = True,
                     block_q: int = 512, block_kv: int = 512,
+                    skip: bool = True,
                     interpret: bool = False) -> jax.Array:
     """q: (B, S, H, hd); k/v: (B, S, K, hd) -> (B, S, H, hd).
 
     Sequences are zero-padded to the block multiple; padded *key* rows are
     masked by causality (pad queries attend garbage but are sliced away).
-    """
+
+    ``segments``: optional (B, S) int32 packed-example ids (row-
+    contiguous; ``data.pipeline._packed_lm_batch``) — tokens attend only
+    within their own segment, and fully-masked (q, kv) tiles are skipped
+    via the exact scalar-prefetched table (``skip=False`` masks without
+    skipping).  The alignment tail is padded with the -1 sentinel, which
+    never equals a real segment id (1-based) or in-row padding (0), so
+    padded keys stay isolated under the segment mask too."""
     b, s, h, hd = q.shape
     bq = min(block_q, s)
     bkv = min(block_kv, s)
@@ -36,8 +46,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    out = flash_attention_pallas(qt, kt, vt, window=window,
-                                 softcap=softcap, causal=causal,
-                                 block_q=bq, block_kv=bkv,
-                                 interpret=interpret)
+        if segments is not None:
+            segments = jnp.pad(segments, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    out = flash_attention_pallas(qt, kt, vt, segments=segments,
+                                 window=window, softcap=softcap,
+                                 causal=causal, block_q=bq, block_kv=bkv,
+                                 skip=skip, interpret=interpret)
     return jnp.swapaxes(out[:, :, :s], 1, 2)

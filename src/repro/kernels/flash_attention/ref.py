@@ -1,20 +1,39 @@
-"""Dense-softmax oracle for the flash-attention kernel.
+"""References for the flash-attention kernel — the repo's two-oracle
+discipline (same as ``kernels/paged_attention/ref.py``):
+
+* ``attention_ref`` — dense-softmax oracle: materialized S x S scores,
+  fp32 math, one ``jax.nn.softmax``.  The *semantic* reference; kernel
+  parity against it is fp-tolerance (different summation order).
+* ``flash_attention_blockwise_ref`` — a pure-jnp mirror of the kernel's
+  blockwise online-softmax sweep: identical tile walk, identical
+  ``dot_general`` dimension numbers, identical mask/update op order, and
+  the *same* ``segments.block_live_table`` skip decisions.  Interpret-
+  mode kernel vs this mirror is a **bitwise** contract.
 
 q: (B, H, S, hd); k/v: (B, K, S, hd) with H = K * G (GQA).  Causal, with
-optional sliding window and logit softcap (gemma2).  fp32 math.
+optional sliding window, logit softcap (gemma2), and ``segments`` —
+(B, S) int32 row-contiguous packed-example ids (tokens attend only
+within their own segment).
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.flash_attention.segments import block_live_table
+
+_NEG = -1e30
+
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   window: int | None = None,
                   softcap: float | None = None,
-                  causal: bool = True) -> jax.Array:
+                  causal: bool = True,
+                  segments: jax.Array | None = None) -> jax.Array:
     b, h, s, hd = q.shape
     kheads = k.shape[1]
     g = h // kheads
@@ -32,7 +51,116 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask = rel >= 0
         if window is not None:
             mask = mask & (rel < window)
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if segments is not None:
+        bmask = mask[None] & (segments[:, :, None] == segments[:, None, :])
+        scores = jnp.where(bmask[:, None, None], scores, _NEG)
+    else:
+        scores = jnp.where(mask[None, None, None], scores, _NEG)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
     return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def _tile_sweep(q_bh, k_bh, v_bh, live_row, seg_row, *, i: int, n_kv: int,
+                block_q: int, block_kv: int, scale: float,
+                window: int | None, softcap: float | None, causal: bool):
+    """One (batch, head, q-block) online-softmax kv sweep; mirrors
+    ``_flash_kernel`` / ``_flash_seg_kernel``.  Dead tiles leave the
+    carried (m, l, acc) untouched — ``jnp.where`` on the carry where the
+    kernel uses ``pl.when`` (the ``paged_attention_ref`` discipline)."""
+    hd = q_bh.shape[-1]
+    q0 = i * block_q
+    qt = q_bh[q0:q0 + block_q].astype(jnp.float32)
+    acc = jnp.zeros((block_q, hd), jnp.float32)
+    m = jnp.full((block_q, 1), _NEG, jnp.float32)
+    l = jnp.zeros((block_q, 1), jnp.float32)
+    for j in range(n_kv):
+        k0 = j * block_kv
+        if seg_row is None and causal:
+            # static liveness, same bound as the kernel's
+            if k0 > q0 + block_q - 1:
+                continue
+            if window is not None and (q0 + block_q - 1 - (k0 + block_kv - 1)
+                                       >= window + block_q + block_kv):
+                continue
+        kt = k_bh[k0:k0 + block_kv].astype(jnp.float32)
+        vt = v_bh[k0:k0 + block_kv].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qt, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            rel = (q0 + jax.lax.broadcasted_iota(
+                       jnp.int32, (block_q, block_kv), 0)
+                   - (k0 + jax.lax.broadcasted_iota(
+                       jnp.int32, (block_q, block_kv), 1)))
+            mask = rel >= 0
+            if window is not None:
+                mask = jnp.logical_and(mask, rel < window)
+            if seg_row is not None:
+                mask = jnp.logical_and(
+                    mask, seg_row[q0:q0 + block_q, None]
+                    == seg_row[None, k0:k0 + block_kv])
+            s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if seg_row is None:
+            acc, m, l = acc_new, m_new, l_new
+        else:
+            live = live_row[j] != 0
+            acc = jnp.where(live, acc_new, acc)
+            m = jnp.where(live, m_new, m)
+            l = jnp.where(live, l_new, l)
+    return acc / jnp.maximum(l, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "causal", "block_q", "block_kv"))
+def flash_attention_blockwise_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                                  *, window: int | None = None,
+                                  softcap: float | None = None,
+                                  causal: bool = True,
+                                  segments: jax.Array | None = None,
+                                  block_q: int = 512,
+                                  block_kv: int = 512) -> jax.Array:
+    """Blockwise jnp mirror of the flash kernel's grid sweep (test scale:
+    python loops over batch/heads/q-blocks, jitted so XLA fuses the tile
+    math exactly as it does for the interpret-mode kernel).  Bitwise
+    equality with the kernel also certifies the skip table drops only
+    all-masked tiles — a dropped live tile would change ``l``."""
+    b, h, s, hd = q.shape
+    kheads = k.shape[1]
+    g = h // kheads
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    n_q, n_kv = s // block_q, s // block_kv
+    scale = 1.0 / np.sqrt(hd)
+    table = None
+    if segments is not None:
+        assert causal, "segments require causal attention"
+        table = block_live_table(segments, block_q, block_kv,
+                                 window=window)
+
+    rows = []
+    for bb in range(b):
+        heads = []
+        for hh in range(h):
+            tiles = []
+            for i in range(n_q):
+                tiles.append(_tile_sweep(
+                    q[bb, hh], k[bb, hh // g], v[bb, hh // g],
+                    None if table is None else table[bb, i],
+                    None if segments is None else segments[bb],
+                    i=i, n_kv=n_kv, block_q=block_q, block_kv=block_kv,
+                    scale=scale, window=window, softcap=softcap,
+                    causal=causal).astype(q.dtype))
+            heads.append(jnp.concatenate(tiles, axis=0))
+        rows.append(jnp.stack(heads))
+    return jnp.stack(rows)

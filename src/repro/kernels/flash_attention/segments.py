@@ -1,0 +1,77 @@
+"""Block-level liveness for segment-packed blockwise attention.
+
+A packed batch (``data.pipeline._packed_lm_batch``) carries ``segments``
+— a (B, S) int32 map of row-contiguous example ids (1-based; 0 marks
+in-row padding; the kernel wrapper pads block-alignment tails with -1).
+Under the causal + same-segment mask, a query at position ``q`` may only
+attend the kv interval ``[lo(q), q]`` with
+
+    lo(q) = max(run_start(q), q - window + 1)
+
+where ``run_start(q)`` is the first position of the contiguous run of
+equal segment values containing ``q``.  Because runs are contiguous
+intervals, ``run_start`` — and hence ``lo`` — is non-decreasing in
+``q``, which makes *exact* per-(q-block, kv-block) liveness an O(1)
+check per pair:
+
+    pair (i, j) is live  <=>  some q in block i has q >= k_lo
+                              and lo(q) <= k_hi
+
+and since ``lo`` is non-decreasing the best witness is the smallest
+admissible query ``q* = max(i * block_q, k_lo)``.  "Exact" means a pair
+is marked dead **iff** every (q, kv) position in it is masked — the
+property test in ``tests/test_packed_attention.py`` pins this against a
+brute-force position sweep.
+
+The table is computed *outside* the kernel (plain jnp ops, O(S) work)
+and rides into the Pallas grid via scalar prefetch, mirroring the
+paged-attention block table (DESIGN.md §12 has the host-vs-in-kernel
+trade).  The same table drives the ``attention_chunked`` pair skip-list
+and the blockwise jnp mirror in ``ref.py``, so all three paths agree on
+which blocks exist.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_run_starts(segments: jax.Array) -> jax.Array:
+    """(B, S) segment ids -> (B, S) index of each position's run start.
+
+    Only value *changes* matter (never magnitudes), so any row-contiguous
+    labelling works — including 0 padding runs and -1 alignment tails."""
+    b, s = segments.shape
+    idx = jnp.arange(s, dtype=jnp.int32)
+    change = jnp.concatenate(
+        [jnp.ones((b, 1), bool), segments[:, 1:] != segments[:, :-1]],
+        axis=1)
+    return jax.lax.cummax(jnp.where(change, idx[None], -1), axis=1)
+
+
+def block_live_table(segments: jax.Array, block_q: int, block_kv: int, *,
+                     window: int | None = None) -> jax.Array:
+    """Exact per-(row, q-block, kv-block) liveness: (B, n_q, n_kv) int32,
+    1 = some position pair in the tile survives the causal + window +
+    same-segment mask, 0 = the whole tile is masked (skip it).
+
+    ``segments`` must be row-contiguous (the packer's layout — the dense
+    path documents the same requirement); causal attention only."""
+    b, s = segments.shape
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    n_q, n_kv = s // block_q, s // block_kv
+    idx = jnp.arange(s, dtype=jnp.int32)
+    lo = segment_run_starts(segments)
+    if window is not None:
+        lo = jnp.maximum(lo, idx[None] - (window - 1))
+    q_hi = jnp.arange(n_q, dtype=jnp.int32) * block_q + (block_q - 1)
+    k_lo = jnp.arange(n_kv, dtype=jnp.int32) * block_kv
+    k_hi = k_lo + (block_kv - 1)
+    # smallest admissible query of pair (i, j); lo is non-decreasing, so
+    # it minimizes lo over the admissible range
+    q_star = jnp.maximum((q_hi - (block_q - 1))[:, None], k_lo[None, :])
+    in_block = q_star <= q_hi[:, None]                       # (n_q, n_kv)
+    lo_at = lo[:, q_star.reshape(-1)].reshape(b, n_q, n_kv)
+    live = in_block[None] & (lo_at <= k_hi[None, None, :])
+    return live.astype(jnp.int32)

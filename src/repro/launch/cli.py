@@ -58,7 +58,19 @@ def add_train_knob_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--pack", action="store_true",
                    help="first-fit sequence packing of the FO stream "
                         "(segment-aware attention keeps examples "
-                        "isolated; decoder family + dense attention only)")
+                        "isolated; decoder family under dense or "
+                        "chunked/flash attention — docs/data-pipeline.md)")
+    p.add_argument("--pack-zo", action="store_true",
+                   help="first-fit packing of the ZO stream: fill the "
+                        "padding behind long D0 documents at s_full with "
+                        "short D0 leftovers (same isolation guarantees "
+                        "as --pack; the SPSA walk replays per (seed, "
+                        "step) so the stream stays deterministic)")
+    p.add_argument("--no-attn-skip", dest="attn_skip",
+                   action="store_false",
+                   help="disable exact block skipping in the segment-"
+                        "aware chunked/flash paths (mask-only ablation; "
+                        "packed outputs are bitwise-identical either way)")
     p.add_argument("--prefetch", type=int, default=0,
                    help="background batch-prefetch depth (0 = build "
                         "synchronously; the stream is bitwise-identical "
@@ -160,8 +172,8 @@ def results_dir() -> str | None:
 
 #: planner knob -> argv dest; (spsa_mode, bank_exec) are applied
 #: atomically (half a pair can be an invalid combination)
-_PLANNED_DESTS = ("k0", "k1", "l_t", "pack", "prefetch", "async_window",
-                  "backend", "sparsity")
+_PLANNED_DESTS = ("k0", "k1", "l_t", "pack", "pack_zo", "prefetch",
+                  "async_window", "backend", "sparsity")
 
 
 def apply_plan_auto(parser: argparse.ArgumentParser, args, arch,

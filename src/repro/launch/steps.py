@@ -81,6 +81,10 @@ class CellOptions:
                                        # weights over (data x model) — 256-way
                                        # 2D TP so per-step param reads shrink
                                        # 16x (beyond-paper, §Perf)
+    attn_skip: bool = True             # packed batches: skip fully-masked
+                                       # (q, kv) block pairs in chunked/
+                                       # flash attention (False = mask-only
+                                       # ablation, bitwise-identical output)
 
     def resolve(self, arch, shape: ShapeCfg | None = None) -> Plan:
         """Sentinels -> one fully-resolved immutable ``core.plan.Plan``.
@@ -133,6 +137,7 @@ class CellOptions:
             or (cell.l_t,),
             replicate_small_kv=self.replicate_small_kv,
             decode_2d_tp=self.decode_2d_tp,
+            attn_skip=self.attn_skip,
             k0=cell.k0, k1=cell.k1, s_full=cell.s_full, l_t=cell.l_t)
 
 
@@ -437,6 +442,8 @@ def plan_cell(bundle: Bundle, shape: ShapeCfg, mesh,
         model_over["remat"] = plan.remat
     if not plan.scores_f32 and hasattr(bundle.mcfg, "scores_f32"):
         model_over["scores_f32"] = False
+    if not plan.attn_skip and hasattr(bundle.mcfg, "attn_skip"):
+        model_over["attn_skip"] = False
     if model_over:
         bundle = Bundle(dataclasses.replace(
             bundle.arch,

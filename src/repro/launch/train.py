@@ -61,6 +61,12 @@ def main(argv=None):
                          "(it acts by shrinking the scheduled bank)")
 
     bundle = get_bundle(args.arch, smoke=args.smoke)
+    if not args.attn_skip and hasattr(bundle.mcfg, "attn_skip"):
+        import dataclasses
+        from repro.models.registry import Bundle
+        bundle = Bundle(dataclasses.replace(
+            bundle.arch,
+            model=dataclasses.replace(bundle.mcfg, attn_skip=False)))
     vocab = bundle.mcfg.vocab
     corpus = make_corpus(SyntheticTaskConfig(
         name=args.profile, task=args.task, vocab=vocab,
@@ -83,11 +89,12 @@ def main(argv=None):
 
     pipe = AddaxPipeline(corpus, PipelineConfig(
         k0=args.k0, k1=args.k1, l_t=args.l_t, seed=args.seed,
-        n_buckets=args.buckets, pack=args.pack))
+        n_buckets=args.buckets, pack=args.pack, pack_zo=args.pack_zo))
     print(f"[data] {len(corpus)} examples, L_max={pipe.assignment.l_max}, "
           f"L_T={pipe.assignment.l_t}, |D0|={pipe.assignment.d0.size}, "
           f"|D1|={pipe.assignment.d1.size}, "
-          f"fo_widths={pipe.fo_widths}, pack={args.pack}")
+          f"fo_widths={pipe.fo_widths}, pack={args.pack}, "
+          f"pack_zo={args.pack_zo}")
 
     acfg = AddaxConfig(lr=args.lr, eps=args.eps, alpha=args.alpha,
                        k0=args.k0, k1=args.k1, l_t=args.l_t,

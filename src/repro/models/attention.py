@@ -155,20 +155,33 @@ def attention_dense(params: dict, x: jax.Array, cfg: AttnCfg, *,
 
 def attention_flash(params: dict, x: jax.Array, cfg: AttnCfg, *,
                     window: int | None = None, block_q: int = 512,
-                    block_kv: int = 512, ctx=NULL_CTX) -> jax.Array:
+                    block_kv: int = 512, ctx=NULL_CTX,
+                    segments: jax.Array | None = None,
+                    positions: jax.Array | None = None,
+                    skip: bool = True) -> jax.Array:
     """Self-attention through the Pallas ``flash_attention`` kernel
     (``impl="flash"``).  On TPU this is the compiled Mosaic kernel; on
     CPU it transparently runs in interpret mode, so the whole model can
-    be smoke-tested with the kernel in the loop."""
+    be smoke-tested with the kernel in the loop.
+
+    ``segments``/``positions`` (packed batches, both (B, S) int32 and
+    row-contiguous) ride straight into the kernel: same-segment masking
+    plus the exact block-skip table (``skip=False``: mask only), RoPE
+    restarting per example.  ``segments=None`` is the original kernel
+    call, bit for bit."""
     from repro.kernels.flash_attention import flash_attention
+    if segments is not None and not cfg.causal:
+        raise ValueError("packed segments require causal attention "
+                         "(see docs/engine.md)")
     B, S, _ = x.shape
-    pos = jnp.arange(S)[None]
+    pos = positions if positions is not None else jnp.arange(S)[None]
     q, k, v = project_qkv(params, x, x, cfg, pos, pos, ctx)
     q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
     interpret = jax.default_backend() != "tpu"
-    out = flash_attention(q, k, v, window=window, softcap=cfg.softcap,
-                          causal=cfg.causal, block_q=block_q,
-                          block_kv=block_kv, interpret=interpret)
+    out = flash_attention(q, k, v, segments=segments, window=window,
+                          softcap=cfg.softcap, causal=cfg.causal,
+                          block_q=block_q, block_kv=block_kv, skip=skip,
+                          interpret=interpret)
     out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
     y = jnp.einsum("bqh,hd->bqd", out, params["wo"])
     return ctx.constrain(y, "batch", "seq", "embed")
@@ -195,13 +208,25 @@ def _causal_pairs(n_q: int, n_kv: int, block_q: int, block_kv: int,
 
 def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
                       window: int | None = None, block_q: int = 512,
-                      block_kv: int = 1024, ctx=NULL_CTX) -> jax.Array:
+                      block_kv: int = 1024, ctx=NULL_CTX,
+                      segments: jax.Array | None = None,
+                      positions: jax.Array | None = None,
+                      skip: bool = True) -> jax.Array:
     """Blockwise online-softmax causal self-attention (forward/prefill).
 
     Scans a static list of causally-live (q-block, kv-block) pairs; the
     softmax statistics (m, l) and the output accumulator live in fp32 at
     output size, never the S x S score matrix.
-    """
+
+    ``segments``/``positions`` (packed batches, (B, S) int32, row-
+    contiguous) add the same-segment mask inside each tile, RoPE
+    restarts per example, and — with ``skip=True`` — a ``lax.cond``
+    around the tile body driven by the *exact* batch-reduced
+    ``block_live_table``, so pairs that are fully masked across the
+    whole batch cost a predicate instead of a matmul (the traced
+    analogue of the flash kernel's prefetched skip table).
+    ``segments=None`` scans the identical pair list with the identical
+    body, bit for bit."""
     B, S, _ = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     G = H // K
@@ -209,8 +234,14 @@ def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
     block_kv = min(block_kv, S)
     assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
     n_q, n_kv = S // block_q, S // block_kv
+    if segments is not None and not cfg.causal:
+        raise ValueError("packed segments require causal attention "
+                         "(see docs/engine.md)")
     pos = jnp.arange(S)
-    q, k, v = project_qkv(params, x, x, cfg, pos[None], pos[None], ctx)
+    if positions is not None:
+        q, k, v = project_qkv(params, x, x, cfg, positions, positions, ctx)
+    else:
+        q, k, v = project_qkv(params, x, x, cfg, pos[None], pos[None], ctx)
     scale = 1.0 / np.sqrt(hd)
 
     pairs = _causal_pairs(n_q, n_kv, block_q, block_kv, window)
@@ -219,7 +250,7 @@ def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
     m = jnp.full((B, n_q, block_q, K, G), -1e30, jnp.float32)
     l = jnp.zeros((B, n_q, block_q, K, G), jnp.float32)
 
-    def body(carry, pair):
+    def tile(carry, pair):
         acc, m, l = carry
         i, j = pair[0], pair[1]
         qi = jax.lax.dynamic_slice_in_dim(q, i * block_q, block_q, axis=1)
@@ -234,7 +265,15 @@ def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
         msk = rel >= 0
         if window is not None:
             msk = msk & (rel < window)
-        s = jnp.where(msk[None, :, None, None, :], s, -1e30)
+        if segments is not None:
+            sq = jax.lax.dynamic_slice_in_dim(segments, i * block_q,
+                                              block_q, axis=1)
+            sk = jax.lax.dynamic_slice_in_dim(segments, j * block_kv,
+                                              block_kv, axis=1)
+            bmsk = msk[None] & (sq[:, :, None] == sk[:, None, :])
+            s = jnp.where(bmsk[:, :, None, None, :], s, -1e30)
+        else:
+            s = jnp.where(msk[None, :, None, None, :], s, -1e30)
 
         mi = jax.lax.dynamic_slice_in_dim(m, i, 1, axis=1)[:, 0]
         li = jax.lax.dynamic_slice_in_dim(l, i, 1, axis=1)[:, 0]
@@ -251,9 +290,27 @@ def attention_chunked(params: dict, x: jax.Array, cfg: AttnCfg, *,
         acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new[:, None], i, 1)
         m = jax.lax.dynamic_update_slice_in_dim(m, m_new[:, None], i, 1)
         l = jax.lax.dynamic_update_slice_in_dim(l, l_new[:, None], i, 1)
-        return (acc, m, l), None
+        return (acc, m, l)
 
-    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), pairs)
+    if segments is not None and skip:
+        from repro.kernels.flash_attention.segments import block_live_table
+        table = block_live_table(segments, block_q, block_kv,
+                                 window=window)
+        # batch-reduced: a pair runs if any row needs it (one compiled
+        # body; runtime cond skips, HLO keeps both branches)
+        live = (table != 0).any(axis=0)[pairs[:, 0], pairs[:, 1]]
+
+        def body(carry, pair_live):
+            pair, lv = pair_live
+            return jax.lax.cond(lv, lambda c: tile(c, pair),
+                                lambda c: c, carry), None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), (pairs, live))
+    else:
+        def body(carry, pair):
+            return tile(carry, pair), None
+
+        (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), pairs)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     out = out.reshape(B, S, H * hd).astype(x.dtype)
     y = jnp.einsum("bqh,hd->bqd", out, params["wo"])

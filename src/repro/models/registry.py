@@ -98,17 +98,20 @@ class Bundle:
         """Training loss.  Packed batches (``segments``/``positions``
         present, see ``repro.data.pipeline``) are accepted only where the
         loss mask *and* attention can both isolate examples: the decoder
-        family under dense attention.  The recurrent (hybrid/rwkv) and
+        family, under dense attention (full segment mask) or the
+        segment-aware chunked/flash blockwise paths (segment mask +
+        exact block skipping).  The recurrent (hybrid/rwkv) and
         cross-attending (encdec) families mix state across row positions
         regardless of the loss mask, so packing them would silently leak
         one example's tokens into another's logits — rejected loudly
         here, and the packed-vs-unpacked loss equivalence is pinned by
-        ``tests/test_stream_runtime.py``."""
+        ``tests/test_stream_runtime.py`` /
+        ``tests/test_packed_attention.py``."""
         if "segments" in batch and self.family != "decoder":
             raise ValueError(
                 f"packed batches are unsupported for the {self.family!r} "
                 "family: cross-example state leaks past the loss mask "
-                "(see docs/data-pipeline.md)")
+                "(see docs/engine.md and docs/data-pipeline.md)")
         if self.family == "encdec":
             return encdec.loss_fn(params, batch, self.mcfg, ctx)
         if self.family == "hybrid":

@@ -57,6 +57,9 @@ class TransformerCfg:
     scores_f32: bool = True            # attention softmax precision
     block_q: int = 512                 # chunked-attention tile sizes
     block_kv: int = 1024
+    attn_skip: bool = True             # packed batches: skip fully-masked
+                                       # (q, kv) block pairs in chunked/
+                                       # flash (False = mask only)
 
     @property
     def n_groups(self) -> int:
@@ -139,7 +142,8 @@ def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
             raise ValueError(
                 "packed batches (segments) are unsupported for rwkv "
                 "blocks: the recurrent state mixes across segment "
-                "boundaries (see docs/data-pipeline.md)")
+                "boundaries (see docs/engine.md and "
+                "docs/data-pipeline.md)")
         h = h + rwkv.time_mix(params["tm"], apply_norm(params["ln1"], h, cfg),
                               cfg.rwkv_cfg, ctx)
         h = h + rwkv.channel_mix(params["cm"],
@@ -149,19 +153,20 @@ def apply_block(params: dict, h: jax.Array, kind: str, cfg: TransformerCfg,
     acfg = cfg.attn_cfg()
     window = cfg.window_for(kind)
     a_in = apply_norm(params["ln1"], h, cfg)
-    if impl in ("chunked", "flash") and segments is not None:
-        raise ValueError(
-            f"packed batches (segments) need impl='dense', got "
-            f"{impl!r} — the blockwise kernels have no segment mask "
-            "(see docs/data-pipeline.md)")
     if impl == "chunked":
         a = attention.attention_chunked(params["attn"], a_in, acfg,
                                         window=window, block_q=cfg.block_q,
-                                        block_kv=cfg.block_kv, ctx=ctx)
+                                        block_kv=cfg.block_kv, ctx=ctx,
+                                        segments=segments,
+                                        positions=positions,
+                                        skip=cfg.attn_skip)
     elif impl == "flash":
         a = attention.attention_flash(params["attn"], a_in, acfg,
                                       window=window, block_q=cfg.block_q,
-                                      block_kv=cfg.block_kv, ctx=ctx)
+                                      block_kv=cfg.block_kv, ctx=ctx,
+                                      segments=segments,
+                                      positions=positions,
+                                      skip=cfg.attn_skip)
     else:
         a = attention.attention_dense(params["attn"], a_in, acfg,
                                       window=window, ctx=ctx,
@@ -230,13 +235,15 @@ def loss_fn(params: dict, batch: dict, cfg: TransformerCfg,
     """batch: tokens (B,S_text), targets/mask (B, prefix+S_text),
     optional prefix_embeds (B,P,d).  Packed batches additionally carry
     segments/positions (B,S_text) — per-example attention isolation and
-    RoPE restart (``docs/data-pipeline.md``); requires ``impl='dense'``
-    and no prefix."""
+    RoPE restart (``docs/data-pipeline.md``) under any self-attention
+    impl: dense masks, chunked/flash mask *and* block-skip
+    (``cfg.attn_skip``); no prefix."""
     segments = batch.get("segments")
     if segments is not None and cfg.prefix_len:
         raise ValueError(
             "packed batches are unsupported with a frontend prefix "
-            "(targets/mask offsets assume one example per row)")
+            "(targets/mask offsets assume one example per row; see "
+            "docs/engine.md)")
     h = embed_tokens(params, batch["tokens"], cfg,
                      batch.get("prefix_embeds"))
     h = ctx.constrain(h, "batch", "seq", "embed")

@@ -1,0 +1,372 @@
+"""Segment-aware block-sparse attention: the packed-batch contracts.
+
+Four layers of pinning (DESIGN.md §12):
+
+* **skip-table exactness** — ``block_live_table`` marks a (q-block,
+  kv-block) pair dead **iff** every position pair in it is masked
+  (causal + window + same-segment), property-tested against a
+  brute-force position sweep;
+* **kernel parity** — interpret-mode ``flash_attention`` vs the jitted
+  blockwise jnp mirror is *bitwise* across (block_q, block_kv) x
+  window x softcap grids; the mirror vs the dense oracle is
+  fp-tolerance;
+* **degeneracy** — ``segments=None`` takes the original code paths,
+  and trivial (all-ones) segments reproduce them bitwise;
+* **stream purity** — ``pack_zo=False`` leaves the existing
+  ``(seed, step)`` draw bitwise-untouched (pinned against an inline
+  reimplementation of the unpacked draw), and the packed ZO stream
+  replays deterministically.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+from helpers import tree_bitwise  # noqa: E402
+
+from repro.data.pipeline import (AddaxPipeline, PipelineConfig,  # noqa: E402
+                                 _lm_batch)
+from repro.data.synthetic import (SyntheticTaskConfig,  # noqa: E402
+                                  make_corpus)
+from repro.kernels.flash_attention import (attention_ref,  # noqa: E402
+                                           block_live_table,
+                                           flash_attention,
+                                           flash_attention_blockwise_ref)
+from repro.models import attention  # noqa: E402
+from repro.models.common import init_tree  # noqa: E402
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _random_segments(rng: np.random.Generator, b: int, s: int) -> np.ndarray:
+    """Row-contiguous 1-based segment ids with an occasional 0-padding
+    tail — the packer's layout (``_packed_lm_batch``)."""
+    segs = np.zeros((b, s), np.int32)
+    for r in range(b):
+        off, sid = 0, 1
+        while off < s:
+            n = min(int(rng.integers(1, max(2, s // 3))), s - off)
+            segs[r, off:off + n] = sid
+            off += n
+            sid += 1
+        if rng.random() < 0.5:
+            pad = int(rng.integers(0, s // 4 + 1))
+            if pad:
+                segs[r, s - pad:] = 0
+    return segs
+
+
+def _positions_from(segs: np.ndarray) -> np.ndarray:
+    """Per-run restarting positions (0 1 2 ... per contiguous run)."""
+    b, s = segs.shape
+    idx = np.arange(s)
+    change = np.concatenate(
+        [np.ones((b, 1), bool), segs[:, 1:] != segs[:, :-1]], axis=1)
+    starts = np.maximum.accumulate(np.where(change, idx[None], -1), axis=1)
+    return (idx[None] - starts).astype(np.int32)
+
+
+def _brute_live(segs: np.ndarray, bq: int, bkv: int,
+                window: int | None) -> np.ndarray:
+    """Position-sweep oracle for ``block_live_table``."""
+    b, s = segs.shape
+    q = np.arange(s)
+    mask = q[:, None] >= q[None, :]
+    if window is not None:
+        mask &= (q[:, None] - q[None, :]) < window
+    full = mask[None] & (segs[:, :, None] == segs[:, None, :])
+    return full.reshape(b, s // bq, bq, s // bkv, bkv) \
+               .any(axis=(2, 4)).astype(np.int32)
+
+
+def _qkv(rng: np.random.Generator, b=2, h=4, kh=2, s=64, hd=16):
+    q = jnp.asarray(rng.normal(size=(b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kh, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kh, s, hd)), jnp.float32)
+    return q, k, v
+
+
+def _flash(q, k, v, **kw):
+    """Head-major (B, H, S, hd) adapter: ``ops.flash_attention`` takes
+    the model layer's (B, S, H, hd) layout; the references here (and the
+    rest of this module) carry head-major.  Transposes are value-exact,
+    so bitwise contracts survive the round trip."""
+    out = flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), **kw)
+    return jnp.swapaxes(out, 1, 2)
+
+
+# --------------------------------------------------------------------------
+# skip-table exactness (property test)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       cfg=st.sampled_from([(64, 16, 16, None), (64, 16, 32, None),
+                            (64, 32, 16, 24), (64, 8, 8, 12),
+                            (48, 16, 8, None), (48, 8, 16, 20)]))
+def test_block_live_table_exact(seed, cfg):
+    """A pair is skipped **iff** every (q, kv) position in it is masked
+    — never drops a live tile (which would change the softmax ``l``),
+    never keeps a dead one (which would cost a matmul)."""
+    s, bq, bkv, window = cfg
+    rng = np.random.default_rng(seed)
+    segs = _random_segments(rng, 2, s)
+    table = np.asarray(block_live_table(jnp.asarray(segs), bq, bkv,
+                                        window=window))
+    np.testing.assert_array_equal(table, _brute_live(segs, bq, bkv, window))
+
+
+def test_block_live_table_alignment_sentinel():
+    """The -1 alignment sentinel (``ops.flash_attention`` padding) forms
+    its own run: padded tail tiles are dead against every real segment."""
+    segs = np.array([[1, 1, 2, 2, -1, -1, -1, -1]], np.int32)
+    table = np.asarray(block_live_table(jnp.asarray(segs), 4, 4))
+    np.testing.assert_array_equal(
+        table, _brute_live(segs, 4, 4, None))
+    assert table[0, 1, 0] == 0  # tail q-block never sees the real tokens
+
+
+# --------------------------------------------------------------------------
+# kernel vs mirror (bitwise) vs dense oracle (tolerance)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_q,block_kv", [(16, 16), (16, 32), (32, 16)])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("cap", [None, 5.0])
+def test_packed_kernel_bitwise_vs_mirror(block_q, block_kv, window, cap):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng)
+    segs = jnp.asarray(_random_segments(rng, 2, 64))
+    out_k = _flash(q, k, v, segments=segs, window=window,
+                            softcap=cap, block_q=block_q,
+                            block_kv=block_kv, interpret=_INTERPRET)
+    out_m = flash_attention_blockwise_ref(q, k, v, segments=segs,
+                                          window=window, softcap=cap,
+                                          block_q=block_q,
+                                          block_kv=block_kv)
+    assert tree_bitwise(out_k, out_m), \
+        "kernel diverged from the blockwise mirror (skip table or tile " \
+        "math no longer match)"
+    out_d = attention_ref(q, k, v, window=window, softcap=cap,
+                          segments=segs)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_d),
+                               atol=5e-6, rtol=1e-5)
+
+
+def test_packed_kernel_skip_vs_dense_masked_bitwise():
+    """``skip=False`` (every tile live, mask only) must land on the same
+    bits as ``skip=True`` — the table may only drop tiles whose removal
+    cannot change the online-softmax statistics."""
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng)
+    segs = jnp.asarray(_random_segments(rng, 2, 64))
+    kw = dict(segments=segs, block_q=16, block_kv=16, interpret=_INTERPRET)
+    assert tree_bitwise(_flash(q, k, v, skip=True, **kw),
+                        _flash(q, k, v, skip=False, **kw))
+
+
+def test_packed_kernel_unaligned_length():
+    """S not a block multiple: ops-level padding (-1 sentinel) keeps
+    parity with the dense oracle on the real positions."""
+    rng = np.random.default_rng(4)
+    q, k, v = _qkv(rng, s=56)
+    segs = jnp.asarray(_random_segments(rng, 2, 56))
+    out = _flash(q, k, v, segments=segs, block_q=16, block_kv=16,
+                 interpret=_INTERPRET)
+    ref = attention_ref(q, k, v, segments=segs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-6, rtol=1e-5)
+
+
+def test_segments_none_kernel_degeneracy():
+    """``segments=None`` takes the original kernel path and trivial
+    all-ones segments reproduce it bitwise (packing off = old bits)."""
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng)
+    ones = jnp.ones((2, 64), jnp.int32)
+    base = _flash(q, k, v, block_q=16, block_kv=16,
+                  interpret=_INTERPRET)
+    packed = _flash(q, k, v, segments=ones, block_q=16,
+                    block_kv=16, interpret=_INTERPRET)
+    assert tree_bitwise(base, packed)
+
+
+def test_noncausal_segments_rejected():
+    rng = np.random.default_rng(6)
+    q, k, v = _qkv(rng, s=16)
+    segs = jnp.ones((2, 16), jnp.int32)
+    with pytest.raises(ValueError, match="causal"):
+        _flash(q, k, v, segments=segs, causal=False,
+               block_q=16, block_kv=16, interpret=_INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# model layer: chunked / flash vs dense on packed inputs
+# --------------------------------------------------------------------------
+
+def _attn_setup(cap=None, s=64):
+    cfg = attention.AttnCfg(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                            softcap=cap)
+    params = init_tree(attention.specs(cfg), jax.random.key(0),
+                       jnp.float32)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, s, 32)), jnp.float32)
+    segs = _random_segments(rng, 2, s)
+    pos = _positions_from(segs)
+    return cfg, params, x, jnp.asarray(segs), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_packed_chunked_and_flash_match_dense(window):
+    cfg, params, x, segs, pos = _attn_setup()
+    dense = attention.attention_dense(params, x, cfg, window=window,
+                                      segments=segs, positions=pos)
+    chunked = attention.attention_chunked(params, x, cfg, window=window,
+                                          block_q=16, block_kv=32,
+                                          segments=segs, positions=pos)
+    flash = attention.attention_flash(params, x, cfg, window=window,
+                                      block_q=16, block_kv=16,
+                                      segments=segs, positions=pos)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_packed_chunked_skip_bitwise_and_under_jit():
+    """The lax.cond pair skip may drop work, never bits — including with
+    *traced* segments (the train-step jit boundary)."""
+    cfg, params, x, segs, pos = _attn_setup()
+    kw = dict(window=None, block_q=16, block_kv=32, segments=segs,
+              positions=pos)
+    on = attention.attention_chunked(params, x, cfg, skip=True, **kw)
+    off = attention.attention_chunked(params, x, cfg, skip=False, **kw)
+    assert tree_bitwise(on, off)
+
+    jitted = jax.jit(lambda p, xx, sg, ps: attention.attention_chunked(
+        p, xx, cfg, block_q=16, block_kv=32, segments=sg, positions=ps))
+    np.testing.assert_allclose(np.asarray(jitted(params, x, segs, pos)),
+                               np.asarray(on), atol=2e-6, rtol=1e-5)
+
+
+def test_segments_none_chunked_degeneracy():
+    cfg, params, x, _, _ = _attn_setup()
+    s = x.shape[1]
+    ones = jnp.ones((2, s), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (2, s))
+    base = attention.attention_chunked(params, x, cfg, block_q=16,
+                                       block_kv=32)
+    packed = attention.attention_chunked(params, x, cfg, block_q=16,
+                                         block_kv=32, segments=ones,
+                                         positions=pos)
+    assert tree_bitwise(base, packed)
+
+
+# --------------------------------------------------------------------------
+# engine acceptance + packed ZO stream
+# --------------------------------------------------------------------------
+
+def _zo_packed_setup():
+    from repro.models.registry import get_bundle
+    bundle = get_bundle("tiny-100m", smoke=True)
+    corpus = make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=48, min_len=50, max_len=64))
+    corpus += make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=6, min_len=180, max_len=200, seed=9))
+    corpus += make_corpus(SyntheticTaskConfig(
+        name="sst2", task="copy", vocab=bundle.mcfg.vocab,
+        n_examples=16, min_len=8, max_len=20, seed=5))
+    cfg = PipelineConfig(k0=2, k1=3, l_t=32, pack_zo=True, seed=1)
+    return bundle, corpus, cfg
+
+
+def test_pack_zo_stream_invariants_and_replay():
+    """The packed ZO batch carries the packer's layout (contiguous
+    1-based segments, restarting positions, boundary-masked targets) and
+    replays bit-for-bit from ``(seed, step)``."""
+    _, corpus, cfg = _zo_packed_setup()
+    pipe = AddaxPipeline(corpus, cfg)
+    b0, _ = pipe.step_batches(2)
+    assert {"segments", "positions"} <= set(b0)
+    assert b0["tokens"].shape[1] == pipe.s_full
+    assert max(int(r.max()) for r in b0["segments"]) > 1   # actually packed
+    for r in range(b0["tokens"].shape[0]):
+        seg = b0["segments"][r]
+        off = 0
+        for sid in range(1, int(seg.max()) + 1):
+            sel = np.where(seg == sid)[0]
+            assert sel.size and sel[0] == off
+            np.testing.assert_array_equal(
+                b0["positions"][r, sel], np.arange(sel.size))
+            assert b0["targets"][r, sel[-1]] == 0
+            assert b0["mask"][r, sel[-1]] == 0.0
+            off += sel.size
+        assert np.all(seg[off:] == 0)
+    b0_again, _ = pipe.step_batches(2)
+    assert tree_bitwise(b0, b0_again)
+
+
+def test_pack_zo_off_stream_bitwise_unchanged():
+    """``pack_zo=False`` consumes the step rng in exactly the historical
+    order: 10 steps of the stream pinned bitwise against an inline
+    reimplementation of the unpacked draw."""
+    _, corpus, cfg = _zo_packed_setup()
+    cfg = PipelineConfig(**{**cfg.__dict__, "pack_zo": False})
+    pipe = AddaxPipeline(corpus, cfg)
+    for step in range(10):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step]))
+        i0 = rng.choice(pipe.assignment.d0, size=cfg.k0, replace=True)
+        pool, width = pipe._draw_fo(rng)
+        b0 = _lm_batch(corpus, i0, pipe.s_full)
+        i1 = rng.choice(pool, size=cfg.k1, replace=True)
+        b1 = _lm_batch(corpus, i1, width)
+        g0, g1 = pipe.step_batches(step)
+        assert tree_bitwise((b0, b1), (g0, g1)), f"step {step} diverged"
+
+
+@pytest.mark.slow
+def test_packed_zo_loss_accepted_and_impl_parity():
+    """The decoder engine accepts a packed ZO batch under dense, chunked
+    and flash — all three land on the same loss (attention isolation is
+    impl-independent)."""
+    bundle, corpus, cfg = _zo_packed_setup()
+    pipe = AddaxPipeline(corpus, cfg)
+    b0, _ = pipe.step_batches(0)
+    params = bundle.init_params(jax.random.key(0))
+    jb = {k: jnp.asarray(v) for k, v in b0.items()}
+    dense = float(bundle.loss(params, jb, impl="dense"))
+    chunked = float(bundle.loss(params, jb, impl="chunked"))
+    flash = float(bundle.loss(params, jb, impl="flash"))
+    np.testing.assert_allclose(chunked, dense, rtol=2e-5)
+    np.testing.assert_allclose(flash, dense, rtol=2e-5)
+
+
+def test_attn_skip_knob_reaches_model_config():
+    """Plan.attn_skip=False flows into the model config the step builders
+    lower (the fig_packed_attn dense-masked ablation path)."""
+    import dataclasses
+
+    from repro.launch.steps import CellOptions
+    from repro.models.registry import get_bundle
+    bundle = get_bundle("tiny-100m", smoke=True)
+    assert bundle.mcfg.attn_skip is True
+    plan = CellOptions(attn_skip=False).resolve(bundle.arch)
+    assert plan.attn_skip is False
+    off = dataclasses.replace(bundle.mcfg, attn_skip=False)
+    assert off.attn_skip is False

@@ -344,7 +344,9 @@ def test_packed_batch_invariants():
 
 def test_packing_rejected_where_it_would_leak():
     """Families/impls whose state crosses row positions reject packed
-    batches loudly (the loss mask alone cannot isolate examples)."""
+    batches loudly (the loss mask alone cannot isolate examples).  The
+    decoder chunked/flash paths are segment-aware now and must *accept*
+    them (parity pinned in tests/test_packed_attention.py)."""
     from repro.models.registry import get_bundle
     fake = {"tokens": jnp.zeros((1, 8), jnp.int32),
             "targets": jnp.zeros((1, 8), jnp.int32),
@@ -355,5 +357,6 @@ def test_packing_rejected_where_it_would_leak():
     with pytest.raises(ValueError, match="packed"):
         hybrid.loss(hybrid.init_params(jax.random.key(0)), fake)
     dec = get_bundle("tiny-100m", smoke=True)
-    with pytest.raises(ValueError, match="dense"):
-        dec.loss(dec.init_params(jax.random.key(0)), fake, impl="chunked")
+    loss = dec.loss(dec.init_params(jax.random.key(0)), fake,
+                    impl="chunked")
+    assert np.isfinite(float(loss))
